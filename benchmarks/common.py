@@ -1,0 +1,34 @@
+"""Shared benchmark helpers: timing + CSV emission.
+
+Every benchmark exposes ``run(fast: bool) -> list[Row]``; run.py aggregates.
+CSV schema (required by the harness): name,us_per_call,derived
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: Dict[str, Any]
+
+    def csv(self) -> str:
+        d = json.dumps(self.derived, sort_keys=True).replace(",", ";")
+        return f"{self.name},{self.us_per_call:.3f},{d}"
+
+
+def timeit(fn: Callable[[], Any], *, repeats: int = 3, number: int = 1) -> float:
+    """Best-of-repeats wall time per call, in microseconds."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / number)
+    return best * 1e6

@@ -1,0 +1,51 @@
+"""Figure 3: query-similarity vs keyword-based cache search — FPR/FNR.
+
+Ground truth: two tasks share a reusable plan iff they share an intent.
+Query-based search: cosine similarity of full query embeddings > threshold.
+Keyword-based: extracted-keyword exact match.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import fuzzy
+from repro.core.backends import SimulatedBackend
+from repro.envs.workloads import get_env
+
+
+def run(fast: bool = False) -> List[Row]:
+    n = 80 if fast else 200
+    env = get_env("financebench")
+    tasks = env.generate(n, seed=0)
+    be = SimulatedBackend(seed=0)
+    embs = np.stack([fuzzy.embed(t.query) for t in tasks])
+    kws = [be.extract_keyword(t)[0] for t in tasks]
+    intents = [t.intent.id for t in tasks]
+
+    rows: List[Row] = []
+    # pairwise: for each ordered pair (i cached, j query), predict hit
+    sims = embs @ embs.T
+    same = np.asarray(
+        [[intents[i] == intents[j] for i in range(n)] for j in range(n)]
+    )
+    mask = ~np.eye(n, dtype=bool)
+    for thr in (0.7, 0.8, 0.85, 0.9, 0.95):
+        pred = sims > thr
+        fp = (pred & ~same & mask).sum() / max(1, (~same & mask).sum())
+        fn = (~pred & same & mask).sum() / max(1, (same & mask).sum())
+        rows.append(
+            Row(f"f3/query_sim_thr_{thr}", 0.0,
+                {"fpr": round(float(fp), 4), "fnr": round(float(fn), 4)})
+        )
+    kw_pred = np.asarray([[kws[i] == kws[j] for i in range(n)] for j in range(n)])
+    fp = (kw_pred & ~same & mask).sum() / max(1, (~same & mask).sum())
+    fn = (~kw_pred & same & mask).sum() / max(1, (same & mask).sum())
+    rows.append(
+        Row("f3/keyword_exact", 0.0,
+            {"fpr": round(float(fp), 4), "fnr": round(float(fn), 4)})
+    )
+    return rows

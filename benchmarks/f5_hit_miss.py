@@ -1,0 +1,31 @@
+"""Figure 5: cache-hit vs cache-miss accuracy per caching method."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.harness import run_workload
+
+
+def run(fast: bool = False) -> List[Row]:
+    n = 80 if fast else 200
+    rows = []
+    envs = ["financebench"] if fast else ["financebench", "tabmwp"]
+    for env in envs:
+        for method in ("semantic", "full_history", "apc"):
+            r = run_workload(env, method, n)
+            rows.append(
+                Row(
+                    f"f5/{env}/{method}",
+                    0.0,
+                    {
+                        "hit_accuracy": None if r.hit_accuracy is None
+                        else round(r.hit_accuracy, 4),
+                        "miss_accuracy": None if r.miss_accuracy is None
+                        else round(r.miss_accuracy, 4),
+                        "hit_rate": round(r.hit_rate, 3),
+                    },
+                )
+            )
+    return rows

@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks (interpret mode on CPU: relative scaling only;
+absolute TPU numbers come from the roofline analysis)."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timeit
+from repro.kernels import ops
+
+
+def run(fast: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    k = jax.random.PRNGKey(0)
+    B, Hq, Hkv, S, hd = (1, 4, 2, 256, 64) if fast else (2, 8, 2, 512, 64)
+    q = jax.random.normal(k, (B, S, Hq, hd), jnp.float32)
+    kk = jax.random.normal(k, (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(k, (B, S, Hkv, hd), jnp.float32)
+    f = lambda: ops.flash_attention_op(q, kk, v, block_q=128, block_k=128
+                                       ).block_until_ready()
+    f()
+    rows.append(Row("kernel/flash_attention", timeit(f), {"S": S, "Hq": Hq}))
+
+    M = 512 if fast else 2048
+    q1 = jax.random.normal(k, (B, 1, Hq, hd), jnp.float32)
+    ck = jax.random.normal(k, (B, M, Hkv, hd), jnp.float32)
+    cv = jax.random.normal(k, (B, M, Hkv, hd), jnp.float32)
+    ln = jnp.asarray(M - 3, jnp.int32)
+    g = lambda: ops.decode_attention_op(q1, ck, cv, ln).block_until_ready()
+    g()
+    rows.append(Row("kernel/decode_attention", timeit(g), {"M": M}))
+
+    H, N, S2 = 2, 64, 128 if fast else 256
+    r = jax.random.normal(k, (B, S2, H, N)) * 0.3
+    w = -jnp.exp(jax.random.normal(k, (B, S2, H, N)) * 0.3 - 2)
+    u = jax.random.normal(k, (H, N)) * 0.3
+    h = lambda: ops.wkv6_op(r, r, r, w, u, chunk=64)[0].block_until_ready()
+    h()
+    rows.append(Row("kernel/wkv6", timeit(h), {"S": S2, "N": N}))
+
+    P, Ns = 64, 64
+    x = jax.random.normal(k, (B, S2, H, P)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(k, (B, S2, H)))
+    Bc = jax.random.normal(k, (B, S2, Ns)) * 0.3
+    s = lambda: ops.ssd_op(x, dt, jnp.zeros((H,)), Bc, Bc, jnp.ones((H,)),
+                           chunk=64)[0].block_until_ready()
+    s()
+    rows.append(Row("kernel/ssd", timeit(s), {"S": S2, "P": P}))
+    return rows

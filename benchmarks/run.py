@@ -1,0 +1,70 @@
+"""Benchmark runner: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only t1,t5]
+
+Prints ``name,us_per_call,derived`` CSV (one row per measured cell).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    f3_matching,
+    f5_hit_miss,
+    kernel_bench,
+    t1_main,
+    t2_cost_breakdown,
+    t3_latency,
+    t4_cache_size,
+    t5_lookup_scalability,
+    t6_fuzzy_threshold,
+    t7_cold_start,
+    t9_sensitivity,
+)
+
+MODULES = {
+    "t1": t1_main,
+    "t2": t2_cost_breakdown,
+    "t3": t3_latency,
+    "t4": t4_cache_size,
+    "t5": t5_lookup_scalability,
+    "t6": t6_fuzzy_threshold,
+    "t7": t7_cold_start,
+    "f3": f3_matching,
+    "f5": f5_hit_miss,
+    "t9": t9_sensitivity,
+    "kernels": kernel_bench,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(MODULES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, mod in MODULES.items():
+        if key not in only:
+            continue
+        t0 = time.time()
+        try:
+            for row in mod.run(fast=args.fast):
+                print(row.csv())
+        except Exception:
+            failures += 1
+            print(f"{key},0,{{\"error\": true}}")
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

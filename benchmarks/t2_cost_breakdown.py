@@ -1,0 +1,46 @@
+"""Table 2: per-component cost breakdown, main results + worst case
+(zero hit rate — forced by a capacity-0 cache so every task misses and
+regenerates its cache entry)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.agent_loop import AgentConfig
+from repro.core.cache import PlanCache
+from repro.core.harness import run_workload
+
+
+def _breakdown_row(env: str, label: str, res) -> Row:
+    total = res.cost
+    comp = {}
+    for role, d in res.breakdown.items():
+        comp[role] = {"usd": d["cost"], "pct": round(100 * d["cost"] / total, 2)}
+    overhead = sum(
+        res.breakdown.get(r, {}).get("cost", 0.0)
+        for r in ("keyword_extractor", "cache_generator")
+    )
+    return Row(
+        f"t2/{env}/{label}",
+        0.0,
+        {
+            "total_usd": round(total, 4),
+            "overhead_pct": round(100 * overhead / total, 2),
+            **{k: v["pct"] for k, v in comp.items()},
+        },
+    )
+
+
+def run(fast: bool = False) -> List[Row]:
+    n = 60 if fast else 200
+    rows = []
+    for env in (["financebench"] if fast else ["financebench", "tabmwp"]):
+        main = run_workload(env, "apc", n)
+        rows.append(_breakdown_row(env, "main", main))
+        worst = run_workload(
+            env, "apc", n, cache=PlanCache(capacity=0)
+        )  # zero hit rate
+        assert worst.hit_rate == 0.0
+        rows.append(_breakdown_row(env, "worst_case", worst))
+    return rows

@@ -1,0 +1,48 @@
+"""Table 3: wall-clock latency breakdown by pipeline component
+(+ the beyond-paper async-cachegen variant the paper lists as future work)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.agent_loop import AgentConfig
+from repro.core.harness import run_workload
+
+
+def _components(res) -> dict:
+    plan = sum(
+        res.breakdown.get(r, {}).get("latency_s", 0.0)
+        for r in ("large_planner", "small_planner")
+    )
+    act = res.breakdown.get("actor", {}).get("latency_s", 0.0)
+    kw = res.breakdown.get("keyword_extractor", {}).get("latency_s", 0.0)
+    gen = res.breakdown.get("cache_generator", {}).get("latency_s", 0.0)
+    lookup = sum(r.cache_lookup_s for r in res.records)
+    return {
+        "plan_s": round(plan, 1),
+        "act_s": round(act, 1),
+        "keyword_s": round(kw, 1),
+        "lookup_s": round(lookup, 4),
+        "cachegen_s": round(gen, 1),
+        "total_s": round(res.latency_s, 1),
+    }
+
+
+def run(fast: bool = False) -> List[Row]:
+    n = 50 if fast else 100
+    env = "financebench"
+    rows = []
+    for method in ("accuracy_optimal", "cost_optimal", "apc"):
+        r = run_workload(env, method, n, keep_records=True)
+        rows.append(Row(f"t3/{env}/{method}", 0.0, _components(r)))
+    # beyond-paper: async cache generation off the critical path
+    r = run_workload(
+        env, "apc", n, keep_records=True,
+        agent_cfg=AgentConfig(async_cachegen=True),
+    )
+    d = _components(r)
+    d["note"] = "async cachegen (paper future work): gen off critical path"
+    d["total_s"] = round(r.latency_s, 1)
+    rows.append(Row(f"t3/{env}/apc_async_cachegen", 0.0, d))
+    return rows

@@ -1,0 +1,33 @@
+"""Table 4: effect of cache size (LRU eviction)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.agent_loop import AgentConfig
+from repro.core.harness import run_workload
+
+
+def run(fast: bool = False) -> List[Row]:
+    n = 80 if fast else 200
+    sizes = [1, 10, 100] if fast else [1, 10, 20, 50, 100]
+    rows = []
+    for cap in sizes:
+        r = run_workload(
+            "financebench", "apc", n, agent_cfg=AgentConfig(cache_capacity=cap)
+        )
+        rows.append(
+            Row(
+                f"t4/financebench/cache_size_{cap}",
+                0.0,
+                {
+                    "hit_rate": round(r.hit_rate, 3),
+                    "cost_usd": round(r.cost, 4),
+                    "accuracy": round(r.accuracy, 4),
+                    "latency_s": round(r.latency_s, 1),
+                    "cache_entries": r.cache_entries,
+                },
+            )
+        )
+    return rows

@@ -1,0 +1,56 @@
+"""Table 5: exact vs fuzzy cache-lookup latency vs cache size (µs).
+
+Exact matching uses the dict-backed PlanCache (O(1)); fuzzy uses the
+brute-force cosine scan (O(N*dim)) — reproducing the paper's scaling gap.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core.cache import PlanCache
+from repro.core import fuzzy
+
+
+def _fill_exact(n: int) -> PlanCache:
+    c = PlanCache(capacity=n + 1)
+    for i in range(n):
+        c.insert(f"intent keyword number {i}", i)
+    return c
+
+
+def run(fast: bool = False) -> List[Row]:
+    sizes = [100, 1_000, 10_000] if fast else [100, 1_000, 10_000, 100_000, 1_000_000]
+    rows: List[Row] = []
+    for n in sizes:
+        c = _fill_exact(n)
+        hit_us = timeit(lambda: c.lookup(f"intent keyword number {n // 2}"),
+                        repeats=5, number=100)
+        miss_us = timeit(lambda: c.lookup("never inserted keyword"),
+                         repeats=5, number=100)
+        rows.append(Row(f"t5/exact/{n}", hit_us,
+                        {"hit_us": round(hit_us, 1), "miss_us": round(miss_us, 1)}))
+    # fuzzy: pre-built embedding matrix, cosine scan per lookup
+    f_sizes = [s for s in sizes if s <= (10_000 if fast else 1_000_000)]
+    for n in f_sizes:
+        M = np.random.RandomState(0).randn(n, fuzzy.DIM).astype(np.float32)
+        M /= np.linalg.norm(M, axis=1, keepdims=True)
+        q_hit = M[n // 2] + 0.01
+        q_miss = -M[0]
+
+        def lookup(q):
+            sims = M @ q
+            i = int(np.argmax(sims))
+            return i if sims[i] > 0.8 else None
+
+        hit_us = timeit(lambda: lookup(q_hit), repeats=3,
+                        number=max(1, 1000 // max(1, n // 1000)))
+        miss_us = timeit(lambda: lookup(q_miss), repeats=3,
+                         number=max(1, 1000 // max(1, n // 1000)))
+        rows.append(Row(f"t5/fuzzy/{n}", hit_us,
+                        {"hit_us": round(hit_us, 1), "miss_us": round(miss_us, 1)}))
+    return rows

@@ -1,0 +1,34 @@
+"""Table 6: fuzzy keyword matching — threshold sweep (hit rate vs accuracy)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.agent_loop import AgentConfig
+from repro.core.harness import run_workload
+
+
+def run(fast: bool = False) -> List[Row]:
+    n = 80 if fast else 200
+    rows = []
+    settings = [("exact_1.00", False, 1.0), ("fuzzy_0.80", True, 0.8),
+                ("fuzzy_0.60", True, 0.6)]
+    for label, fz, thr in settings:
+        r = run_workload(
+            "financebench", "apc", n,
+            agent_cfg=AgentConfig(fuzzy=fz, fuzzy_threshold=thr),
+        )
+        rows.append(
+            Row(
+                f"t6/financebench/{label}",
+                0.0,
+                {
+                    "hit_rate": round(r.hit_rate, 3),
+                    "cost_usd": round(r.cost, 4),
+                    "accuracy": round(r.accuracy, 4),
+                    "latency_s": round(r.latency_s, 1),
+                },
+            )
+        )
+    return rows

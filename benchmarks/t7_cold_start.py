@@ -1,0 +1,34 @@
+"""Table 7: cold-start warm-up time series (per-quintile hit rate/cost)."""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.harness import run_workload
+
+
+def run(fast: bool = False) -> List[Row]:
+    n = 100 if fast else 200
+    r = run_workload("financebench", "apc", n, keep_records=True)
+    rows = []
+    recs = r.records
+    for q in (20, 40, 60, 80, 100):
+        upto = recs[: max(1, n * q // 100)]
+        hit = sum(x.hit for x in upto) / len(upto)
+        cost = sum(x.cost for x in upto)
+        lat = sum(x.latency_s for x in upto)
+        entries = len({x.keyword for x in upto if x.keyword})
+        rows.append(
+            Row(
+                f"t7/financebench/p{q}",
+                0.0,
+                {
+                    "hit_rate": round(hit, 4),
+                    "cost_usd": round(cost, 4),
+                    "latency_s": round(lat, 1),
+                    "distinct_keywords": entries,
+                },
+            )
+        )
+    return rows

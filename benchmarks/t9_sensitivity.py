@@ -1,0 +1,63 @@
+"""Tables 9-11: model-choice sensitivity (planner/actor quality + pricing).
+
+Each named configuration shifts the QualityProfile + pricing map the way the
+paper's model swaps do (e.g. Claude-3.5 as large planner: higher p_plan,
+higher $; Llama-3.2-3B actor: lower p_actor, cheaper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from benchmarks.common import Row
+from repro.configs.apc_minion import APCDeployment
+from repro.core.backends import DEFAULT_QUALITY
+from repro.core.harness import run_workload
+
+VARIANTS = {
+    # label -> (quality overrides, pricing overrides)
+    "large=gpt-4o": ({}, {}),
+    "large=claude-3.5": (
+        {"p_plan_large": 0.985},
+        {"large_planner": "claude-3.5-sonnet"},
+    ),
+    "small=qwen-2.5-7b": (
+        {"p_adapt": 0.96},
+        {"small_planner": "qwen-2.5-7b"},
+    ),
+    "small=llama-3.2-3b": (
+        {"p_adapt": 0.915},
+        {"small_planner": "llama-3.2-3b"},
+    ),
+    "actor=llama-3.2-3b": (
+        {"p_actor": 0.94},
+        {"actor": "llama-3.2-3b"},
+    ),
+    "actor=qwen-2.5-7b": (
+        {"p_actor": 0.99},
+        {"actor": "qwen-2.5-7b"},
+    ),
+}
+
+
+def run(fast: bool = False) -> List[Row]:
+    n = 60 if fast else 200
+    rows = []
+    for label, (q_over, p_over) in VARIANTS.items():
+        quality = dataclasses.replace(DEFAULT_QUALITY, **q_over)
+        pricing = dict(APCDeployment().pricing)
+        pricing.update(p_over)
+        dep = dataclasses.replace(APCDeployment(), pricing=pricing)
+        for method in ("accuracy_optimal", "apc"):
+            r = run_workload("financebench", method, n,
+                             deployment=dep, quality=quality)
+            rows.append(
+                Row(
+                    f"t9/{label}/{method}",
+                    0.0,
+                    {"accuracy": round(r.accuracy, 4),
+                     "cost_usd": round(r.cost, 4)},
+                )
+            )
+    return rows

@@ -1,0 +1,68 @@
+"""Train a reduced model for a few hundred steps with fault tolerance.
+
+    PYTHONPATH=src python examples/train_small.py [--arch qwen2.5-3b] [--steps 200]
+
+Exercises the full training substrate: AdamW, remat, atomic checkpoints, and
+the fault-tolerant runner (a NaN is injected mid-run to demonstrate
+rollback + resume).
+"""
+
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs import registry
+from repro.distributed.fault import FaultPolicy, FaultTolerantRunner
+from repro.launch.train import synthetic_batches
+from repro.models import lm
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    cfg = registry.get_smoke(args.arch)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = adamw_init(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    losses = []
+
+    def wrapped(state, batch):
+        p, o = state
+        p, o, m = step(p, o, batch)
+        loss = float(np.asarray(m["loss"]))
+        losses.append(loss)
+        if len(losses) % 25 == 1:
+            print(f"  step {len(losses):4d}  loss {loss:.4f}")
+        return (p, o), {"loss": loss}
+
+    ckpt = tempfile.mkdtemp(prefix="repro_train_")
+    runner = FaultTolerantRunner(
+        wrapped, CheckpointStore(ckpt, keep_last=2),
+        FaultPolicy(checkpoint_every=50),
+    )
+    runner.inject(args.steps // 2, "nan")  # demo: mid-run failure
+    state, done, events = runner.run(
+        (params, opt), synthetic_batches(cfg, 8, 48), args.steps
+    )
+    print(f"completed {done} steps; injected faults handled: "
+          f"{[(e.step, e.kind) for e in events]}")
+    print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({'OK: decreased' if losses[-1] < losses[0] else 'WARNING'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Config package: base dataclasses + per-arch configs + registry."""

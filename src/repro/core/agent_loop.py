@@ -1,0 +1,288 @@
+"""The Plan-Act agent loop: Algorithms 1-3 from the paper, plus the four
+evaluation baselines (accuracy-optimal, cost-optimal, semantic caching,
+full-history caching).
+
+Method map (paper §4.1):
+  apc               Alg.1: keyword -> cache -> Alg.2 (hit, small planner
+                    adapts template) / Alg.3 (miss, large planner plans from
+                    scratch; successful log distilled into the cache)
+  accuracy_optimal  always the large planner, no cache
+  cost_optimal      always the small planner, no cache
+  semantic          GPTCache-style query-similarity cache of final responses
+  full_history      keyword cache of raw execution logs used as in-context
+                    examples for the small planner
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.backends import PlanMsg, SimulatedBackend
+from repro.core.cache import PlanCache
+from repro.core.cost_model import CostLedger, estimate_tokens
+from repro.core import fuzzy
+from repro.core.template import (
+    ExecutionLog,
+    PlanTemplate,
+    make_template,
+    rule_filter,
+)
+from repro.envs.base import Task, judge
+
+
+@dataclass
+class RunRecord:
+    task_id: str
+    method: str
+    correct: bool
+    hit: bool
+    keyword: str
+    iterations: int
+    answer: Optional[float]
+    cost: float
+    latency_s: float
+    cache_lookup_s: float = 0.0
+    cache_gen_s: float = 0.0
+
+
+@dataclass
+class AgentConfig:
+    method: str = "apc"
+    max_iterations: int = 10
+    cache_capacity: int = 100
+    fuzzy: bool = False
+    fuzzy_threshold: float = 0.8
+    semantic_threshold: float = 0.85
+    async_cachegen: bool = False  # beyond-paper: don't block on cache writes
+    seed: int = 0
+
+
+class PlanActAgent:
+    """One agent serving deployment: backends + cache + ledger."""
+
+    def __init__(
+        self,
+        backend: SimulatedBackend,
+        ledger: CostLedger,
+        config: AgentConfig,
+        cache: Optional[PlanCache] = None,
+    ):
+        self.be = backend
+        self.ledger = ledger
+        self.cfg = config
+        # NB: `cache or ...` would be wrong — an empty PlanCache is falsy
+        self.cache: PlanCache = (
+            cache
+            if cache is not None
+            else PlanCache(
+                capacity=config.cache_capacity,
+                fuzzy=config.fuzzy,
+                fuzzy_threshold=config.fuzzy_threshold,
+            )
+        )
+        # semantic baseline: (embedding, answer) store
+        self._sem_keys: List[np.ndarray] = []
+        self._sem_vals: List[Tuple[str, Optional[float]]] = []
+        self._pending_cachegen: List[Tuple[str, PlanTemplate, float]] = []
+
+    # ==================================================================
+    # Cache pre-warming (paper §4.5: "pre-populating the cache with
+    # offline samples before deployment" mitigates cold start)
+    # ==================================================================
+
+    def prewarm(self, tasks: List[Task]) -> int:
+        """Run offline samples through the miss path to populate templates.
+        Costs accrue to the ledger (offline budget); returns #inserted."""
+        inserted = 0
+        for task in tasks:
+            kw, ki, ko = self.be.extract_keyword(task)
+            self.ledger.record("keyword_extractor", ki, ko)
+            if kw in self.cache:
+                continue
+            answer, _, log, _ = self._loop_scratch(task, large=True)
+            if answer is not None and log.final_answer is not None:
+                gi, go = self.be.cachegen_tokens(log.raw_tokens())
+                self.ledger.record("cache_generator", gi, go)
+                miss = self.be.generalization_misses(task)
+                self.cache.insert(kw, make_template(log, kw, task.slots,
+                                                    miss_slots=miss))
+                inserted += 1
+        return inserted
+
+    # ==================================================================
+    # Algorithm 1: end-to-end
+    # ==================================================================
+
+    def run_task(self, task: Task) -> RunRecord:
+        m = self.cfg.method
+        if m == "apc":
+            return self._run_apc(task)
+        if m == "accuracy_optimal":
+            return self._run_scratch(task, large=True)
+        if m == "cost_optimal":
+            return self._run_scratch(task, large=False)
+        if m == "semantic":
+            return self._run_semantic(task)
+        if m == "full_history":
+            return self._run_full_history(task)
+        raise ValueError(m)
+
+    # ==================================================================
+    # APC (Algorithms 1-3)
+    # ==================================================================
+
+    def _run_apc(self, task: Task) -> RunRecord:
+        lat = 0.0
+        kw, ki, ko = self.be.extract_keyword(task)
+        lat += self.ledger.record("keyword_extractor", ki, ko)
+
+        t0 = time.perf_counter()
+        template = self.cache.lookup(kw)
+        lookup_s = time.perf_counter() - t0
+        lat += lookup_s
+
+        if template is not None:  # ---- Algorithm 2: cache hit
+            template.uses += 1
+            answer, iters, l2 = self._loop_adapt(task, template, full_history=False)
+            lat += l2
+            correct = judge(answer, task.gt_answer)
+            return RunRecord(
+                task.id, "apc", correct, True, kw, iters, answer,
+                self.ledger.total_cost(), lat, lookup_s,
+            )
+
+        # ---- Algorithm 3: cache miss
+        answer, iters, log, l3 = self._loop_scratch(task, large=True)
+        lat += l3
+        correct = judge(answer, task.gt_answer)
+        gen_s = 0.0
+        if answer is not None and log.final_answer is not None:
+            gi, go = self.be.cachegen_tokens(log.raw_tokens())
+            gen_s = self.ledger.record("cache_generator", gi, go)
+            miss_slots = self.be.generalization_misses(task)
+            tpl = make_template(log, kw, task.slots, miss_slots=miss_slots)
+            self.cache.insert(kw, tpl)
+            if not self.cfg.async_cachegen:
+                lat += gen_s  # synchronous generation blocks the response
+        return RunRecord(
+            task.id, "apc", correct, False, kw, iters, answer,
+            self.ledger.total_cost(), lat, lookup_s, gen_s,
+        )
+
+    # ==================================================================
+    # inner loops
+    # ==================================================================
+
+    def _loop_scratch(
+        self, task: Task, *, large: bool
+    ) -> Tuple[Optional[float], int, ExecutionLog, float]:
+        role = "large_planner" if large else "small_planner"
+        log = ExecutionLog(task_query=task.query)
+        responses: List[Dict[str, Any]] = []
+        lat = 0.0
+        answer = None
+        for it in range(self.cfg.max_iterations):
+            msg, pi, po = self.be.plan(task, responses, large=large, round_idx=it)
+            lat += self.ledger.record(role, pi, po)
+            if msg.kind == "answer":
+                log.final_answer = {"answer_text": msg.text, "op": msg.op}
+                answer = msg.op.get("value")
+                return answer, it + 1, log, lat
+            resp, ai, ao = self.be.act(task, msg)
+            lat += self.ledger.record("actor", ai, ao)
+            responses.append(resp)
+            log.append({"message": msg.text, "op": msg.op}, resp)
+        return None, self.cfg.max_iterations, log, lat
+
+    def _loop_adapt(
+        self, task: Task, template: PlanTemplate, *, full_history: bool
+    ) -> Tuple[Optional[float], int, float]:
+        responses: List[Dict[str, Any]] = []
+        lat = 0.0
+        n_rounds = max(1, template.n_rounds())
+        for it in range(self.cfg.max_iterations):
+            msg, pi, po = self.be.adapt(
+                task, template, responses, round_idx=it, full_history=full_history
+            )
+            lat += self.ledger.record("small_planner", pi, po)
+            if msg.kind == "answer":
+                return msg.op.get("value"), it + 1, lat
+            resp, ai, ao = self.be.act(task, msg)
+            lat += self.ledger.record("actor", ai, ao)
+            responses.append(resp)
+            if it + 1 >= n_rounds and it + 1 < self.cfg.max_iterations:
+                continue  # next adapt() call emits the answer
+        return None, self.cfg.max_iterations, lat
+
+    # ==================================================================
+    # baselines
+    # ==================================================================
+
+    def _run_scratch(self, task: Task, *, large: bool) -> RunRecord:
+        answer, iters, _, lat = self._loop_scratch(task, large=large)
+        return RunRecord(
+            task.id,
+            "accuracy_optimal" if large else "cost_optimal",
+            judge(answer, task.gt_answer),
+            False, "", iters, answer, self.ledger.total_cost(), lat,
+        )
+
+    def _run_semantic(self, task: Task) -> RunRecord:
+        t0 = time.perf_counter()
+        q_emb = fuzzy.embed(task.query)
+        hit_val = None
+        if self._sem_keys:
+            sims = np.stack(self._sem_keys) @ q_emb
+            i = int(np.argmax(sims))
+            if sims[i] >= self.cfg.semantic_threshold:
+                hit_val = self._sem_vals[i]
+        lookup_s = time.perf_counter() - t0
+        if hit_val is not None:
+            # cached final response returned verbatim (GPTCache semantics) —
+            # correct only if the numeric answer transfers to THIS task.
+            answer = hit_val[1]
+            return RunRecord(
+                task.id, "semantic", judge(answer, task.gt_answer), True,
+                "", 0, answer, self.ledger.total_cost(), lookup_s, lookup_s,
+            )
+        answer, iters, _, lat = self._loop_scratch(task, large=True)
+        self._sem_keys.append(q_emb)
+        self._sem_vals.append((task.query, answer))
+        return RunRecord(
+            task.id, "semantic", judge(answer, task.gt_answer), False,
+            "", iters, answer, self.ledger.total_cost(), lat + lookup_s, lookup_s,
+        )
+
+    def _run_full_history(self, task: Task) -> RunRecord:
+        lat = 0.0
+        kw, ki, ko = self.be.extract_keyword(task)
+        lat += self.ledger.record("keyword_extractor", ki, ko)
+        t0 = time.perf_counter()
+        log: Optional[ExecutionLog] = self.cache.lookup(kw)
+        lookup_s = time.perf_counter() - t0
+        lat += lookup_s
+        if log is not None:
+            # raw log as in-context example: build an UNfiltered pseudo-template
+            steps = rule_filter(log)
+            tpl = PlanTemplate(keyword=kw, steps=steps, source_task=log.task_query)
+            # charge the long history into the small planner's context
+            hist_tokens = log.raw_tokens()
+            self.ledger.record("small_planner", hist_tokens, 0)
+            answer, iters, l2 = self._loop_adapt(task, tpl, full_history=True)
+            lat += l2
+            return RunRecord(
+                task.id, "full_history", judge(answer, task.gt_answer), True,
+                kw, iters, answer, self.ledger.total_cost(), lat, lookup_s,
+            )
+        answer, iters, log, l3 = self._loop_scratch(task, large=True)
+        lat += l3
+        if answer is not None:
+            self.cache.insert(kw, log)
+        return RunRecord(
+            task.id, "full_history", judge(answer, task.gt_answer), False,
+            kw, iters, answer, self.ledger.total_cost(), lat, lookup_s,
+        )

@@ -1,0 +1,175 @@
+"""Distributed plan cache: consistent-hash sharding + replication.
+
+At 1000+ nodes the plan cache outgrows a single frontend: this shards
+keywords across cache nodes with a consistent-hash ring (virtual nodes), so
+elastic add/remove of cache servers moves only ~K/N keys. Each key is
+replicated onto R successive ring nodes; reads fall through replicas on
+node failure (fault tolerance), writes go to all live replicas.
+
+In-process shards stand in for network nodes (the container has one host);
+the interface (lookup/insert/add_node/remove_node/mark_down) is what a
+networked implementation would expose.
+"""
+
+from __future__ import annotations
+
+import bisect
+import hashlib
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.cache import CacheStats, PlanCache
+
+
+def _hash(s: str) -> int:
+    return int.from_bytes(hashlib.blake2b(s.encode(), digest_size=8).digest(), "big")
+
+
+class HashRing:
+    def __init__(self, vnodes: int = 64):
+        self.vnodes = vnodes
+        self._ring: List[Tuple[int, str]] = []
+        self._nodes: set = set()
+
+    def add(self, node: str) -> None:
+        if node in self._nodes:
+            return
+        self._nodes.add(node)
+        for v in range(self.vnodes):
+            self._ring.append((_hash(f"{node}#{v}"), node))
+        self._ring.sort()
+
+    def remove(self, node: str) -> None:
+        self._nodes.discard(node)
+        self._ring = [(h, n) for h, n in self._ring if n != node]
+
+    def nodes_for(self, key: str, r: int = 1) -> List[str]:
+        """r distinct nodes clockwise from the key's hash."""
+        if not self._ring:
+            return []
+        h = _hash(key)
+        i = bisect.bisect_right(self._ring, (h, "￿")) % len(self._ring)
+        out: List[str] = []
+        j = i
+        while len(out) < min(r, len(self._nodes)):
+            node = self._ring[j % len(self._ring)][1]
+            if node not in out:
+                out.append(node)
+            j += 1
+        return out
+
+    @property
+    def nodes(self) -> List[str]:
+        return sorted(self._nodes)
+
+
+class DistributedPlanCache:
+    """PlanCache-compatible facade over sharded, replicated cache nodes."""
+
+    def __init__(
+        self, n_nodes: int = 4, *, replication: int = 2, capacity_per_node: int = 64
+    ):
+        self.ring = HashRing()
+        self.replication = replication
+        self.capacity_per_node = capacity_per_node
+        self.shards: Dict[str, PlanCache] = {}
+        self.down: set = set()
+        self.stats = CacheStats()
+        self._lock = threading.RLock()
+        for i in range(n_nodes):
+            self.add_node(f"cache-{i}")
+
+    # -- membership (elastic scaling) -----------------------------------
+
+    def add_node(self, name: str) -> None:
+        with self._lock:
+            if name in self.shards:
+                self.down.discard(name)
+                return
+            self.shards[name] = PlanCache(capacity=self.capacity_per_node)
+            self.ring.add(name)
+            self._rebalance()
+
+    def remove_node(self, name: str) -> None:
+        """Graceful removal: re-home this node's keys before dropping it."""
+        with self._lock:
+            if name not in self.shards:
+                return
+            old = self.shards.pop(name)
+            self.ring.remove(name)
+            self.down.discard(name)
+            for k in old.keys():
+                v = old.lookup(k)
+                if v is not None:
+                    self._insert_unlocked(k, v)
+
+    def mark_down(self, name: str) -> None:
+        """Crash-failure: node unreachable, data NOT migrated (replicas serve)."""
+        with self._lock:
+            self.down.add(name)
+
+    def mark_up(self, name: str) -> None:
+        with self._lock:
+            self.down.discard(name)
+
+    def _rebalance(self) -> None:
+        """After adding a node, re-home keys whose primary moved."""
+        moves = []
+        for node, shard in self.shards.items():
+            for k in shard.keys():
+                owners = self.ring.nodes_for(k, self.replication)
+                if node not in owners:
+                    v = shard.lookup(k)
+                    moves.append((node, k, v))
+        for node, k, v in moves:
+            # remove from stale owner, reinsert at the right owners
+            self.shards[node]._store.pop(k, None)
+            self._insert_unlocked(k, v)
+
+    # -- cache ops --------------------------------------------------------
+
+    def _live(self, names: List[str]) -> List[str]:
+        return [n for n in names if n not in self.down and n in self.shards]
+
+    def lookup(self, keyword: str) -> Optional[Any]:
+        with self._lock:
+            owners = self._live(self.ring.nodes_for(keyword, self.replication))
+            for n in owners:  # fall through replicas on miss/failure
+                v = self.shards[n].lookup(keyword)
+                if v is not None:
+                    self.stats.hits += 1
+                    return v
+            self.stats.misses += 1
+            return None
+
+    def _insert_unlocked(self, keyword: str, value: Any) -> None:
+        owners = self._live(self.ring.nodes_for(keyword, self.replication))
+        for n in owners:
+            self.shards[n].insert(keyword, value)
+
+    def insert(self, keyword: str, value: Any) -> None:
+        with self._lock:
+            self._insert_unlocked(keyword, value)
+            self.stats.inserts += 1
+
+    def __contains__(self, keyword: str) -> bool:
+        return self.lookup(keyword) is not None
+
+    def __len__(self) -> int:
+        with self._lock:
+            seen = set()
+            for n, s in self.shards.items():
+                if n not in self.down:
+                    seen.update(s.keys())
+            return len(seen)
+
+    def keys(self) -> List[str]:
+        with self._lock:
+            seen = set()
+            for n, s in self.shards.items():
+                if n not in self.down:
+                    seen.update(s.keys())
+            return sorted(seen)
+
+    def load_by_node(self) -> Dict[str, int]:
+        return {n: len(s) for n, s in sorted(self.shards.items())}

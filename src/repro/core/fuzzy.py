@@ -1,0 +1,102 @@
+"""Fuzzy keyword matching via hashed character-ngram embeddings.
+
+Stands in for SentenceTransformer('all-MiniLM-L6-v2') from the paper's
+prototype (offline container). Same asymptotics: embedding once per insert,
+O(N * dim) brute-force cosine scan per lookup — which is exactly the poor
+scaling the paper measures in Table 5. Also used by the semantic-caching
+baseline (query-level similarity).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import re
+from typing import Dict, List, Optional
+
+import numpy as np
+
+DIM = 384  # matches MiniLM-L6 dim
+
+
+def _tokens(text: str) -> List[str]:
+    text = text.lower()
+    words = re.findall(r"[a-z0-9]+", text)
+    grams = list(words)
+    for w in words:
+        for i in range(len(w) - 2):
+            grams.append(w[i : i + 3])
+    for a, b in zip(words, words[1:]):
+        grams.append(a + "_" + b)
+    return grams
+
+
+def embed(text: str) -> np.ndarray:
+    """Deterministic hashed bag-of-ngrams embedding, L2-normalized."""
+    v = np.zeros(DIM, np.float32)
+    for g in _tokens(text):
+        h = int.from_bytes(hashlib.blake2b(g.encode(), digest_size=8).digest(), "little")
+        idx = h % DIM
+        sign = 1.0 if (h >> 62) & 1 else -1.0
+        v[idx] += sign
+    n = np.linalg.norm(v)
+    return v / n if n > 0 else v
+
+
+def similarity(a: str, b: str) -> float:
+    return float(embed(a) @ embed(b))
+
+
+class FuzzyMatcher:
+    """Brute-force cosine index (matches the paper's prototype)."""
+
+    def __init__(self):
+        self._keys: List[str] = []
+        self._embs: Optional[np.ndarray] = None
+        self._cache: Dict[str, np.ndarray] = {}
+
+    def add(self, key: str) -> None:
+        if key in self._cache:
+            return
+        e = embed(key)
+        self._cache[key] = e
+        self._keys.append(key)
+        self._embs = None  # invalidate matrix
+
+    def remove(self, key: str) -> None:
+        if key in self._cache:
+            del self._cache[key]
+            self._keys.remove(key)
+            self._embs = None
+
+    def clear(self) -> None:
+        self._keys = []
+        self._embs = None
+        self._cache = {}
+
+    def _matrix(self) -> np.ndarray:
+        if self._embs is None:
+            if not self._keys:
+                self._embs = np.zeros((0, DIM), np.float32)
+            else:
+                self._embs = np.stack([self._cache[k] for k in self._keys])
+        return self._embs
+
+    def best_match(
+        self, query: str, keys: Optional[List[str]] = None, threshold: float = 0.8
+    ) -> Optional[str]:
+        if keys is not None and set(keys) != set(self._keys):
+            # caller supplied the live key set; rebuild lazily
+            self._keys = list(keys)
+            for k in self._keys:
+                if k not in self._cache:
+                    self._cache[k] = embed(k)
+            self._embs = None
+        M = self._matrix()
+        if M.shape[0] == 0:
+            return None
+        q = embed(query)
+        sims = M @ q
+        i = int(np.argmax(sims))
+        if sims[i] >= threshold:
+            return self._keys[i]
+        return None

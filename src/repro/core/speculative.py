@@ -1,0 +1,73 @@
+"""Beyond-paper latency optimizations the paper names as future work (§4.3):
+
+  * async cache generation — template distillation runs on a worker pool so
+    the response path never blocks on it (TwoTierRouter wires this);
+  * speculative next-query prefetch — predict the next likely keyword from
+    the observed keyword bigram stream and pre-warm templates: validate the
+    template for the predicted keyword is resident (or promote it in LRU
+    order) before the query arrives.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import Counter, defaultdict
+from typing import Callable, Dict, List, Optional
+
+from repro.core.cache import PlanCache
+
+
+class KeywordPredictor:
+    """First-order Markov model over the keyword stream."""
+
+    def __init__(self):
+        self._bigram: Dict[str, Counter] = defaultdict(Counter)
+        self._prev: Optional[str] = None
+        self._lock = threading.Lock()
+
+    def observe(self, keyword: str) -> None:
+        with self._lock:
+            if self._prev is not None:
+                self._bigram[self._prev][keyword] += 1
+            self._prev = keyword
+
+    def predict(self, k: int = 3) -> List[str]:
+        with self._lock:
+            if self._prev is None or self._prev not in self._bigram:
+                return []
+            return [kw for kw, _ in self._bigram[self._prev].most_common(k)]
+
+
+class SpeculativePrefetcher:
+    """Pre-warms the plan cache for predicted next keywords.
+
+    ``generate_fn(keyword)`` produces a template offline (e.g. replaying a
+    stored exemplar task through the large planner during idle cycles);
+    when it's None the prefetcher only performs an LRU *touch* so hot
+    templates survive eviction pressure.
+    """
+
+    def __init__(
+        self,
+        cache: PlanCache,
+        predictor: KeywordPredictor,
+        generate_fn: Optional[Callable[[str], object]] = None,
+    ):
+        self.cache = cache
+        self.predictor = predictor
+        self.generate_fn = generate_fn
+        self.prefetches = 0
+        self.generated = 0
+
+    def on_request(self, keyword: str) -> None:
+        self.predictor.observe(keyword)
+        for kw in self.predictor.predict():
+            if kw in self.cache:
+                self.cache.lookup(kw)  # LRU touch keeps it resident
+                self.prefetches += 1
+            elif self.generate_fn is not None:
+                tpl = self.generate_fn(kw)
+                if tpl is not None:
+                    self.cache.insert(kw, tpl)
+                    self.generated += 1
+                    self.prefetches += 1

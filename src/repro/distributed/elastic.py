@@ -1,0 +1,42 @@
+"""Elastic scaling: re-shard live state onto a different mesh.
+
+When nodes join/leave, training resumes on a new mesh: parameters and
+optimizer state are re-laid-out with ``reshard_tree`` (device_put with the
+new NamedShardings — XLA moves only the bytes that change owners), the data
+pipeline re-partitions by the new DP size, and the APC plan cache
+re-partitions via consistent hashing (core/distributed_cache.py — only
+~K/N keys move).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+
+from repro.configs.base import ShardingProfile
+from repro.distributed import sharding as shd
+
+
+def reshard_tree(tree: Any, mesh, profile: ShardingProfile) -> Any:
+    """Re-layout a param/opt pytree for ``mesh`` (the elastic-rescale core)."""
+    shardings = shd.to_shardings(shd.param_pspecs(tree, profile, mesh), mesh)
+    return jax.device_put(tree, shardings)
+
+
+def rescale_training_state(
+    params: Any, opt_state: Any, new_mesh, profile: ShardingProfile
+) -> Tuple[Any, Any]:
+    params = reshard_tree(params, new_mesh, profile)
+    new_m = reshard_tree(opt_state["m"], new_mesh, profile)
+    new_v = reshard_tree(opt_state["v"], new_mesh, profile)
+    return params, {"m": new_m, "v": new_v, "step": opt_state["step"]}
+
+
+def rebatch_for_mesh(global_batch: int, mesh) -> int:
+    """Largest per-step batch divisible by the new DP extent."""
+    dp = 1
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for ax in ("pod", "data"):
+        dp *= shape.get(ax, 1)
+    return (global_batch // dp) * dp

@@ -1,0 +1,139 @@
+"""Fault-tolerance manager: checkpoint/auto-resume training supervision.
+
+At 1000+ nodes, mean-time-between-failures is minutes; the training loop
+must (1) checkpoint asynchronously on a cadence, (2) detect failures —
+NaN/infs (data or hardware), stalled steps (stragglers/deadlock), worker
+loss — and (3) restart from the last committed step, optionally on a
+*smaller* elastic mesh.
+
+The manager wraps any step function; failures are injected in tests via
+``inject``. Per-step wall-time watermarks implement straggler detection
+(p99-based deadline like the serving hedger).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+
+
+@dataclass
+class FaultPolicy:
+    checkpoint_every: int = 50
+    max_restarts: int = 5
+    nan_tolerance: int = 0  # consecutive NaN steps tolerated before rollback
+    step_deadline_factor: float = 5.0  # x median step time = straggler/stall
+    min_steps_for_deadline: int = 10
+    min_deadline_s: float = 0.5  # absolute floor (µs-scale jitter is not a stall)
+
+
+@dataclass
+class FaultEvent:
+    step: int
+    kind: str  # "nan" | "stall" | "worker_lost" | "injected"
+    action: str  # "rollback" | "skip" | "abort"
+
+
+class FaultTolerantRunner:
+    def __init__(
+        self,
+        step_fn: Callable[[Any, Any], Tuple[Any, Dict[str, float]]],
+        store: CheckpointStore,
+        policy: FaultPolicy = FaultPolicy(),
+    ):
+        self.step_fn = step_fn
+        self.store = store
+        self.policy = policy
+        self.events: List[FaultEvent] = []
+        self._step_times: List[float] = []
+        self._inject: Dict[int, str] = {}
+
+    def inject(self, step: int, kind: str) -> None:
+        """Test hook: fail at a given step ('nan' | 'worker_lost' | 'stall')."""
+        self._inject[step] = kind
+
+    # ------------------------------------------------------------------
+
+    def _is_bad(self, metrics: Dict[str, Any]) -> bool:
+        for v in metrics.values():
+            try:
+                x = float(np.asarray(v))
+            except Exception:
+                continue
+            if math.isnan(x) or math.isinf(x):
+                return True
+        return False
+
+    def run(
+        self,
+        state: Any,
+        batches: Callable[[int], Any],
+        n_steps: int,
+        *,
+        start_step: int = 0,
+    ) -> Tuple[Any, int, List[FaultEvent]]:
+        """Runs with checkpoint/rollback; returns (state, completed, events)."""
+        step = start_step
+        restarts = 0
+        last_ckpt = start_step
+        # resume from store if anything is committed
+        committed = self.store.committed_steps()
+        if committed and committed[-1] > step:
+            state, extra = self.store.restore(state)
+            step = extra.get("step", committed[-1])
+            last_ckpt = step
+        while step < n_steps:
+            injected = self._inject.pop(step, None)
+            t0 = time.perf_counter()
+            try:
+                if injected == "worker_lost":
+                    raise RuntimeError("injected worker loss")
+                new_state, metrics = self.step_fn(state, batches(step))
+                if injected == "nan":
+                    metrics = dict(metrics, loss=float("nan"))
+                dt = time.perf_counter() - t0
+                if self._stalled(dt) or injected == "stall":
+                    raise TimeoutError(f"step {step} exceeded deadline ({dt:.2f}s)")
+                if self._is_bad(metrics):
+                    self.events.append(FaultEvent(step, "nan", "rollback"))
+                    state, step, restarts = self._rollback(state, restarts)
+                    continue
+                self._step_times.append(dt)
+                state = new_state
+                step += 1
+                if step % self.policy.checkpoint_every == 0:
+                    self.store.save(step, state, extra={"step": step})
+                    last_ckpt = step
+            except (RuntimeError, TimeoutError) as e:
+                kind = "stall" if isinstance(e, TimeoutError) else "worker_lost"
+                self.events.append(FaultEvent(step, kind, "rollback"))
+                state, step, restarts = self._rollback(state, restarts)
+        # final checkpoint
+        if step != last_ckpt:
+            self.store.save(step, state, extra={"step": step})
+        return state, step, self.events
+
+    def _stalled(self, dt: float) -> bool:
+        if len(self._step_times) < self.policy.min_steps_for_deadline:
+            return False
+        med = sorted(self._step_times)[len(self._step_times) // 2]
+        deadline = max(med * self.policy.step_deadline_factor,
+                       self.policy.min_deadline_s)
+        return dt > deadline
+
+    def _rollback(self, state: Any, restarts: int) -> Tuple[Any, int, int]:
+        restarts += 1
+        if restarts > self.policy.max_restarts:
+            raise RuntimeError("exceeded max_restarts; aborting run")
+        committed = self.store.committed_steps()
+        if not committed:
+            return state, 0, restarts  # restart from scratch
+        state, extra = self.store.restore(state)
+        return state, extra.get("step", committed[-1]), restarts

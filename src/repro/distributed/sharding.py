@@ -1,0 +1,273 @@
+"""Parameter/activation sharding rules.
+
+``param_pspecs(cfg, profile)`` walks the parameter pytree (by path) and emits
+a ``PartitionSpec`` per leaf:
+
+  * Megatron TP over ``profile.tp_axis``: column-shard up-projections
+    (wq/wk/wv/w_gate/w_up), row-shard down-projections (wo/w_down).
+  * FSDP (ZeRO-3) over ``profile.fsdp_axes``: shard the *other* matrix dim.
+  * EP over ``profile.ep_axis`` for MoE expert stacks.
+  * Vocab sharding for embed/head.
+
+Every axis assignment is divisibility-guarded: if a dim doesn't divide by the
+mesh extent it falls back to replication on that dim (e.g. GQA kv-heads <
+TP size).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShardingProfile
+
+
+def _axes_size(mesh_shape: Dict[str, int], axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh_shape.get(axes, 1)
+    n = 1
+    for a in axes:
+        n *= mesh_shape.get(a, 1)
+    return n
+
+
+def _guard(spec_entry, dim: int, mesh_shape: Dict[str, int]):
+    """Drop a sharding assignment whose extent doesn't divide the dim."""
+    if spec_entry is None:
+        return None
+    if dim % _axes_size(mesh_shape, spec_entry) == 0:
+        return spec_entry
+    return None
+
+
+def _present_axes(axes: Tuple[str, ...], mesh_shape: Dict[str, int]):
+    out = tuple(a for a in axes if a in mesh_shape)
+    if not out:
+        return None
+    return out if len(out) > 1 else out[0]
+
+
+# trailing-dims role table; leading dims (layer stacks) padded with None.
+# roles: 'fsdp' | 'tp' | 'ep' | 'vocab' | None
+_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / head
+    "embed": ("vocab", "fsdp"),
+    "head": ("fsdp", "vocab"),
+    "dec_pos": (None, "fsdp"),
+    # attention
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "bq": ("tp",),
+    "bk": ("tp",),
+    "bv": ("tp",),
+    # dense mlp
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # moe (rank includes expert dim) — see override below
+    "router": ("fsdp", None),
+    # rwkv
+    "wr": ("fsdp", "tp"),
+    "wg": ("fsdp", "tp"),
+    "ck": ("fsdp", "tp"),
+    "cv": ("tp", "fsdp"),
+    "cr": ("fsdp", "tp"),
+    "w_lora_a": (None, None),
+    "w_lora_b": (None, None),
+    # mamba
+    "in_proj": ("fsdp", "tp"),
+    "out_proj": ("tp", "fsdp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "norm_scale": ("tp",),
+}
+
+_MOE_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "w_gate": ("ep", "fsdp", None),
+    "w_up": ("ep", "fsdp", None),
+    "w_down": ("ep", None, "fsdp"),
+    "router": ("fsdp", None),
+}
+
+
+def _role_to_axes(role: Optional[str], profile: ShardingProfile, mesh_shape):
+    if role is None:
+        return None
+    if role == "fsdp":
+        return _present_axes(profile.fsdp_axes, mesh_shape)
+    if role == "tp" or role == "vocab":
+        if not profile.tp_axis:  # TP disabled (model axis used as DP)
+            return None
+        return profile.tp_axis if profile.tp_axis in mesh_shape else None
+    if role == "ep":
+        return profile.ep_axis if profile.ep_axis in mesh_shape else None
+    raise ValueError(role)
+
+
+def spec_for_param(
+    path: Tuple[str, ...],
+    shape: Tuple[int, ...],
+    profile: ShardingProfile,
+    mesh_shape: Dict[str, int],
+) -> P:
+    leaf = path[-1]
+    in_moe = "moe" in path
+    rules = _MOE_RULES if in_moe and leaf in _MOE_RULES else _RULES
+    roles = rules.get(leaf)
+    if not profile.shard_kv_proj and leaf in ("wk", "wv", "bk", "bv") and not in_moe:
+        roles = tuple("fsdp" if r == "fsdp" else None for r in (roles or ()))
+    if roles is None:
+        return P()  # replicate (norm scales, mixes, biases of recurrences...)
+    ndim = len(shape)
+    lead = ndim - len(roles)
+    if lead < 0:  # scalar-ish param with a rule (shouldn't happen)
+        return P()
+    entries = [None] * lead
+    for i, role in enumerate(roles):
+        ax = _role_to_axes(role, profile, mesh_shape)
+        entries.append(_guard(ax, shape[lead + i], mesh_shape))
+    # avoid reusing a mesh axis twice in one spec (illegal)
+    seen = set()
+    clean = []
+    for e in entries:
+        names = (e,) if isinstance(e, str) else (e or ())
+        if any(n in seen for n in names):
+            clean.append(None)
+            continue
+        seen.update(names)
+        clean.append(e)
+    return P(*clean)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_pspecs(params: Any, profile: ShardingProfile, mesh) -> Any:
+    """PartitionSpec pytree matching ``params`` (arrays or SDS leaves)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path, leaf):
+        return spec_for_param(_path_names(path), tuple(leaf.shape), profile, mesh_shape)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params: Any, profile: ShardingProfile, mesh) -> Any:
+    specs = param_pspecs(params, profile, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def dp_axes_for_mesh(mesh, profile: Optional[ShardingProfile] = None) -> Tuple[str, ...]:
+    """Batch axes: ('pod', 'data') when pod exists (+ profile extras)."""
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    if profile is not None:
+        dp += tuple(a for a in profile.extra_dp_axes if a in names and a not in dp)
+    return dp
+
+
+def batch_entry(mesh, profile: Optional[ShardingProfile] = None):
+    dp = dp_axes_for_mesh(mesh, profile)
+    return dp if len(dp) > 1 else dp[0]
+
+
+def batch_pspecs(batch: Any, mesh, profile: Optional[ShardingProfile] = None) -> Any:
+    """Shard leading (batch) dim of every input over the DP axes; with
+    ``profile.seq_parallel``, also shard the sequence dim over tp_axis.
+
+    VLM positions have shape (3, B, S) — batch is dim 1 there; detected by
+    rank-3 int arrays whose first dim == 3 under key 'positions'.
+    """
+    be = batch_entry(mesh, profile)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sp = None
+    if profile is not None and profile.seq_parallel and profile.tp_axis:
+        sp = profile.tp_axis if profile.tp_axis in mesh_shape else None
+
+    def one(path, leaf):
+        names = _path_names(path)
+        if names and names[-1] == "positions" and leaf.ndim == 3:
+            return P(
+                None,
+                _guard(be, leaf.shape[1], mesh_shape),
+                _guard(sp, leaf.shape[2], mesh_shape),
+            )
+        if leaf.ndim == 0:
+            return P()
+        entries = [_guard(be, leaf.shape[0], mesh_shape)]
+        if leaf.ndim >= 2 and sp:
+            entries.append(_guard(sp, leaf.shape[1], mesh_shape))
+        entries += [None] * (leaf.ndim - len(entries))
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_pspecs(cache: Any, cfg: ModelConfig, profile: ShardingProfile, mesh) -> Any:
+    """KV caches: batch over DP; head-or-headdim over TP (divisibility-
+    guarded); SSM states: batch over DP, head dim over TP."""
+    be = batch_entry(mesh, profile)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = profile.tp_axis if (profile.tp_axis and profile.tp_axis in mesh_shape) else None
+
+    def one(path, leaf):
+        names = _path_names(path)
+        nm = names[-1]
+        if nm == "length":
+            return P()
+        if nm in ("kv_k", "kv_v", "cross_k", "cross_v"):
+            # (L, B, M, H, hd) — prefer head sharding, else shard head_dim,
+            # optionally shard sequence (shard_kv_seq) instead.
+            L, B, M, H, hd = leaf.shape
+            b = _guard(be, B, mesh_shape)
+            if profile.shard_kv_seq and tp and M % mesh_shape[tp] == 0:
+                return P(None, b, tp, None, None)
+            if tp and H % mesh_shape[tp] == 0:
+                return P(None, b, None, tp, None)
+            if tp and hd % mesh_shape[tp] == 0:
+                return P(None, b, None, None, tp)
+            return P(None, b, None, None, None)
+        if nm == "ssm_state":
+            # (..., B, H, P, N) with leading layer dims
+            lead = leaf.ndim - 4
+            B, H, Pd, N = leaf.shape[lead:]
+            b = _guard(be, B, mesh_shape)
+            h = _guard(tp, H, mesh_shape)
+            return P(*([None] * lead), b, h, None, None)
+        if nm in ("shift_tm", "shift_cm"):
+            L, B, D = leaf.shape
+            return P(None, _guard(be, B, mesh_shape), _guard(tp, D, mesh_shape))
+        if nm == "conv":
+            lead = leaf.ndim - 3
+            B, K, CH = leaf.shape[lead:]
+            return P(*([None] * lead), _guard(be, B, mesh_shape), None, _guard(tp, CH, mesh_shape))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def to_shardings(specs: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,0 +1,72 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute with ``interpret=True``; on TPU the
+same call sites compile to Mosaic. ``use_kernels(cfg)``-style dispatch lives
+in the model code; these wrappers normalize layouts (models use (B,S,H,hd),
+kernels use (B,H,S,hd)).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rwkv6 as _rwkv
+from repro.kernels import ssd as _ssd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention_op(q, k, v, *, causal=True, block_q=128, block_k=128):
+    """Model layout: q (B,S,Hq,hd), k/v (B,S,Hkv,hd) -> (B,S,Hq,hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = _fa.flash_attention(
+        qt, kt, vt, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=_on_cpu(),
+    )
+    return o.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention_op(q, cache_k, cache_v, length, *, block_k=512):
+    """q (B,1,Hq,hd); cache (B,M,Hkv,hd); length () -> (B,1,Hq,hd)."""
+    qt = q[:, 0]  # (B,Hq,hd)
+    kt = cache_k.transpose(0, 2, 1, 3)
+    vt = cache_v.transpose(0, 2, 1, 3)
+    o = _dec.decode_attention(qt, kt, vt, length, block_k=block_k, interpret=_on_cpu())
+    return o[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6_op(r, k, v, w_log, u, *, chunk=64):
+    """Model layout (B,S,H,N) -> (y (B,S,H,N), state (B,H,N,N))."""
+    tr = lambda x: x.transpose(0, 2, 1, 3)
+    y, st = _rwkv.wkv6(
+        tr(r), tr(k), tr(v), tr(w_log), u, chunk=chunk, interpret=_on_cpu()
+    )
+    return y.transpose(0, 2, 1, 3), st
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_op(x, dt, A_log, B_, C_, D, *, chunk=128):
+    """Model layout x (B,S,H,P), dt (B,S,H) -> (y (B,S,H,P), state)."""
+    y, st = _ssd.ssd(
+        x.transpose(0, 2, 1, 3),
+        dt.transpose(0, 2, 1),
+        A_log,
+        B_,
+        C_,
+        D,
+        chunk=chunk,
+        interpret=_on_cpu(),
+    )
+    return y.transpose(0, 2, 1, 3), st

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+Deliberately naive: O(S^2) attention materializing scores, O(S) sequential
+recurrences for RWKV6/SSD. Small shapes only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, Hq, S, hd); k, v: (B, Hkv, S, hd) -> (B, Hq, S, hd). fp32."""
+    B, Hq, S, hd = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    kr = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr) / jnp.sqrt(hd)
+    if causal:
+        mask = jnp.arange(S)[None, :] > jnp.arange(S)[:, None]
+        s = s + mask * NEG_INF
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, length):
+    """q: (B, Hq, hd); k, v: (B, Hkv, M, hd); length: () valid kv count.
+    Returns (B, Hq, hd)."""
+    B, Hq, hd = q.shape
+    Hkv, M = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kr = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kr) / jnp.sqrt(hd)
+    mask = jnp.arange(M)[None, None, :] >= length
+    s = jnp.where(mask, NEG_INF, s)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, vr).astype(q.dtype)
+
+
+def rwkv6_ref(r, k, v, w_log, u, state0):
+    """Sequential wkv6. r,k,v,w_log: (B, S, H, N); u: (H, N);
+    state0: (B, H, N, N). Returns (y (B,S,H,N), state)."""
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w_log.astype(jnp.float32)
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs  # (B, H, N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, state)
+        coef = jnp.sum(rt * u[None] * kt, axis=-1, keepdims=True)
+        y = y + coef * vt
+        state = jnp.exp(wt)[..., None] * state + kt[..., None] * vt[..., None, :]
+        return state, y
+
+    xs = (
+        rf.transpose(1, 0, 2, 3),
+        kf.transpose(1, 0, 2, 3),
+        vf.transpose(1, 0, 2, 3),
+        wf.transpose(1, 0, 2, 3),
+    )
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def ssd_ref(x, dt, A_log, B_, C_, D, state0):
+    """Sequential SSD. x: (B,S,H,P); dt: (B,S,H); B_/C_: (B,S,Ns);
+    A_log, D: (H,); state0: (B,H,P,Ns). Returns (y, state)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    neg_A = -jnp.exp(A_log.astype(jnp.float32))
+
+    def step(state, xs):
+        xt, dtt, Bt, Ct = xs  # (B,H,P), (B,H), (B,Ns), (B,Ns)
+        a = jnp.exp(dtt * neg_A[None])  # (B,H)
+        dtx = xt * dtt[..., None]
+        state = a[..., None, None] * state + dtx[..., None] * Bt[:, None, None, :]
+        y = jnp.einsum("bhps,bs->bhp", state, Ct) + D[None, :, None] * xt
+        return state, y
+
+    xs = (
+        xf.transpose(1, 0, 2, 3),
+        dtf.transpose(1, 0, 2),
+        B_.astype(jnp.float32).transpose(1, 0, 2),
+        C_.astype(jnp.float32).transpose(1, 0, 2),
+    )
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3), state

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — jax locks the device count on first use,
+and smoke tests must see 1 device while the dry-run sees 512.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests / examples)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1-D 'data' mesh (CPU smoke scale)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))

@@ -1,0 +1,599 @@
+"""Roofline analysis from compiled HLO.
+
+``compiled.cost_analysis()`` counts a ``lax.scan`` (while-loop) body ONCE —
+verified empirically — so a scan-over-layers model under-reports FLOPs by
+~L x. This module therefore builds its own cost model from
+``compiled.as_text()``:
+
+  * per-computation symbol tables (op name -> shape) so dot FLOPs can be
+    computed as 2 * |out| * contracted_extent from the operand shapes;
+  * a recursive walk of the call graph (while/fusion/call/conditional) that
+    multiplies while-body costs by the trip count parsed from the loop
+    condition's comparison constant;
+  * collective bytes per op kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute, including -start variants), with the
+    replica-group size captured for ring-cost refinement;
+  * HBM-byte estimates per op (operands + outputs at fusion boundaries).
+
+All numbers are PER DEVICE (the compiled module is the post-SPMD per-device
+program), so roofline terms divide by per-chip peaks directly:
+
+    compute    = flops / 197e12        (TPU v5e bf16)
+    memory     = bytes / 819e9         (HBM BW)
+    collective = coll_bytes / 50e9     (ICI per link)
+"""
+
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "token": 0, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# Opcodes whose operands/outputs are charged as HBM traffic. The CPU backend
+# barely fuses, so charging every elementwise op would grossly overstate what
+# the TPU compiler (aggressive fusion) actually moves; this whitelist keeps
+# the materialization-forcing ops only (fusion boundaries, matmuls, copies,
+# slicing/gather/scatter, reductions, sorts, physical relayouts).
+_BYTE_OPS = frozenset(
+    {
+        "dot", "convolution", "fusion", "copy", "dynamic-update-slice",
+        "dynamic-slice", "gather", "scatter", "reduce", "sort", "transpose",
+        "concatenate", "pad", "reduce-window", "select-and-scatter", "rng",
+        "cholesky", "triangular-solve",
+    }
+    | set(COLLECTIVES)
+    | {c + "-start" for c in COLLECTIVES}
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def shape_bytes(type_str: str) -> int:
+    """bytes of 'f32[16,2048]{1,0}' or tuple '(f32[2], s32[])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # args + attrs
+
+    def operands(self) -> List[str]:
+        depth = 0
+        args = []
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    args = _OPERAND_RE.findall(self.rest[:i])
+                    break
+                depth -= 1
+        return args
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, str] = field(default_factory=dict)  # name -> type
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, int] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + int(v * mult)
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps = self._parse(hlo_text)
+        self.entry = self._find_entry(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    # -- parsing ----------------------------------------------------------
+
+    @staticmethod
+    def _parse(text: str) -> Dict[str, Computation]:
+        comps: Dict[str, Computation] = {}
+        cur: Optional[Computation] = None
+        for line in text.splitlines():
+            if cur is None:
+                if line.rstrip().endswith("{") and not line.startswith(" "):
+                    m = _COMP_HDR_RE.match(line)
+                    if m:
+                        cur = Computation(m.group(1))
+                        for p in m.group(2).split(","):
+                            p = p.strip()
+                            if ":" in p:
+                                pname, ptype = p.split(":", 1)
+                                pname = pname.strip().lstrip("%")
+                                cur.params[pname] = ptype.strip()
+                                cur.symbols[pname] = ptype.strip()
+                continue
+            if line.startswith("}"):
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if m:
+                op = Op(m.group(1), m.group(2), m.group(3), m.group(4))
+                cur.ops.append(op)
+                cur.symbols[op.name] = op.type_str
+        return comps
+
+    @staticmethod
+    def _find_entry(text: str) -> Optional[str]:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        return m.group(1) if m else None
+
+    # -- trip counts ------------------------------------------------------
+
+    def trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        consts = []
+        for op in comp.ops:
+            if op.opcode == "constant":
+                m = re.match(r"\s*(\d+)\s*\)", op.rest)
+                if m:
+                    consts.append(int(m.group(1)))
+        # jax scans compare the induction var LT bound; take the max constant
+        return max(consts) if consts else 1
+
+    # -- op costs ---------------------------------------------------------
+
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        out = shape_dims(op.type_str)
+        out_n = math.prod(out) if out else 1
+        operands = op.operands()
+        if not operands:
+            return 0.0
+        lhs_type = comp.symbols.get(operands[0], "")
+        lhs = shape_dims(lhs_type)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+        contract = 1
+        if m and lhs:
+            for d in m.group(1).split(","):
+                if d:
+                    contract *= lhs[int(d)]
+        return 2.0 * out_n * contract
+
+    def _group_size(self, op: Op) -> int:
+        # replica_groups=[16,16]<=[256] or {{0,1},{2,3}}
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.rest)
+        if m:
+            return int(m.group(2))
+        m = re.search(r"replica_groups=\{\{([\d,]+)\}", op.rest)
+        if m:
+            return len(m.group(1).split(","))
+        return 1
+
+    # -- computation walk ---------------------------------------------------
+
+    def cost_of(self, comp_name: str, *, inside_fusion: bool = False) -> Cost:
+        key = comp_name + ("#f" if inside_fusion else "")
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(comp_name)
+        c = Cost()
+        if comp is None:
+            return c
+        self._memo[key] = c  # placeholder breaks cycles
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast", "after-all", "iota"):
+                continue
+            if oc == "while":
+                body = op.attr("body")
+                cond = op.attr("condition")
+                trips = self.trip_count(cond) if cond else 1
+                if body:
+                    c.add(self.cost_of(body), trips)
+                if cond:
+                    c.add(self.cost_of(cond), trips)
+                continue
+            if oc in ("call", "custom-call", "async-start"):
+                callee = op.attr("to_apply") or op.attr("called_computations") or op.attr("calls")
+                if callee:
+                    c.add(self.cost_of(callee))
+                continue
+            if oc == "conditional":
+                for key_attr in ("true_computation", "false_computation"):
+                    callee = op.attr(key_attr)
+                    if callee:
+                        c.add(self.cost_of(callee))
+                # branch_computations={%a, %b}
+                m = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+                if m:
+                    for nm in _OPERAND_RE.findall(m.group(1)):
+                        c.add(self.cost_of(nm))
+                continue
+            if oc == "fusion":
+                callee = op.attr("calls")
+                if callee:
+                    inner = self.cost_of(callee, inside_fusion=True)
+                    c.flops += inner.flops
+                    c.transcendentals += inner.transcendentals
+                if not inside_fusion:
+                    c.bytes += self._fusion_bytes(comp, op, callee)
+                continue
+            if oc == "dynamic-update-slice":
+                # in-place: traffic = slice read+write, NOT the aliased buffer
+                c.bytes += 2.0 * self._non_buffer_operand_bytes(comp, op)
+                continue
+            if oc == "dynamic-slice":
+                c.bytes += 2.0 * shape_bytes(op.type_str)
+                continue
+            base = oc.replace("-start", "")
+            if base in COLLECTIVES:
+                if oc.endswith("-done"):
+                    continue
+                operand_bytes = sum(
+                    shape_bytes(comp.symbols.get(o, "")) for o in op.operands()
+                )
+                c.coll_bytes[base] = c.coll_bytes.get(base, 0.0) + operand_bytes
+                c.coll_count[base] = c.coll_count.get(base, 0) + 1
+                if not inside_fusion:
+                    c.bytes += self._io_bytes(comp, op)
+                continue
+            if oc in ("dot", "convolution"):
+                c.flops += self._dot_flops(comp, op)
+            elif oc in ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                        "logistic", "sine", "cosine"):
+                c.transcendentals += math.prod(shape_dims(op.type_str) or [1])
+            if not inside_fusion and oc in _BYTE_OPS:
+                c.bytes += self._io_bytes(comp, op)
+        self._memo[key] = c
+        return c
+
+    def _io_bytes(self, comp: Computation, op: Op) -> float:
+        b = shape_bytes(op.type_str)
+        for o in op.operands():
+            b += shape_bytes(comp.symbols.get(o, ""))
+        return float(b)
+
+    def _non_buffer_operand_bytes(self, comp: Computation, op: Op) -> float:
+        """Operand bytes excluding ONE operand that matches the output shape
+        (the aliased in-place buffer of a dynamic-update-slice pattern)."""
+        out_b = shape_bytes(op.type_str)
+        sizes = [shape_bytes(comp.symbols.get(o, "")) for o in op.operands()]
+        if out_b in sizes:
+            sizes.remove(out_b)
+        return float(sum(sizes))
+
+    def _fusion_bytes(self, comp: Computation, op: Op, callee: Optional[str]) -> float:
+        """Fusion boundary traffic; DUS-rooted fusions alias their buffer, so
+        only the slice-sized operands move."""
+        root_oc = None
+        cc = self.comps.get(callee) if callee else None
+        if cc is not None and cc.ops:
+            root_oc = cc.ops[-1].opcode
+        if root_oc == "dynamic-update-slice":
+            return 2.0 * self._non_buffer_operand_bytes(comp, op)
+        return self._io_bytes(comp, op)
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms per dry-run cell
+# ---------------------------------------------------------------------------
+
+
+def model_flops_per_device(arch: str, shape_name: str, mesh_shape: Dict[str, int]) -> float:
+    """Analytic MODEL_FLOPS (param-math only): 6ND train / 2ND inference,
+    MoE counts active params. Per device = global / chips."""
+    from repro.configs import registry
+    from repro.configs.base import SHAPES
+
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    chips = math.prod(mesh_shape.values())
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / chips
+
+
+def analytic_memory_bytes(
+    arch: str, shape_name: str, mesh_shape: Dict[str, int]
+) -> Dict[str, float]:
+    """First-order per-device HBM traffic model (bytes/step).
+
+    The CPU-compiled HLO barely fuses, so parsed byte counts overstate TPU
+    HBM traffic by the number of unfused hops; this structural model is the
+    primary memory term (components itemized for the perf loop), with the
+    parsed bytes reported as an upper bound.
+    """
+    from repro.configs import registry
+    from repro.configs.base import SHAPES
+
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    profile = registry.get_sharding(arch, shape.kind)
+    chips = math.prod(mesh_shape.values())
+    tp = mesh_shape.get("model", 1)
+    P = cfg.param_count()
+    P_active = cfg.active_param_count()
+    B_loc = max(1, shape.global_batch // (chips // tp))
+    S = shape.seq_len
+    d = cfg.d_model
+    L = cfg.num_layers
+    out: Dict[str, float] = {}
+
+    # weights: each device reads its 1/tp slice of the *touched* params per
+    # pass (EP MoE: routed experts only ~ active + local share)
+    touched = P_active if cfg.moe is not None else P
+    w_read = 2.0 * touched / tp  # bf16
+    if shape.kind == "train":
+        passes = 3.0 if profile.remat == "full" else 2.0
+        out["weights"] = w_read * passes
+        opt_b = 10.0 if profile.optimizer_dtype == "bfloat16" else 20.0
+        n_opt_shards = tp
+        for ax in profile.fsdp_axes:
+            n_opt_shards *= mesh_shape.get(ax, 1)
+        out["optimizer"] = P * (opt_b + 8.0) / n_opt_shards  # m,v r/w + grad r/w
+        act_unit = B_loc * S * d * 2.0
+        hops = 16.0 if profile.remat == "full" else 24.0
+        out["activations"] = act_unit * L * hops
+        out["logits"] = B_loc * S * (cfg.vocab_size / tp) * 6.0
+    elif shape.kind == "prefill":
+        out["weights"] = w_read
+        act_unit = B_loc * S * d * 2.0
+        out["activations"] = act_unit * L * 8.0
+        out["kv_write"] = (
+            2.0 * cfg.num_attn_layers * B_loc * S * cfg.kv_dim * 2.0 / max(1, tp)
+        )
+        out["logits"] = B_loc * 1 * (cfg.vocab_size / tp) * 6.0  # last-token only
+    else:  # decode
+        out["weights"] = w_read
+        cache_elems = 2.0 * cfg.num_attn_layers * shape.global_batch * S * cfg.kv_dim
+        out["kv_read"] = cache_elems * 2.0 / chips  # bf16 cache, fully sharded
+        if cfg.ssm is not None:
+            s = cfg.ssm
+            if s.kind == "rwkv6":
+                H = d // s.head_dim
+                st = L * shape.global_batch * H * s.head_dim * s.head_dim * 4.0
+            else:
+                d_in = s.expand * d
+                st = L * shape.global_batch * (d_in // s.head_dim) * s.head_dim * s.state_dim * 4.0
+            out["ssm_state"] = 2.0 * st / chips  # read + write
+        out["activations"] = shape.global_batch * d * L * 2.0 * 4.0 / (chips // tp)
+        out["logits"] = shape.global_batch * (cfg.vocab_size / tp) * 6.0 / max(1, chips // tp)
+    return out
+
+
+def analytic_resident_bytes(
+    arch: str, shape_name: str, mesh_shape: Dict[str, int]
+) -> Dict[str, float]:
+    """Per-device HBM *residency* estimate for the real TPU target.
+
+    The CPU backend has no native bf16 matmul, so XLA:CPU materializes f32
+    copies of weights/activations — memory_analysis() therefore OVERSTATES
+    TPU residency by ~2-3x for bf16 models (verified on the kimi prefill
+    HLO: 15 f32 copies of the stacked expert weights). This structural
+    estimate is the TPU-realistic number; both are reported.
+    """
+    from repro.configs import registry
+    from repro.configs.base import SHAPES
+
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    profile = registry.get_sharding(arch, shape.kind)
+    chips = math.prod(mesh_shape.values())
+    tp = mesh_shape.get("model", 1) if profile.tp_axis else 1
+    n_shards = tp
+    for ax in profile.fsdp_axes:
+        n_shards *= mesh_shape.get(ax, 1)
+    n_shards = min(n_shards, chips)
+    P = cfg.param_count()
+    out: Dict[str, float] = {"params": 2.0 * P / n_shards}
+    dp = max(1, chips // tp)
+    B_loc = max(1, shape.global_batch // dp)
+    S = shape.seq_len
+    act_unit = B_loc * S * cfg.d_model * 2.0
+    if shape.kind == "train":
+        opt_b = 4.0 if profile.optimizer_dtype == "bfloat16" else 8.0
+        out["optimizer"] = P * opt_b / n_shards
+        out["grads"] = 2.0 * P / n_shards
+        # remat=full keeps ~1 activation per layer + working set
+        out["activations"] = act_unit * (cfg.num_layers + 8)
+        out["logits"] = B_loc * S * cfg.vocab_size / tp * 6.0
+    elif shape.kind == "prefill":
+        out["activations"] = act_unit * 10
+        out["kv_cache"] = (
+            2.0 * cfg.num_attn_layers * B_loc * S * cfg.kv_dim * 2.0 / tp
+        )
+    else:
+        out["kv_cache"] = (
+            2.0 * cfg.num_attn_layers * shape.global_batch * S * cfg.kv_dim * 2.0 / chips
+        )
+        out["activations"] = shape.global_batch * cfg.d_model * 2.0 * 8 / dp
+    return out
+
+
+def analyze_cell(json_path: Path) -> Dict:
+    rec = json.loads(json_path.read_text())
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "ok": rec.get("ok", False),
+    }
+    if not rec.get("ok"):
+        out["error"] = rec.get("error")
+        return out
+    hlo_path = Path(rec["hlo"])
+    text = gzip.open(hlo_path, "rt").read()
+    model = HloCostModel(text)
+    cost = model.entry_cost()
+
+    mem = rec.get("memory", {})
+    hbm_resident = (
+        mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+    )
+    resident_est = analytic_resident_bytes(rec["arch"], rec["shape"], rec["mesh_shape"])
+    mem_parts = analytic_memory_bytes(rec["arch"], rec["shape"], rec["mesh_shape"])
+    mem_bytes = sum(mem_parts.values())
+    compute_s = cost.flops / PEAK_FLOPS
+    memory_s = mem_bytes / HBM_BW
+    coll_s = cost.total_coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], rec["mesh_shape"])
+    step_s = max(terms.values())
+    out.update(
+        {
+            "hlo_flops": cost.flops,
+            "hlo_bytes_upper": cost.bytes,  # unfused CPU-HLO upper bound
+            "memory_bytes": mem_bytes,
+            "memory_parts": {k: round(v) for k, v in mem_parts.items()},
+            "collective_bytes": cost.total_coll_bytes,
+            "coll_breakdown": {k: round(v) for k, v in cost.coll_bytes.items()},
+            "coll_counts": cost.coll_count,
+            "raw_cost_analysis": rec.get("cost_analysis", {}),
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": coll_s,
+            "dominant": dominant,
+            "model_flops_per_device": mf,
+            "useful_flops_ratio": mf / cost.flops if cost.flops else 0.0,
+            "roofline_fraction": (mf / PEAK_FLOPS) / step_s if step_s else 0.0,
+            "hbm_resident_bytes": hbm_resident,  # raw CPU memory_analysis
+            "fits_hbm_16g": hbm_resident <= 16 * 2**30,
+            "resident_est_bytes": sum(resident_est.values()),  # TPU estimate
+            "resident_est_parts": {k: round(v) for k, v in resident_est.items()},
+            "fits_hbm_16g_est": sum(resident_est.values()) <= 16 * 2**30,
+            "compile_s": rec.get("compile_s"),
+        }
+    )
+    return out
+
+
+_RECOMMEND = {
+    "compute": "reduce recompute (remat policy) or shift FLOPs to lower-"
+               "precision paths; compute-bound is the good end state",
+    "memory": "shrink the working set (KV dtype, fused loss, activation "
+              "layout) or raise arithmetic intensity via larger tiles",
+    "collective": "re-shard to cut gathered bytes (FSDP axis choice, EP "
+                  "capacity, KV head vs seq sharding) or overlap via async "
+                  "collectives",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=None)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    results = Path(args.results) if args.results else (
+        Path(__file__).resolve().parents[3] / "results" / "dryrun"
+    )
+    rows = []
+    for f in sorted(results.glob(f"*__{args.mesh}{args.tag}.json")):
+        try:
+            rows.append(analyze_cell(f))
+        except Exception as e:  # pragma: no cover
+            rows.append({"file": str(f), "error": f"{type(e).__name__}: {e}"})
+    outdir = results.parent / "roofline"
+    outdir.mkdir(parents=True, exist_ok=True)
+    out = Path(args.out) if args.out else outdir / f"roofline_{args.mesh}{args.tag}.json"
+    out.write_text(json.dumps(rows, indent=2))
+    # markdown table
+    print(f"| arch | shape | compute_s | memory_s | collective_s | dominant | "
+          f"useful% | roofline% | fits16G |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if "compute_s" not in r:
+            print(f"| {r.get('arch','?')} | {r.get('shape','?')} | FAILED: "
+                  f"{str(r.get('error'))[:40]} | | | | | | |")
+            continue
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} | "
+            f"{100*r['useful_flops_ratio']:.0f}% | "
+            f"{100*r['roofline_fraction']:.1f}% | "
+            f"{'Y' if r['fits_hbm_16g_est'] else 'N'} |"
+        )
+    print(f"\nwritten: {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation — the dry-run lowers/compiles against these. The
+modality frontends are stubs per the assignment: VLM cells get precomputed
+patch/token embeddings + M-RoPE position ids; audio cells get precomputed
+frame embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+
+SDS = jax.ShapeDtypeStruct
+
+DECODE_HEADROOM = 16  # extra KV slots beyond the prefilled seq_len (TP-aligned)
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig
+) -> Tuple[Dict[str, Any], Optional[Any]]:
+    """Returns (batch_specs, cache_specs_or_None)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    if shape.kind == "decode":
+        batch = {"tokens": SDS((B, 1), i32)}
+        cache = lm.abstract_cache(cfg, B, S + DECODE_HEADROOM)
+        return batch, cache
+
+    if cfg.family == "vlm":
+        batch: Dict[str, Any] = {
+            "embeds": SDS((B, S, cfg.d_model), act),
+            "positions": SDS((3, B, S), i32),
+        }
+    elif cfg.family == "audio":
+        batch = {
+            "frames": SDS((B, cfg.encoder.num_frames, cfg.d_model), act),
+            "tokens": SDS((B, S), i32),
+        }
+    else:
+        batch = {"tokens": SDS((B, S), i32)}
+
+    if shape.kind == "train":
+        batch["labels"] = SDS((B, S), i32)
+    return batch, None
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeConfig, key=None):
+    """Materialize a random batch matching input_specs (smoke scale only)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs, cache = input_specs(cfg, shape)
+
+    def mk(k, s):
+        if s.dtype == jnp.int32:
+            return jax.random.randint(k, s.shape, 0, max(2, cfg.vocab_size - 1))
+        return jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype)
+
+    keys = jax.random.split(key, len(specs))
+    batch = {name: mk(k, s) for k, (name, s) in zip(keys, specs.items())}
+    return batch, cache

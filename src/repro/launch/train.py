@@ -1,0 +1,102 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+CPU-scale by default (reduced config, synthetic LM data); pass --full for
+the production config under the real mesh (TPU). Fault tolerance is on:
+periodic atomic checkpoints + auto-resume via FaultTolerantRunner.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs import registry
+from repro.distributed.fault import FaultPolicy, FaultTolerantRunner
+from repro.models import lm
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_step import make_train_step
+
+
+def synthetic_batches(cfg, batch: int, seq: int):
+    """Deterministic synthetic LM stream (shifted-token next-token task —
+    learnable, so loss decreasing is a meaningful signal)."""
+
+    def get(step: int):
+        rng = np.random.RandomState(step)
+        toks = rng.randint(16, min(cfg.vocab_size, 4096), size=(batch, seq + 1))
+        # inject copy structure so the model can learn something
+        toks[:, 1::2] = toks[:, 0:-1:2]
+        b = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+             "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+        if cfg.family == "vlm":
+            b = {"tokens": b["tokens"], "labels": b["labels"]}
+        if cfg.family == "audio":
+            fr = rng.randn(batch, cfg.encoder.num_frames, cfg.d_model)
+            b["frames"] = jnp.asarray(fr, jnp.float32)
+        return b
+
+    return get
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--full", action="store_true", help="full config (TPU)")
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch) if args.full else registry.get_smoke(args.arch)
+    print(f"[train] arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    opt_cfg = AdamWConfig(lr=args.lr)
+    opt_state = adamw_init(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+
+    def wrapped(state, batch):
+        params, opt_state = state
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        return (params, opt_state), {
+            k: float(np.asarray(v)) for k, v in metrics.items()
+        }
+
+    store = CheckpointStore(args.ckpt_dir, keep_last=2)
+    runner = FaultTolerantRunner(
+        wrapped, store, FaultPolicy(checkpoint_every=args.ckpt_every)
+    )
+    batches = synthetic_batches(cfg, args.batch, args.seq)
+
+    t0 = time.time()
+    losses = []
+
+    def logged(state, b):
+        s, m = wrapped(state, b)
+        losses.append(m.get("loss", m.get("nll", 0.0)))
+        if len(losses) % 10 == 1:
+            print(f"[train] step={len(losses):4d} loss={losses[-1]:.4f} "
+                  f"({time.time()-t0:.1f}s)")
+        return s, m
+
+    runner.step_fn = logged
+    state, completed, events = runner.run(
+        (params, opt_state), batches, args.steps
+    )
+    print(f"[train] done: {completed} steps, first loss {losses[0]:.4f} -> "
+          f"last {losses[-1]:.4f}, fault events: {len(events)}")
+    if losses[-1] >= losses[0]:
+        print("[train] WARNING: loss did not decrease")
+
+
+if __name__ == "__main__":
+    main()

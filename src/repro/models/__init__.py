@@ -1,0 +1,12 @@
+"""Model zoo: unified LM API over dense/moe/ssm/hybrid/vlm/audio families."""
+
+from repro.models.lm import (  # noqa: F401
+    ParallelCtx,
+    abstract_cache,
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+)

@@ -1,0 +1,148 @@
+"""Shared layers: norms, activations, initializers, dtype helpers."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[
+        name
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Norms. All norms compute in fp32 and cast back (TPU numerics convention).
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: Optional[jnp.ndarray], eps: float = 1e-6):
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    return x.astype(orig)
+
+
+def layer_norm(
+    x: jnp.ndarray,
+    scale: Optional[jnp.ndarray],
+    bias: Optional[jnp.ndarray],
+    eps: float = 1e-5,
+):
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(orig)
+
+
+def apply_norm(cfg, p: Params, name: str, x: jnp.ndarray) -> jnp.ndarray:
+    """Dispatch on cfg.norm_type; ``p`` holds <name>_scale/<name>_bias if any."""
+    if cfg.norm_type == "rmsnorm":
+        return rms_norm(x, p[f"{name}_scale"])
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p[f"{name}_scale"], p[f"{name}_bias"])
+    if cfg.norm_type == "layernorm_np":  # OLMo: non-parametric
+        return layer_norm(x, None, None)
+    raise ValueError(cfg.norm_type)
+
+
+def norm_param_init(cfg, d: int) -> Params:
+    """Norm params for one norm site (possibly empty for layernorm_np)."""
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+def mlp_act_fn(name: str):
+    return {
+        "swiglu": None,  # handled structurally (gate * up)
+        "squared_relu": squared_relu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def stacked_init(init_fn, key, n: int):
+    """vmap a per-layer initializer over n layer keys -> stacked params."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# MLP block (dense; MoE lives in moe.py)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(cfg, key, d_model: int, d_ff: int) -> Params:
+    dt = dtype_of(cfg.param_dtype)
+    ks = split_keys(key, 3)
+    p: Params = {}
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = dense_init(ks[0], (d_model, d_ff), dt)
+        p["w_up"] = dense_init(ks[1], (d_model, d_ff), dt)
+    else:
+        p["w_up"] = dense_init(ks[1], (d_model, d_ff), dt)
+    p["w_down"] = dense_init(ks[2], (d_ff, d_model), dt)
+    return p
+
+
+def mlp_forward(cfg, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = mlp_act_fn(cfg.mlp_act)(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Token shift (RWKV)
+# ---------------------------------------------------------------------------
+
+
+def token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Shift sequence right by one; position 0 receives ``prev`` (or zeros).
+
+    x: (B, S, D). prev: (B, D) carried state for chunked/recurrent execution.
+    """
+    shifted = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, 0]) if prev is None else prev
+    return shifted.at[:, 0].set(first)

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD — state space duality) mixer, Zamba2-style.
+
+Recurrence (per head h, head_dim p, state s; B/C shared across heads,
+n_groups=1):
+    a_t = exp(-dt_t * exp(A_log_h))              scalar decay per head
+    H_t = a_t H_{t-1} + (dt_t x_t) B_t^T         H: (P, S_state)
+    y_t = H_t C_t + D_h x_t
+
+TPU adaptation: chunked SSD — intra-chunk term is a (C x C) masked matmul
+per head (MXU), inter-chunk state passes through lax.scan. GPU versions use
+warp shuffles / shared-memory scans; the chunk factorization is the
+TPU-idiomatic equivalent. kernels/ssd.py is the Pallas analogue.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, dtype_of, rms_norm, split_keys
+
+
+def mamba_dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    heads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim  # conv over (x, B, C)
+    return d_in, heads, conv_ch
+
+
+def mamba_init(cfg, key) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, heads, conv_ch = mamba_dims(cfg)
+    dt = dtype_of(cfg.param_dtype)
+    ks = split_keys(key, 4)
+    # in_proj -> [z (d_in), x (d_in), B (state), C (state), dt (heads)]
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * s.state_dim + heads), dt),
+        "conv_w": dense_init(ks[1], (s.conv_dim, conv_ch), jnp.float32, scale=0.1),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((heads,), jnp.float32),  # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((heads,), -2.0, jnp.float32),
+        "D": jnp.ones((heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_in, d), dt),
+    }
+
+
+def _causal_conv(xc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, prev=None):
+    """Depthwise causal conv. xc: (B,S,CH); w: (K,CH); prev: (B,K-1,CH) carry.
+    Returns (y (B,S,CH), new_prev (B,K-1,CH))."""
+    B, S, CH = xc.shape
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((B, K - 1, CH), xc.dtype)
+    full = jnp.concatenate([prev, xc], axis=1)  # (B, S+K-1, CH)
+    y = jnp.zeros((B, S, CH), jnp.float32)
+    for i in range(K):
+        y = y + full[:, i : i + S].astype(jnp.float32) * w[i]
+    y = y + b
+    return jax.nn.silu(y).astype(xc.dtype), full[:, -(K - 1) :]
+
+
+def ssd_chunked(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A_log: jnp.ndarray,
+    B_: jnp.ndarray,
+    C_: jnp.ndarray,
+    D: jnp.ndarray,
+    state0: jnp.ndarray,
+    chunk: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,H,P); dt: (B,S,H); B_/C_: (B,S,Ns); D,A_log: (H,);
+    state0: (B,H,P,Ns). Returns (y (B,S,H,P), state)."""
+    Bb, S, H, P = x.shape
+    Ns = B_.shape[-1]
+    Cs = min(chunk, S)
+    pad = (-S) % Cs
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((Bb, pad, H, P), x.dtype)], 1)
+        dt = jnp.concatenate([dt, jnp.zeros((Bb, pad, H), dt.dtype)], 1)
+        B_ = jnp.concatenate([B_, jnp.zeros((Bb, pad, Ns), B_.dtype)], 1)
+        C_ = jnp.concatenate([C_, jnp.zeros((Bb, pad, Ns), C_.dtype)], 1)
+    Sp = S + pad
+    n = Sp // Cs
+    xc = x.reshape(Bb, n, Cs, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bb, n, Cs, H).astype(jnp.float32)
+    Bc = B_.reshape(Bb, n, Cs, Ns).astype(jnp.float32)
+    Cc = C_.reshape(Bb, n, Cs, Ns).astype(jnp.float32)
+    neg_A = -jnp.exp(A_log.astype(jnp.float32))  # (H,)
+
+    tri_incl = (jnp.arange(Cs)[None, :] <= jnp.arange(Cs)[:, None]).astype(jnp.float32)
+
+    def body(state, xs):
+        xb, dtb, Bb_, Cb = xs  # (B,C,H,P), (B,C,H), (B,C,Ns), (B,C,Ns)
+        dlog = dtb * neg_A[None, None]  # log decay per step, (B,C,H)
+        la = jnp.cumsum(dlog, axis=1)  # inclusive
+        la_end = la[:, -1:]  # (B,1,H)
+        # intra-chunk: scores[b,h,i,j] = exp(la_i - la_j) * (C_i . B_j), j <= i
+        dec = jnp.exp(la[:, :, None, :] - la[:, None, :, :])  # (B,Ci,Cj,H)
+        cb = jnp.einsum("bis,bjs->bij", Cb, Bb_)  # (B,Ci,Cj)
+        scores = cb[..., None] * dec * tri_incl[None, :, :, None]
+        dtx = xb * dtb[..., None]  # (B,C,H,P)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, dtx)
+        # inter-chunk from incoming state
+        y_inter = jnp.exp(la)[..., None] * jnp.einsum("bhps,bis->bihp", state, Cb)
+        y = y_intra + y_inter + D[None, None, :, None] * xb
+        # state update
+        k_dec = dtx * jnp.exp(la_end - la)[..., None]  # (B,C,H,P)
+        state = jnp.exp(la_end[:, 0])[..., None, None] * state + jnp.einsum(
+            "bjhp,bjs->bhps", k_dec, Bb_
+        )
+        return state, y
+
+    xs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        dtc.transpose(1, 0, 2, 3),
+        Bc.transpose(1, 0, 2, 3),
+        Cc.transpose(1, 0, 2, 3),
+    )
+    state, ys = jax.lax.scan(body, state0.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, Sp, H, P)[:, :S]
+    return y, state
+
+
+def ssd_step(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A_log: jnp.ndarray,
+    B_: jnp.ndarray,
+    C_: jnp.ndarray,
+    D: jnp.ndarray,
+    state: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One step. x: (B,H,P); dt: (B,H); B_/C_: (B,Ns); state: (B,H,P,Ns)."""
+    x = x.astype(jnp.float32)
+    a = jnp.exp(-dt.astype(jnp.float32) * jnp.exp(A_log.astype(jnp.float32)))  # (B,H)
+    dtx = x * dt[..., None]
+    state = a[..., None, None] * state + dtx[..., None] * B_[:, None, None, :]
+    y = jnp.einsum("bhps,bs->bhp", state, C_) + D[None, :, None] * x
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Block-level forward
+# ---------------------------------------------------------------------------
+
+
+def mamba_forward(
+    cfg,
+    p: Params,
+    x: jnp.ndarray,
+    state0: jnp.ndarray,
+    conv_prev: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D); state0: (B,H,P,Ns). Returns (y, state, conv_carry)."""
+    B, S, D = x.shape
+    s = cfg.ssm
+    d_in, heads, conv_ch = mamba_dims(cfg)
+    proj = x @ p["in_proj"]  # (B,S,2*d_in+2*Ns+H)
+    z, xin, Bc, Cc, dt_raw = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + s.state_dim, 2 * d_in + 2 * s.state_dim], -1
+    )
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, conv_carry = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_prev)
+    xin, Bc, Cc = jnp.split(conv_out, [d_in, d_in + s.state_dim], -1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    xh = xin.reshape(B, S, heads, s.head_dim)
+    y, state = ssd_chunked(
+        xh, dt, p["A_log"], Bc, Cc, p["D"], state0, chunk=s.chunk_size
+    )
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["out_proj"], state, conv_carry
+
+
+def mamba_step(
+    cfg, p: Params, x: jnp.ndarray, state: jnp.ndarray, conv_prev: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Decode step. x: (B,D); conv_prev: (B,K-1,CH)."""
+    B, D = x.shape
+    s = cfg.ssm
+    d_in, heads, conv_ch = mamba_dims(cfg)
+    proj = x @ p["in_proj"]
+    z, xin, Bc, Cc, dt_raw = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + s.state_dim, 2 * d_in + 2 * s.state_dim], -1
+    )
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)  # (B, CH)
+    K = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_prev, conv_in[:, None]], axis=1)  # (B,K,CH)
+    conv_out = jnp.sum(window.astype(jnp.float32) * p["conv_w"][None], axis=1)
+    conv_out = jax.nn.silu(conv_out + p["conv_b"]).astype(x.dtype)
+    xin, Bc, Cc = jnp.split(conv_out, [d_in, d_in + s.state_dim], -1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    xh = xin.reshape(B, heads, s.head_dim)
+    y, state = ssd_step(xh, dt, p["A_log"], Bc, Cc, p["D"], state)
+    y = y.reshape(B, d_in)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["out_proj"], state, window[:, 1:]

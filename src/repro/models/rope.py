@@ -1,0 +1,81 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+Positions are explicit everywhere (no hidden state), so prefill, decode and
+chunked execution all share the same code path.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> Tuple:
+    """positions: (...,) int32 -> cos/sin of shape positions.shape + (head_dim/2,)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, hd); cos/sin: (B, S, half) -> broadcast over heads.
+
+    Uses the 'split-half' convention (x = [x1, x2]) matching Llama/Qwen.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    out1 = x1 * c - x2 * s
+    out2 = x2 * c + x1 * s
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def mrope_sections(head_dim: int) -> Tuple[int, int, int]:
+    """Qwen2-VL splits the half-dims into (temporal, height, width) sections.
+
+    For hd=128 (half=64) the reference split is (16, 24, 24); we generalize
+    to (half/4, 3*half/8, 3*half/8).
+    """
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    w = half - t - h
+    return t, h, w
+
+
+def mrope_angles(positions_3d: jnp.ndarray, head_dim: int, theta: float) -> Tuple:
+    """positions_3d: (3, B, S) [temporal, height, width] -> (cos, sin) (B,S,half).
+
+    Each frequency band takes its angle from the section's position stream.
+    """
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # angles per stream: (3, B, S, half)
+    ang = positions_3d.astype(jnp.float32)[..., None] * freqs
+    t, h, w = mrope_sections(head_dim)
+    sec = jnp.concatenate(
+        [
+            ang[0, ..., :t],
+            ang[1, ..., t : t + h],
+            ang[2, ..., t + h :],
+        ],
+        axis=-1,
+    )  # (B, S, half)
+    return jnp.cos(sec), jnp.sin(sec)
+
+
+def positions_for_rope(cfg, positions: jnp.ndarray, head_dim: int):
+    """Dispatch rope/mrope/none. positions: (B,S) int32 or (3,B,S) for mrope.
+
+    Returns (cos, sin) or (None, None) for rope_type == 'none'.
+    """
+    if cfg.rope_type == "none":
+        return None, None
+    if cfg.rope_type == "mrope":
+        if positions.ndim == 2:  # text-only: replicate across the 3 streams
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return mrope_angles(positions, head_dim, cfg.rope_theta)
+    return rope_angles(positions, head_dim, cfg.rope_theta)

@@ -1,0 +1,247 @@
+"""RWKV6 ("Finch") blocks: time-mix with data-dependent decay + channel-mix.
+
+TPU adaptation: GPU RWKV kernels use warp-level primitives for the wkv
+recurrence; here we use the *chunked parallel form* — intra-chunk work is
+dense matmuls (MXU-friendly), inter-chunk state passes through a short
+``lax.scan`` — the standard TPU factorization of a linear recurrence.
+kernels/rwkv6.py implements the same chunking as a Pallas kernel.
+
+Recurrence (per head, key-dim n, value-dim m):
+    y_t = r_t^T (S_t + diag(u) k_t v_t^T)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T
+with w_t = exp(-exp(w_base + lora(x^w_t))) in (0, 1), data-dependent.
+
+Chunked factorization (chunk c, within-chunk cumulative log-decay la):
+    y_intra[i] = sum_{j<i} (r_i * exp(la_{i-1} - la_j)) . k_j  v_j
+               + (sum_n r u k)_i v_i
+    y_inter[i] = (r_i * exp(la_{i-1})) @ S0
+    S' = diag(exp(la_C)) S0 + sum_j (k_j * exp(la_C - la_j)) v_j^T
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    Params,
+    dense_init,
+    dtype_of,
+    layer_norm,
+    split_keys,
+    token_shift,
+)
+
+LORA_DIM = 64
+
+
+def rwkv_init(cfg, key) -> Params:
+    d = cfg.d_model
+    s = cfg.ssm
+    heads = d // s.head_dim
+    dt = dtype_of(cfg.param_dtype)
+    ks = split_keys(key, 12)
+    p: Params = {
+        # time-mix
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d,), 0.5, jnp.float32),
+        "mix_g": jnp.full((d,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "wr": dense_init(ks[0], (d, d), dt),
+        "wk": dense_init(ks[1], (d, d), dt),
+        "wv": dense_init(ks[2], (d, d), dt),
+        "wg": dense_init(ks[3], (d, d), dt),
+        "wo": dense_init(ks[4], (d, d), dt),
+        "w_base": jnp.full((d,), -4.6, jnp.float32),  # decay ~ exp(-0.01)
+        "w_lora_a": dense_init(ks[5], (d, LORA_DIM), jnp.float32, scale=0.01),
+        "w_lora_b": dense_init(ks[6], (LORA_DIM, d), jnp.float32, scale=0.01),
+        "bonus": dense_init(ks[7], (heads, s.head_dim), jnp.float32, scale=0.1),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),
+        "ln_x_bias": jnp.zeros((d,), jnp.float32),
+        # channel-mix
+        "mix_ck": jnp.full((d,), 0.5, jnp.float32),
+        "mix_cr": jnp.full((d,), 0.5, jnp.float32),
+        "ck": dense_init(ks[8], (d, cfg.d_ff), dt),
+        "cv": dense_init(ks[9], (cfg.d_ff, d), dt),
+        "cr": dense_init(ks[10], (d, d), dt),
+    }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# wkv6 core: chunked parallel form + recurrent step
+# ---------------------------------------------------------------------------
+
+
+def wkv6_chunked(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w_log: jnp.ndarray,
+    u: jnp.ndarray,
+    state0: jnp.ndarray,
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,v,w_log: (B,S,H,N); u: (H,N); state0: (B,H,N,N) -> (y, state)."""
+    B, S, H, N = r.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        z = jnp.zeros((B, pad, H, N), r.dtype)
+        r = jnp.concatenate([r, z], 1)
+        k = jnp.concatenate([k, z], 1)
+        v = jnp.concatenate([v, z], 1)
+        w_log = jnp.concatenate([w_log, jnp.zeros((B, pad, H, N), w_log.dtype)], 1)
+    Sp = S + pad
+    n = Sp // C
+    rc = r.reshape(B, n, C, H, N).astype(jnp.float32)
+    kc = k.reshape(B, n, C, H, N).astype(jnp.float32)
+    vc = v.reshape(B, n, C, H, N).astype(jnp.float32)
+    wc = w_log.reshape(B, n, C, H, N).astype(jnp.float32)
+
+    tri_excl = (jnp.arange(C)[None, :] < jnp.arange(C)[:, None]).astype(jnp.float32)
+
+    def body(state, xs):
+        rb, kb, vb, wb = xs  # (B, C, H, N)
+        la = jnp.cumsum(wb, axis=1)  # inclusive cumulative log decay
+        la_prev = la - wb  # A_{t-1}
+        la_end = la[:, -1:]  # (B,1,H,N)
+        q_t = rb * jnp.exp(la_prev)
+        k_t = kb * jnp.exp(-la)
+        scores = jnp.einsum("bihn,bjhn->bhij", q_t, k_t)
+        scores = scores * tri_excl[None, None]
+        y_intra = jnp.einsum("bhij,bjhn->bihn", scores, vb)
+        diag_c = jnp.sum(rb * u[None, None] * kb, axis=-1, keepdims=True)  # (B,C,H,1)
+        y_diag = diag_c * vb
+        y_inter = jnp.einsum("bihn,bhnm->bihm", q_t, state)
+        y = y_intra + y_diag + y_inter
+        k_dec = kb * jnp.exp(la_end - la)
+        state = jnp.exp(la_end[:, 0])[..., None] * state + jnp.einsum(
+            "bjhn,bjhm->bhnm", k_dec, vb
+        )
+        return state, y
+
+    xs = (
+        rc.transpose(1, 0, 2, 3, 4),
+        kc.transpose(1, 0, 2, 3, 4),
+        vc.transpose(1, 0, 2, 3, 4),
+        wc.transpose(1, 0, 2, 3, 4),
+    )
+    state, ys = jax.lax.scan(body, state0.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, N)[:, :S]
+    return y, state
+
+
+def wkv6_step(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w_log: jnp.ndarray,
+    u: jnp.ndarray,
+    state: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One recurrent step. r,k,v,w_log: (B,H,N); state: (B,H,N,N)."""
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w = jnp.exp(w_log.astype(jnp.float32))
+    # y = r @ (S + u k v^T)
+    y = jnp.einsum("bhn,bhnm->bhm", r, state)
+    coef = jnp.sum(r * u[None] * k, axis=-1, keepdims=True)  # (B,H,1)
+    y = y + coef * v
+    state = w[..., None] * state + k[..., None] * v[..., None, :]
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Block-level forward
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(x, x_shift, mix):
+    return x + (x_shift - x) * mix.astype(x.dtype)
+
+
+def rwkv_time_mix(
+    cfg,
+    p: Params,
+    x: jnp.ndarray,
+    state0: jnp.ndarray,
+    x_prev: Optional[jnp.ndarray],
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D); state0: (B,H,N,N); x_prev: (B,D) shift carry.
+    Returns (y, state, new_x_prev)."""
+    B, S, D = x.shape
+    s = cfg.ssm
+    H, N = D // s.head_dim, s.head_dim
+    xs = token_shift(x, x_prev)
+    xr = _ddlerp(x, xs, p["mix_r"])
+    xk = _ddlerp(x, xs, p["mix_k"])
+    xv = _ddlerp(x, xs, p["mix_v"])
+    xg = _ddlerp(x, xs, p["mix_g"])
+    xw = _ddlerp(x, xs, p["mix_w"])
+    r = (xr @ p["wr"]).reshape(B, S, H, N)
+    k = (xk @ p["wk"]).reshape(B, S, H, N)
+    v = (xv @ p["wv"]).reshape(B, S, H, N)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay (Finch): w = exp(-exp(base + lora))
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    w_log = -jnp.exp(p["w_base"][None, None] + lora)  # (B,S,D), negative
+    w_log = jnp.clip(w_log, -8.0, -1e-5).reshape(B, S, H, N)
+
+    y, state = wkv6_chunked(r, k, v, w_log, p["bonus"], state0, chunk=s.chunk_size)
+    y = y.reshape(B, S, D)
+    # per-head group norm
+    yh = y.reshape(B, S, H, N)
+    yh = layer_norm(yh, None, None)
+    y = yh.reshape(B, S, D) * p["ln_x_scale"] + p["ln_x_bias"]
+    y = (y.astype(x.dtype) * g) @ p["wo"]
+    return y, state, x[:, -1]
+
+
+def rwkv_time_mix_step(
+    cfg, p: Params, x: jnp.ndarray, state: jnp.ndarray, x_prev: jnp.ndarray
+):
+    """Decode step. x: (B,D). Returns (y (B,D), state, new_x_prev)."""
+    B, D = x.shape
+    s = cfg.ssm
+    H, N = D // s.head_dim, s.head_dim
+    xr = _ddlerp(x, x_prev, p["mix_r"])
+    xk = _ddlerp(x, x_prev, p["mix_k"])
+    xv = _ddlerp(x, x_prev, p["mix_v"])
+    xg = _ddlerp(x, x_prev, p["mix_g"])
+    xw = _ddlerp(x, x_prev, p["mix_w"])
+    r = (xr @ p["wr"]).reshape(B, H, N)
+    k = (xk @ p["wk"]).reshape(B, H, N)
+    v = (xv @ p["wv"]).reshape(B, H, N)
+    g = jax.nn.silu(xg @ p["wg"])
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    w_log = -jnp.exp(p["w_base"][None] + lora)
+    w_log = jnp.clip(w_log, -8.0, -1e-5).reshape(B, H, N)
+    y, state = wkv6_step(r, k, v, w_log, p["bonus"], state)
+    yh = layer_norm(y.reshape(B, H, N), None, None)
+    y = yh.reshape(B, D) * p["ln_x_scale"] + p["ln_x_bias"]
+    y = (y.astype(x.dtype) * g) @ p["wo"]
+    return y, state, x
+
+
+def rwkv_channel_mix(
+    cfg, p: Params, x: jnp.ndarray, x_prev: Optional[jnp.ndarray]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D) (or (B,D) with x_prev for decode). Returns (y, new_x_prev)."""
+    if x.ndim == 2:
+        xs = x_prev
+        xk = _ddlerp(x, xs, p["mix_ck"])
+        xr = _ddlerp(x, xs, p["mix_cr"])
+        kk = jax.nn.relu(xk @ p["ck"])
+        y = jax.nn.sigmoid(xr @ p["cr"]) * ((kk * kk) @ p["cv"])
+        return y, x
+    xs = token_shift(x, x_prev)
+    xk = _ddlerp(x, xs, p["mix_ck"])
+    xr = _ddlerp(x, xs, p["mix_cr"])
+    kk = jax.nn.relu(xk @ p["ck"])
+    y = jax.nn.sigmoid(xr @ p["cr"]) * ((kk * kk) @ p["cv"])
+    return y, x[:, -1]

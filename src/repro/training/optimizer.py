@@ -1,0 +1,127 @@
+"""Optimizers: AdamW (sharded states) and Adafactor-mini.
+
+Pure-pytree implementation (no optax dependency): state is a pytree with the
+same structure/sharding as the params, so FSDP sharding of optimizer state
+falls out of ``param_pspecs`` for free (ZeRO-style).
+
+``optimizer_dtype`` from the ShardingProfile controls m/v precision —
+bf16 states for trillion-param MoE (kimi-k2) to fit v5e HBM.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> Dict[str, Any]:
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    params: Any, grads: Any, state: Dict[str, Any], cfg: AdamWConfig
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mhat = m32 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v32 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        newp = p.astype(jnp.float32) - cfg.lr * delta
+        return newp.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor-mini: factored second moment (memory-lean alternative)
+# ---------------------------------------------------------------------------
+
+
+def adafactor_init(params: Any) -> Dict[str, Any]:
+    def fac(p):
+        if p.ndim >= 2:
+            return {
+                "r": jnp.zeros(p.shape[:-1], jnp.float32),
+                "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "vs": jax.tree.map(fac, params, is_leaf=lambda x: hasattr(x, "shape")),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, state, lr: float = 1e-3, eps: float = 1e-30):
+    step = state["step"] + 1
+    beta = 1.0 - step.astype(jnp.float32) ** -0.8
+
+    def upd(p, g, v):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if p.ndim >= 2:
+            r = beta * v["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            c = beta * v["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = (
+                r[..., None]
+                * c[..., None, :]
+                / jnp.maximum(jnp.mean(r, axis=-1, keepdims=True)[..., None], eps)
+            )
+            upd_ = g * jax.lax.rsqrt(denom + eps)
+            newv = {"r": r, "c": c}
+        else:
+            nv = beta * v["v"] + (1 - beta) * g2
+            upd_ = g * jax.lax.rsqrt(nv + eps)
+            newv = {"v": nv}
+        newp = p.astype(jnp.float32) - lr * upd_
+        return newp.astype(p.dtype), newv
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    vs_list = treedef.flatten_up_to(state["vs"])
+    out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, vs_list)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_vs = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_p, {"vs": new_vs, "step": step}

@@ -1,0 +1,95 @@
+"""Training step: loss, grads, optimizer update — with optional
+vocab-chunked cross-entropy (memory) and gradient accumulation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.training.optimizer import AdamWConfig, adamw_update
+
+
+def cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, *, chunk_vocab: int = 0
+) -> jnp.ndarray:
+    """Mean token NLL. logits (B,S,V) any dtype; labels (B,S) int32.
+
+    ``chunk_vocab`` > 0 computes logsumexp in vocab chunks to bound the fp32
+    temp footprint (perf knob used by the hillclimb).
+    """
+    lg = logits.astype(jnp.float32)
+    if chunk_vocab and logits.shape[-1] > chunk_vocab:
+        V = logits.shape[-1]
+        n = -(-V // chunk_vocab)
+        m = jnp.full(lg.shape[:-1], -jnp.inf, jnp.float32)
+        for i in range(n):
+            m = jnp.maximum(m, jnp.max(lg[..., i * chunk_vocab : (i + 1) * chunk_vocab], -1))
+        s = jnp.zeros(lg.shape[:-1], jnp.float32)
+        for i in range(n):
+            s = s + jnp.sum(
+                jnp.exp(lg[..., i * chunk_vocab : (i + 1) * chunk_vocab] - m[..., None]), -1
+            )
+        lse = m + jnp.log(s)
+    else:
+        lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(cfg, params, batch: Dict[str, jnp.ndarray], ctx=None) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux, _ = lm.forward(cfg, params, batch, ctx)
+    nll = cross_entropy(logits, batch["labels"])
+    return nll + aux, {"nll": nll, "aux": aux}
+
+
+def make_train_step(cfg, opt_cfg: Optional[AdamWConfig] = None, ctx=None, microbatch: int = 0):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        if microbatch and microbatch > 1:
+            # gradient accumulation over microbatches via scan
+            def split(x):
+                b = x.shape[0] if x.ndim and x.shape[0] != 3 else None
+                return x
+
+            B = batch["labels"].shape[0]
+            mb = B // microbatch
+
+            def reshard(x):
+                if x.ndim >= 1 and x.shape[0] == B:
+                    return x.reshape(microbatch, mb, *x.shape[1:])
+                if x.ndim == 3 and x.shape[0] == 3:  # vlm positions (3,B,S)
+                    return x.reshape(3, microbatch, mb, x.shape[2]).transpose(1, 0, 2, 3)
+                return jnp.broadcast_to(x, (microbatch,) + x.shape)
+
+            mbatches = jax.tree.map(reshard, batch)
+
+            def accum(carry, mb_batch):
+                if "positions" in mb_batch and mb_batch["positions"].shape[0] == 3:
+                    pass
+                (l, m), g = jax.value_and_grad(
+                    lambda p: loss_fn(cfg, p, mb_batch, ctx), has_aux=True
+                )(params)
+                carry = jax.tree.map(lambda a, b: a + b, carry, g)
+                return carry, l
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(accum, zero, mbatches)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = jnp.mean(losses)
+            metrics = {"loss": loss}
+        else:
+            (loss, m), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch, ctx), has_aux=True
+            )(params)
+            metrics = {"loss": loss, **m}
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 device.
+# Multi-device tests spawn subprocesses with their own flags.
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+
+    return jax.random.PRNGKey(0)

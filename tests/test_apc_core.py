@@ -1,0 +1,202 @@
+"""APC control-plane unit tests: cache, templates, keyword, fuzzy,
+distributed cache, speculative prefetch."""
+
+import numpy as np
+import pytest
+
+from repro.core import fuzzy
+from repro.core.cache import PlanCache
+from repro.core.distributed_cache import DistributedPlanCache, HashRing
+from repro.core.speculative import KeywordPredictor, SpeculativePrefetcher
+from repro.core.template import (
+    ExecutionLog,
+    PlanTemplate,
+    generalize,
+    instantiate,
+    make_template,
+    rule_filter,
+)
+
+
+# -- PlanCache ---------------------------------------------------------------
+
+
+def test_lru_eviction_order():
+    c = PlanCache(capacity=3)
+    for k in "abc":
+        c.insert(k, k)
+    c.lookup("a")  # touch a -> b is now LRU
+    c.insert("d", "d")
+    assert "b" not in c and "a" in c and len(c) == 3
+    assert c.stats.evictions == 1
+
+
+def test_exact_matching_no_false_positives():
+    c = PlanCache(capacity=10)
+    c.insert("working capital ratio", 1)
+    assert c.lookup("working capital ratios") is None  # near-miss must miss
+    assert c.lookup("working capital ratio") == 1
+
+
+def test_fuzzy_matching_hits_near_keywords():
+    c = PlanCache(capacity=10, fuzzy=True, fuzzy_threshold=0.7)
+    c.insert("working capital ratio", 1)
+    assert c.lookup("working capital ratio calculation") == 1
+    assert c.lookup("orbital mechanics of jupiter") is None
+
+
+def test_cache_serialization_roundtrip():
+    c = PlanCache(capacity=5)
+    for i in range(4):
+        c.insert(f"k{i}", {"v": i})
+    c2 = PlanCache.from_state(c.to_state())
+    assert sorted(c2.keys()) == sorted(c.keys())
+    assert c2.lookup("k2") == {"v": 2}
+
+
+def test_ttl_expiry():
+    c = PlanCache(capacity=5, ttl_s=0.0)
+    c.insert("k", 1)
+    assert c.lookup("k") is None  # instantly stale
+
+
+# -- templates ---------------------------------------------------------------
+
+
+def _mklog():
+    log = ExecutionLog(task_query="What is FY2019 working capital ratio for Costco?")
+    log.append(
+        {
+            "message": "Please provide total_current_assets, total_current_liabilities "
+            "for Costco. Here is a very long chain of thought that should be dropped.",
+            "op": {"retrieve": ["total_current_assets", "total_current_liabilities"],
+                   "scope": {"company": "Costco", "year": "2019"}},
+        },
+        {"values": {"total_current_assets": 23485.0, "total_current_liabilities": 23237.0}},
+    )
+    log.final_answer = {
+        "answer_text": "The answer is 1.01.",
+        "op": {"compute": "a / b", "value": 1.01},
+    }
+    return log
+
+
+def test_rule_filter_drops_verbosity():
+    steps = rule_filter(_mklog())
+    kinds = [s.kind for s in steps]
+    assert kinds == ["message", "output", "answer"]
+    assert "chain of thought" not in steps[0].content
+
+
+def test_generalize_strips_slots_and_numbers():
+    tpl = make_template(_mklog(), "working capital ratio",
+                        {"company": "Costco", "year": "2019"})
+    text = " ".join(s.content for s in tpl.steps) + str(
+        [s.op for s in tpl.steps]
+    )
+    assert "Costco" not in text
+    assert "{company}" in text
+    assert tpl.answer_step().op["compute"] == "a / b"
+
+
+def test_instantiate_fills_new_slots():
+    tpl = make_template(_mklog(), "working capital ratio",
+                        {"company": "Costco", "year": "2019"})
+    step = tpl.message_steps()[0]
+    op = instantiate(step.op, {"company": "Best Buy", "year": "2021"})
+    assert op["scope"]["company"] == "Best Buy"
+    assert "Costco" not in str(op)
+
+
+def test_generalize_miss_slot_leaks():
+    """A generalization miss (lightweight-LM failure mode) leaves the slot
+    baked in — the paper's bad-template hazard."""
+    tpl = make_template(_mklog(), "working capital ratio",
+                        {"company": "Costco", "year": "2019"},
+                        miss_slots=["company"])
+    assert "Costco" in str([s.op for s in tpl.steps]) + " ".join(
+        s.content for s in tpl.steps
+    )
+
+
+# -- fuzzy embedding ----------------------------------------------------------
+
+
+def test_embed_deterministic_and_normalized():
+    e1, e2 = fuzzy.embed("mean calculation"), fuzzy.embed("mean calculation")
+    assert np.allclose(e1, e2)
+    assert abs(np.linalg.norm(e1) - 1.0) < 1e-5
+
+
+def test_similarity_orders_sensibly():
+    close = fuzzy.similarity("working capital ratio", "working capital ratio analysis")
+    far = fuzzy.similarity("working capital ratio", "video dialogue transcripts")
+    assert close > far + 0.2
+
+
+# -- distributed cache ---------------------------------------------------------
+
+
+def test_ring_minimal_movement():
+    ring = HashRing(vnodes=64)
+    for i in range(4):
+        ring.add(f"n{i}")
+    keys = [f"key-{i}" for i in range(500)]
+    before = {k: ring.nodes_for(k, 1)[0] for k in keys}
+    ring.add("n4")
+    after = {k: ring.nodes_for(k, 1)[0] for k in keys}
+    moved = sum(before[k] != after[k] for k in keys)
+    assert moved < len(keys) * 0.45  # ~1/5 expected, allow slack
+
+
+def test_distributed_cache_survives_node_failure():
+    dc = DistributedPlanCache(4, replication=2, capacity_per_node=64)
+    for i in range(40):
+        dc.insert(f"kw-{i}", i)
+    dc.mark_down("cache-2")
+    assert all(dc.lookup(f"kw-{i}") == i for i in range(40))
+
+
+def test_distributed_cache_data_loss_without_replication():
+    dc = DistributedPlanCache(4, replication=1, capacity_per_node=64)
+    for i in range(40):
+        dc.insert(f"kw-{i}", i)
+    dc.mark_down("cache-1")
+    hits = sum(dc.lookup(f"kw-{i}") is not None for i in range(40))
+    assert hits < 40  # r=1 must lose the downed node's keys
+
+
+def test_graceful_remove_rehomes_keys():
+    dc = DistributedPlanCache(4, replication=1, capacity_per_node=64)
+    for i in range(30):
+        dc.insert(f"kw-{i}", i)
+    dc.remove_node("cache-0")
+    assert all(dc.lookup(f"kw-{i}") == i for i in range(30))
+
+
+# -- speculative prefetch -------------------------------------------------------
+
+
+def test_keyword_predictor_learns_bigram():
+    p = KeywordPredictor()
+    for _ in range(5):
+        p.observe("a")
+        p.observe("b")
+    p.observe("a")
+    assert p.predict() == ["b"]
+
+
+def test_prefetcher_touches_lru():
+    cache = PlanCache(capacity=2)
+    cache.insert("b", 2)
+    cache.insert("c", 3)
+    pred = KeywordPredictor()
+    pf = SpeculativePrefetcher(cache, pred)
+    for _ in range(3):
+        pf.on_request("a")
+        pf.on_request("b")
+    # 'b' predicted after 'a' -> touched -> should survive an insert
+    pf.on_request("a")
+    cache.insert("d", 4)
+    assert "b" in cache
+    assert pf.prefetches > 0

@@ -1,0 +1,54 @@
+"""Second agent architecture (paper §4.2: Open Deep Research on GAIA) +
+cache pre-warming (paper §4.5)."""
+
+from repro.core.deep_research import run_deep_research
+from repro.core.harness import run_workload
+
+
+def test_deep_research_apc_cuts_cost_on_gaia():
+    """Paper Table 1: GAIA $69.02 -> $16.27 (-76%) with ~no accuracy loss.
+    Direction + accuracy-preservation asserted (cost scale differs: our
+    synthetic GAIA has shorter trajectories)."""
+    base = run_deep_research("gaia", 120, use_apc=False)
+    apc = run_deep_research("gaia", 120, use_apc=True)
+    assert apc["cost"] < base["cost"]
+    assert apc["accuracy"] > base["accuracy"] - 0.06
+    assert apc["hit_rate"] > 0.2  # re-planning skeletons DO recur
+    assert base["hit_rate"] == 0.0
+
+
+def test_deep_research_works_on_recurring_workloads_too():
+    r = run_deep_research("tabmwp", 80, use_apc=True)
+    assert r["hit_rate"] > 0.4  # dense intent space -> high reuse
+    assert r["accuracy"] > 0.6
+
+
+def test_prewarm_eliminates_cold_start():
+    """Paper §4.5: pre-populating the cache with offline samples."""
+    from repro.configs.apc_minion import DEFAULT
+    from repro.core.agent_loop import AgentConfig, PlanActAgent
+    from repro.core.backends import SimulatedBackend
+    from repro.core.cost_model import CostLedger
+    from repro.envs.workloads import get_env
+
+    env = get_env("tabmwp")
+    offline = env.generate(60, seed=99)  # offline sample set
+    online = env.generate(40, seed=1)
+
+    def make_agent():
+        return PlanActAgent(
+            SimulatedBackend(seed=0),
+            CostLedger(pricing_map=dict(DEFAULT.pricing)),
+            AgentConfig(method="apc"),
+        )
+
+    cold = make_agent()
+    cold_recs = [cold.run_task(t) for t in online]
+    warm = make_agent()
+    inserted = warm.prewarm(offline)
+    assert inserted > 10
+    warm_recs = [warm.run_task(t) for t in online]
+    hr = lambda rs: sum(r.hit for r in rs) / len(rs)
+    assert hr(warm_recs) > hr(cold_recs) + 0.25  # cold start mitigated
+    acc = sum(r.correct for r in warm_recs) / len(warm_recs)
+    assert acc > 0.6

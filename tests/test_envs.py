@@ -1,0 +1,60 @@
+"""Environment + judge semantics."""
+
+import math
+
+import pytest
+
+from repro.envs.base import execute_compute, execute_retrieve, gt_for, judge
+from repro.envs.workloads import ALL_ENVS, get_env
+
+
+@pytest.mark.parametrize("env_name", ALL_ENVS)
+def test_generation_valid(env_name):
+    env = get_env(env_name)
+    tasks = env.generate(30, seed=1)
+    assert len(tasks) == 30
+    for t in tasks:
+        assert math.isfinite(t.gt_answer)
+        assert t.intent.keyword
+        assert "{" not in t.query  # all slots filled
+        # every required field exists in the context
+        for f in t.intent.all_fields:
+            assert f in t.context, (env_name, t.intent.id, f)
+        # gt recomputes
+        assert gt_for(t.intent, t.context) == t.gt_answer
+
+
+def test_interpreter_retrieve_and_compute():
+    ctx = {"a_field": 10.0, "b_field": 4.0}
+    vals = execute_retrieve({"retrieve": ["a_field", "b_field", "missing"]}, ctx)
+    assert vals == {"a_field": 10.0, "b_field": 4.0}
+    assert execute_compute("a / b", {"a": 10.0, "b": 4.0}) == 2.5
+    assert execute_compute("__import__('os')", {}) is None  # sandboxed
+    assert execute_compute("a +", {"a": 1.0}) is None
+
+
+def test_judge_rules():
+    assert judge(1.01, 1.01)
+    assert judge(1.0152, 1.01)  # <2% slack... actually 0.5%
+    assert judge(101.0, 1.01)  # percent form
+    assert not judge(2.0, 1.01)
+    assert not judge(None, 1.0)
+    assert not judge(float("nan"), 1.0)
+    assert judge(0.0, 0.0)
+
+
+def test_intent_diversity_drives_hit_rates():
+    """gaia must have far more distinct intents per task than financebench."""
+    gaia = get_env("gaia")
+    fin = get_env("financebench")
+    g_tasks = gaia.generate(100, seed=0)
+    f_tasks = fin.generate(100, seed=0)
+    g_uniq = len({t.intent.id for t in g_tasks})
+    f_uniq = len({t.intent.id for t in f_tasks})
+    assert g_uniq > f_uniq
+
+
+def test_context_token_ranges():
+    fin = get_env("financebench").generate(10, seed=0)
+    tab = get_env("tabmwp").generate(10, seed=0)
+    assert min(t.context_tokens for t in fin) > max(t.context_tokens for t in tab)

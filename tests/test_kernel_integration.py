@@ -1,0 +1,24 @@
+"""The Pallas attention path inside the model must match the jnp path."""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import lm
+
+
+def test_model_forward_with_pallas_matches_jnp(rng_key):
+    cfg = registry.get_smoke("qwen2.5-3b")
+    cfg = dataclasses.replace(cfg, dtype="float32", param_dtype="float32")
+    p = lm.init_params(cfg, rng_key)
+    B, S = 1, 256  # S % 128 == 0 -> kernel path eligible
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    l_jnp, _, _ = lm.forward(cfg, p, {"tokens": tok})
+    cfg_k = dataclasses.replace(cfg, use_pallas=True)
+    l_ker, _, _ = lm.forward(cfg_k, p, {"tokens": tok})
+    a = np.asarray(l_jnp, np.float32)
+    b = np.asarray(l_ker, np.float32)
+    rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+    assert rel < 2e-3, rel

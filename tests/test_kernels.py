@@ -1,0 +1,118 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand(shape, dtype, k):
+    x = jax.random.normal(k, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,S,hd,bq,bk",
+    [
+        (1, 4, 4, 128, 64, 64, 64),   # MHA
+        (2, 8, 2, 256, 64, 128, 64),  # GQA 4:1
+        (1, 8, 8, 192, 32, 64, 64),   # non-pow2 seq (192 = 3*64)
+        (2, 4, 1, 128, 128, 64, 128), # MQA, wide head
+    ],
+)
+def test_flash_attention_sweep(B, Hq, Hkv, S, hd, bq, bk, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = _rand((B, S, Hq, hd), dtype, ks[0])
+    k = _rand((B, S, Hkv, hd), dtype, ks[1])
+    v = _rand((B, S, Hkv, hd), dtype, ks[2])
+    o = ops.flash_attention_op(q, k, v, block_q=bq, block_k=bk)
+    o_ref = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    ).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,M,hd,length,bk",
+    [
+        (2, 8, 2, 256, 64, 177, 64),
+        (1, 4, 4, 512, 128, 512, 128),
+        (3, 8, 1, 128, 64, 1, 64),  # single valid position
+    ],
+)
+def test_decode_attention_sweep(B, Hq, Hkv, M, hd, length, bk, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = _rand((B, 1, Hq, hd), dtype, ks[0])
+    ck = _rand((B, M, Hkv, hd), dtype, ks[1])
+    cv = _rand((B, M, Hkv, hd), dtype, ks[2])
+    o = ops.decode_attention_op(q, ck, cv, jnp.asarray(length, jnp.int32), block_k=bk)
+    o_ref = ref.decode_attention_ref(
+        q[:, 0], ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3),
+        jnp.asarray(length, jnp.int32),
+    )
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(o[:, 0], np.float32), np.asarray(o_ref, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+@pytest.mark.parametrize("S,chunk", [(64, 16), (128, 32), (96, 32)])
+@pytest.mark.parametrize("N", [16, 64])
+def test_wkv6_sweep(S, chunk, N):
+    B, H = 2, 3
+    ks = jax.random.split(KEY, 5)
+    r = _rand((B, S, H, N), jnp.float32, ks[0]) * 0.5
+    k = _rand((B, S, H, N), jnp.float32, ks[1]) * 0.5
+    v = _rand((B, S, H, N), jnp.float32, ks[2]) * 0.5
+    w = -jnp.exp(_rand((B, S, H, N), jnp.float32, ks[3]) * 0.5 - 2.0)
+    u = _rand((H, N), jnp.float32, ks[4]) * 0.3
+    if S % chunk:
+        pytest.skip("kernel requires divisibility")
+    y, st = ops.wkv6_op(r, k, v, w, u, chunk=chunk)
+    y_ref, st_ref = ref.rwkv6_ref(r, k, v, w, u, jnp.zeros((B, H, N, N)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("S,chunk,P,Ns", [(64, 16, 32, 16), (128, 64, 64, 64)])
+def test_ssd_sweep(S, chunk, P, Ns):
+    B, H = 2, 3
+    ks = jax.random.split(KEY, 4)
+    x = _rand((B, S, H, P), jnp.float32, ks[0]) * 0.5
+    dt = jax.nn.softplus(_rand((B, S, H), jnp.float32, ks[1]))
+    A_log = jnp.zeros((H,))
+    D = jnp.ones((H,))
+    Bc = _rand((B, S, Ns), jnp.float32, ks[2]) * 0.5
+    Cc = _rand((B, S, Ns), jnp.float32, ks[3]) * 0.5
+    y, st = ops.ssd_op(x, dt, A_log, Bc, Cc, D, chunk=chunk)
+    y_ref, st_ref = ref.ssd_ref(x, dt, A_log, Bc, Cc, D, jnp.zeros((B, H, P, Ns)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), atol=5e-4, rtol=1e-3)
+
+
+def test_kernels_match_model_modules():
+    """Kernel paths equal the model's chunked jnp implementations too."""
+    from repro.models.rwkv import wkv6_chunked
+
+    B, S, H, N = 1, 64, 2, 32
+    ks = jax.random.split(KEY, 5)
+    r = _rand((B, S, H, N), jnp.float32, ks[0]) * 0.5
+    k = _rand((B, S, H, N), jnp.float32, ks[1]) * 0.5
+    v = _rand((B, S, H, N), jnp.float32, ks[2]) * 0.5
+    w = -jnp.exp(_rand((B, S, H, N), jnp.float32, ks[3]) * 0.3 - 2.0)
+    u = _rand((H, N), jnp.float32, ks[4]) * 0.3
+    y_kernel, st_kernel = ops.wkv6_op(r, k, v, w, u, chunk=16)
+    y_model, st_model = wkv6_chunked(r, k, v, w, u, jnp.zeros((B, H, N, N)), chunk=16)
+    np.testing.assert_allclose(
+        np.asarray(y_kernel), np.asarray(y_model), atol=1e-4, rtol=1e-3
+    )

@@ -1,0 +1,119 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import PlanCache
+from repro.core.distributed_cache import HashRing
+from repro.envs.base import judge
+from repro.training.grad_compress import dequantize_int8, quantize_int8
+
+KW = st.text(alphabet="abcdefghij ", min_size=1, max_size=12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(KW, st.integers()), min_size=1, max_size=60),
+       st.integers(min_value=1, max_value=10))
+def test_lru_never_exceeds_capacity(ops, cap):
+    c = PlanCache(capacity=cap)
+    for k, v in ops:
+        c.insert(k, v)
+        assert len(c) <= cap
+    # most recent distinct keys must be resident
+    distinct = []
+    for k, _ in reversed(ops):
+        if k not in distinct:
+            distinct.append(k)
+    for k in distinct[:cap]:
+        assert k in c
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(KW, min_size=1, max_size=40))
+def test_cache_lookup_deterministic(keys):
+    c1, c2 = PlanCache(capacity=100), PlanCache(capacity=100)
+    for i, k in enumerate(keys):
+        c1.insert(k, i)
+        c2.insert(k, i)
+    for k in keys:
+        assert c1.lookup(k) == c2.lookup(k)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.text(alphabet="xyz123", min_size=1, max_size=8),
+                min_size=5, max_size=60, unique=True),
+       st.integers(min_value=2, max_value=6))
+def test_ring_assignment_total_and_consistent(keys, n_nodes):
+    ring = HashRing(vnodes=32)
+    for i in range(n_nodes):
+        ring.add(f"n{i}")
+    for k in keys:
+        owners = ring.nodes_for(k, 2)
+        assert 1 <= len(owners) <= min(2, n_nodes)
+        assert owners == ring.nodes_for(k, 2)  # deterministic
+        assert len(set(owners)) == len(owners)  # distinct replicas
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(min_value=-1e4, max_value=1e4,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=600))
+def test_int8_quantization_error_bound(vals):
+    x = np.asarray(vals, np.float32)
+    payload = quantize_int8(x)
+    recon = np.asarray(dequantize_int8(payload))
+    # blockwise symmetric int8: |err| <= max|block| / 127 (+eps)
+    err = np.abs(recon - x).max() if x.size else 0.0
+    bound = np.abs(x).max() / 127.0 + 1e-5 if x.size else 0.0
+    assert err <= bound * 1.5 + 1e-6
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.floats(min_value=1e-6, max_value=1e9, allow_nan=False))
+def test_judge_accepts_identity_and_unit_slips(gt):
+    assert judge(gt, gt)
+    assert judge(gt * 1.01, gt)  # within 2%
+    assert judge(gt / 100.0, gt)  # percent-vs-fraction slip
+    assert not judge(-gt, gt)  # sign errors rejected
+    assert not judge(gt * 7.0, gt)  # magnitude errors rejected
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_tokenizer_count_stable(seed):
+    from repro.data.tokenizer import HashTokenizer
+
+    t = HashTokenizer()
+    text = f"query number {seed} about working capital for company {seed % 97}"
+    ids1, ids2 = t.encode(text), t.encode(text)
+    assert ids1 == ids2
+    assert all(0 <= i < t.vocab_size for i in ids1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_env_generation_deterministic(seed):
+    from repro.envs.workloads import get_env
+
+    env = get_env("tabmwp")
+    t1 = env.generate(3, seed=seed)
+    t2 = env.generate(3, seed=seed)
+    for a, b in zip(t1, t2):
+        assert a.query == b.query and a.gt_answer == b.gt_answer
+        assert math.isfinite(a.gt_answer)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.dictionaries(st.sampled_from(["company", "year", "student"]),
+                       st.text(alphabet="ABCdef123", min_size=2, max_size=8),
+                       min_size=1, max_size=3))
+def test_generalize_then_instantiate_roundtrip(slots):
+    from repro.core.template import PlanStep, generalize, instantiate
+
+    content = "Retrieve data for " + " ".join(str(v) for v in slots.values())
+    steps = [PlanStep("message", content, {"scope": dict(slots)})]
+    gen = generalize(steps, slots)
+    inst = instantiate(gen[0].op, slots)
+    assert inst["scope"] == slots  # roundtrip restores the original bindings

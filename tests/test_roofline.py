@@ -1,0 +1,126 @@
+"""HLO cost-model correctness: the parser must recover scan-multiplied
+FLOPs/collectives that cost_analysis() undercounts."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.roofline import HloCostModel, shape_bytes, shape_dims
+
+
+def _parse(fn, *args) -> HloCostModel:
+    compiled = jax.jit(fn).lower(*args).compile()
+    return HloCostModel(compiled.as_text())
+
+
+def test_shape_parsing():
+    assert shape_bytes("f32[16,2048]{1,0}") == 16 * 2048 * 4
+    assert shape_bytes("bf16[8]") == 16
+    assert shape_bytes("(f32[2,2], s32[])") == 16 + 4
+    assert shape_dims("f32[3,4,5]{2,1,0}") == [3, 4, 5]
+    assert shape_bytes("pred[]") == 1
+
+
+def test_single_matmul_flops():
+    x = jnp.zeros((128, 256), jnp.float32)
+    w = jnp.zeros((256, 64), jnp.float32)
+    m = _parse(lambda a, b: a @ b, x, w)
+    cost = m.entry_cost()
+    assert abs(cost.flops - 2 * 128 * 256 * 64) / (2 * 128 * 256 * 64) < 0.01
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    """THE key property: scan body x trip count (cost_analysis counts once)."""
+    L = 7
+    x = jnp.zeros((64, 64), jnp.float32)
+    ws = jnp.zeros((L, 64, 64), jnp.float32)
+
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    compiled = jax.jit(f).lower(x, ws).compile()
+    raw = compiled.cost_analysis()["flops"]
+    parsed = HloCostModel(compiled.as_text()).entry_cost().flops
+    expected = L * 2 * 64**3
+    assert abs(parsed - expected) / expected < 0.05, (parsed, expected)
+    assert raw < expected / 2  # documents the undercount we correct
+
+
+def test_nested_scan_multiplies_both_levels():
+    x = jnp.zeros((32, 32), jnp.float32)
+    ws = jnp.zeros((3, 4, 32, 32), jnp.float32)
+
+    def f(x, ws):
+        def outer(c, wrow):
+            def inner(c2, w):
+                return c2 @ w, None
+            c, _ = jax.lax.scan(inner, c, wrow)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+
+    parsed = _parse(f, x, ws).entry_cost().flops
+    expected = 12 * 2 * 32**3
+    assert abs(parsed - expected) / expected < 0.1, parsed
+
+
+def test_unrolled_matches_scan_accounting():
+    x = jnp.zeros((64, 64), jnp.float32)
+    ws = jnp.zeros((5, 64, 64), jnp.float32)
+
+    def f_unroll(x, ws):
+        for i in range(5):
+            x = x @ ws[i]
+        return x
+
+    def f_scan(x, ws):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+
+    a = _parse(f_unroll, x, ws).entry_cost().flops
+    b = _parse(f_scan, x, ws).entry_cost().flops
+    assert abs(a - b) / a < 0.05
+
+
+def test_collective_bytes_from_sharded_fn():
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent(
+        """
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.roofline import HloCostModel
+        mesh = jax.make_mesh((8,), ('d',),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        sh = NamedSharding(mesh, P('d', None))
+        rep = NamedSharding(mesh, P())
+        x = jax.ShapeDtypeStruct((1024, 64), jnp.float32)
+        f = jax.jit(lambda x: x.sum(0), in_shardings=(sh,), out_shardings=rep)
+        compiled = f.lower(x).compile()
+        c = HloCostModel(compiled.as_text()).entry_cost()
+        assert c.total_coll_bytes > 0, c.coll_bytes
+        assert 'all-reduce' in c.coll_bytes, c.coll_bytes
+        print('OK', c.coll_bytes)
+        """
+    )
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=240)
+    assert out.returncode == 0, out.stderr[-2000:]
+
+
+def test_analytic_memory_model_sane():
+    from repro.launch.roofline import analytic_memory_bytes
+
+    m = analytic_memory_bytes("qwen3-4b", "decode_32k", {"data": 16, "model": 16})
+    # decode is dominated by weight + KV reads; both components present
+    assert m["weights"] > 0 and m["kv_read"] > 0
+    # weights per device ~ P*2/tp
+    assert abs(m["weights"] - 4.41e9 * 2 / 16) / m["weights"] < 0.2

@@ -1,0 +1,128 @@
+"""Serving runtime: engine, continuous batching + hedging, two-tier router."""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.core.cache import PlanCache
+from repro.models import lm
+from repro.serving.engine import Engine
+from repro.serving.router import TwoTierRouter
+from repro.serving.scheduler import ContinuousBatcher, Request, SchedulerConfig
+
+
+def test_engine_generate_and_rates(rng_key):
+    cfg = registry.get_smoke("olmo-1b")
+    params = lm.init_params(cfg, rng_key)
+    eng = Engine(cfg, params, max_len=48)
+    toks = np.random.RandomState(0).randint(3, 400, (3, 12)).astype(np.int32)
+    out = eng.generate(toks, max_new=6)
+    assert out.shape == (3, 6)
+    r = eng.measured_rates()
+    assert r["prefill"] > 0 and r["decode"] > 0
+
+
+def test_engine_greedy_deterministic(rng_key):
+    cfg = registry.get_smoke("qwen2.5-3b")
+    params = lm.init_params(cfg, rng_key)
+    eng = Engine(cfg, params, max_len=48)
+    toks = np.random.RandomState(1).randint(3, 400, (2, 10)).astype(np.int32)
+    a = eng.generate(toks, max_new=5)
+    b = eng.generate(toks, max_new=5)
+    np.testing.assert_array_equal(a, b)
+
+
+# -- continuous batching -------------------------------------------------------
+
+
+def test_continuous_batching_completes_all():
+    clock = {"t": 0.0}
+
+    def fake_clock():
+        clock["t"] += 0.01
+        return clock["t"]
+
+    sched = ContinuousBatcher(SchedulerConfig(max_batch=4, hedge_after_s=1e9),
+                              clock=fake_clock)
+    for i in range(20):
+        sched.submit(Request(arrival=fake_clock(), id=f"r{i}", max_new=5))
+    stats = sched.run_until_idle()
+    assert stats["completed"] == 20
+    assert stats["hedges"] == 0
+    # slot reuse: 20 reqs x 5 steps / 4 slots = 25 min steps
+    assert stats["steps"] >= 25
+
+
+def test_straggler_hedging_triggers():
+    clock = {"t": 0.0}
+
+    def fake_clock():
+        clock["t"] += 0.5  # slow steps -> deadline exceeded
+        return clock["t"]
+
+    sched = ContinuousBatcher(
+        SchedulerConfig(max_batch=2, hedge_after_s=2.0, n_replicas=2),
+        clock=fake_clock,
+    )
+    for i in range(4):
+        sched.submit(Request(arrival=0.0, id=f"r{i}", max_new=30))
+    stats = sched.run_until_idle()
+    assert stats["completed"] == 4
+    assert stats["hedges"] > 0
+    assert stats["wasted_steps"] > 0  # hedging costs duplicated work
+
+
+# -- two-tier router ------------------------------------------------------------
+
+
+def test_router_routes_by_cache_and_async_cachegen():
+    cache = PlanCache(capacity=10)
+    calls = {"large": 0, "small": 0}
+
+    router = TwoTierRouter(
+        cache,
+        extract_keyword=lambda req: req["kw"],
+        plan_large=lambda req: calls.__setitem__("large", calls["large"] + 1)
+        or {"plan": "fresh"},
+        plan_small_with_template=lambda req, tpl: calls.__setitem__(
+            "small", calls["small"] + 1
+        )
+        or {"plan": "adapted", "tpl": tpl},
+        make_template=lambda req, res: {"tpl_for": req["kw"]},
+        async_cachegen=True,
+    )
+    r1 = router.route({"kw": "mean calculation"})
+    assert r1["plan"] == "fresh" and calls["large"] == 1
+    router.drain()  # async insert lands
+    r2 = router.route({"kw": "mean calculation"})
+    assert r2["plan"] == "adapted" and calls["small"] == 1
+    m = router.metrics.snapshot()
+    assert m["hit_rate"] == 0.5 and m["async_cachegens"] == 1
+    router.close()
+
+
+def test_router_async_does_not_block():
+    cache = PlanCache(capacity=10)
+    slow = {"done": False}
+
+    def make_template(req, res):
+        time.sleep(0.3)
+        slow["done"] = True
+        return {"t": 1}
+
+    router = TwoTierRouter(
+        cache,
+        extract_keyword=lambda r: "k",
+        plan_large=lambda r: "res",
+        plan_small_with_template=lambda r, t: "hit",
+        make_template=make_template,
+        async_cachegen=True,
+    )
+    t0 = time.perf_counter()
+    router.route({})
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 0.25  # response returned before cachegen finished
+    router.close()
+    assert slow["done"]

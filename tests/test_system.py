@@ -1,0 +1,129 @@
+"""End-to-end system behavior: the paper's headline claims, measured.
+
+These run the full APC pipeline (keyword -> cache -> two-tier planning ->
+actor -> judge) over executable envs and assert the DIRECTION and rough
+magnitude of every paper claim:
+
+  * APC cuts cost vs accuracy-optimal while keeping most of its accuracy;
+  * semantic caching degrades badly on hits (false-positive reuse);
+  * full-history caching is worse than APC on accuracy;
+  * cache-hit accuracy ~ cache-miss accuracy for APC (Fig 5);
+  * overhead (keyword extraction + cache generation) is ~1% of cost;
+  * cold start warms up (hit rate rises across the stream).
+"""
+
+import pytest
+
+from repro.core.harness import METHODS, run_workload
+
+N = 150
+ENV = "financebench"
+
+
+@pytest.fixture(scope="module")
+def results():
+    return {m: run_workload(ENV, m, N, keep_records=True) for m in METHODS}
+
+
+def test_apc_cost_reduction(results):
+    apc, acc_opt = results["apc"], results["accuracy_optimal"]
+    assert apc.cost < 0.70 * acc_opt.cost  # paper: ~50% reduction
+
+
+def test_apc_maintains_accuracy(results):
+    apc, acc_opt = results["apc"], results["accuracy_optimal"]
+    assert apc.accuracy > 0.90 * acc_opt.accuracy  # paper: 96.6% kept
+
+
+def test_apc_latency_reduction(results):
+    apc, acc_opt = results["apc"], results["accuracy_optimal"]
+    assert apc.latency_s < 0.90 * acc_opt.latency_s  # paper: ~27%
+
+
+def test_cost_optimal_is_cheap_but_inaccurate(results):
+    co, ao = results["cost_optimal"], results["accuracy_optimal"]
+    assert co.cost < 0.10 * ao.cost
+    assert co.accuracy < 0.75 * ao.accuracy
+
+
+def test_semantic_caching_degrades_on_hits(results):
+    sem = results["semantic"]
+    assert sem.hit_rate > 0.2  # it does hit...
+    assert sem.hit_accuracy < 0.3  # ...but hits are mostly false positives
+    assert sem.accuracy < results["apc"].accuracy
+
+
+def test_full_history_worse_than_apc(results):
+    fh, apc = results["full_history"], results["apc"]
+    assert fh.accuracy < apc.accuracy
+    assert fh.hit_accuracy < apc.hit_accuracy
+
+
+def test_apc_hit_accuracy_stable(results):
+    apc = results["apc"]
+    assert apc.hit_accuracy is not None and apc.miss_accuracy is not None
+    # Fig 5c: no cliff between hit and miss accuracy
+    assert apc.hit_accuracy > apc.miss_accuracy - 0.15
+
+
+def test_overhead_is_small(results):
+    apc = results["apc"]
+    bd = apc.breakdown
+    overhead = sum(
+        bd.get(r, {}).get("cost", 0.0)
+        for r in ("keyword_extractor", "cache_generator")
+    )
+    assert overhead / apc.cost < 0.05  # paper: ~1%
+
+
+def test_cold_start_warms_up(results):
+    recs = results["apc"].records
+    first = recs[: N // 3]
+    last = recs[-N // 3 :]
+    hr = lambda rs: sum(r.hit for r in rs) / len(rs)
+    assert hr(last) > hr(first) + 0.15
+
+
+def test_determinism():
+    a = run_workload("tabmwp", "apc", 40, seed=3)
+    b = run_workload("tabmwp", "apc", 40, seed=3)
+    assert a.accuracy == b.accuracy and a.cost == b.cost
+
+
+@pytest.mark.parametrize("env", ["tabmwp", "qasper", "aime", "gaia"])
+def test_apc_beats_accuracy_optimal_cost_everywhere(env):
+    n = 60
+    apc = run_workload(env, "apc", n)
+    ao = run_workload(env, "accuracy_optimal", n)
+    assert apc.cost < ao.cost
+    assert apc.accuracy > 0.8 * ao.accuracy
+
+
+def test_gaia_low_initial_hit_rate():
+    """GAIA's heterogeneous tasks rarely share keywords (paper §4.2)."""
+    gaia = run_workload("gaia", "apc", 80)
+    fin = run_workload(ENV, "apc", 80)
+    assert gaia.hit_rate < fin.hit_rate
+
+
+def test_cache_capacity_effect():
+    """Table 4: larger caches -> higher hit rate, lower cost."""
+    from repro.core.agent_loop import AgentConfig
+
+    small = run_workload(ENV, "apc", 120, agent_cfg=AgentConfig(cache_capacity=5))
+    large = run_workload(ENV, "apc", 120, agent_cfg=AgentConfig(cache_capacity=100))
+    assert large.hit_rate > small.hit_rate
+    assert large.cost < small.cost
+
+
+def test_fuzzy_matching_tradeoff():
+    """Table 6: fuzzy raises hit rate without raising cost."""
+    from repro.core.agent_loop import AgentConfig
+
+    exact = run_workload(ENV, "apc", 120)
+    fuzzy = run_workload(
+        ENV, "apc", 120,
+        agent_cfg=AgentConfig(fuzzy=True, fuzzy_threshold=0.55),
+    )
+    assert fuzzy.hit_rate >= exact.hit_rate
+    assert fuzzy.cost <= exact.cost * 1.02
