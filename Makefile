@@ -1,0 +1,12 @@
+# Local mirror of .github/workflows/smoke.yml
+PYTHONPATH := src
+
+.PHONY: smoke test bench-fast
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+bench-fast:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --fast --only t5,f3
+
+smoke: test bench-fast

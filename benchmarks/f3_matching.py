@@ -3,6 +3,13 @@
 Ground truth: two tasks share a reusable plan iff they share an intent.
 Query-based search: cosine similarity of full query embeddings > threshold.
 Keyword-based: extracted-keyword exact match.
+
+Index-backend dimension (``repro.index``): embeddings come from the
+vectorized ``embed_batch`` (one scatter-add for the whole task set), and
+``f3/index_top2_agreement/{pallas,bucketed}`` measures how often each
+accelerated backend returns the same nearest *other* query (top-2, row 0 is
+the query itself) as the exact numpy reference — pallas must agree exactly;
+bucketed agreement is its measured LSH recall at this scale.
 """
 
 from __future__ import annotations
@@ -22,7 +29,7 @@ def run(fast: bool = False) -> List[Row]:
     env = get_env("financebench")
     tasks = env.generate(n, seed=0)
     be = SimulatedBackend(seed=0)
-    embs = np.stack([fuzzy.embed(t.query) for t in tasks])
+    embs = fuzzy.embed_batch([t.query for t in tasks])
     kws = [be.extract_keyword(t)[0] for t in tasks]
     intents = [t.intent.id for t in tasks]
 
@@ -48,4 +55,26 @@ def run(fast: bool = False) -> List[Row]:
         Row("f3/keyword_exact", 0.0,
             {"fpr": round(float(fp), 4), "fnr": round(float(fn), 4)})
     )
+
+    # index-backend agreement on the nearest *other* query (top-2, col 1)
+    from repro.index.bucketed import BucketedIndex
+    from repro.index import EmbeddingBank
+    from repro.kernels import ops, ref
+
+    _, ref_i = ref.topk_cosine_ref(embs, embs, 2)
+    _, pl_i = ops.batch_topk(embs, embs, k=2)
+    pl_agree = float(np.mean(np.asarray(pl_i)[:, 1] == ref_i[:, 1]))
+    rows.append(Row("f3/index_top2_agreement/pallas", 0.0,
+                    {"agreement": round(pl_agree, 4)}))
+
+    bank = EmbeddingBank(initial_capacity=n)
+    for i in range(n):
+        bank.add(f"q{i}", embs[i])
+    # scan_threshold=0 forces the LSH probe path even at this small n,
+    # so the row reports real multi-probe recall, not the exact fallback
+    bidx = BucketedIndex(bank, n_bits=8, scan_threshold=0)
+    _, bk_i = bidx.topk(embs, k=2)
+    bk_agree = float(np.mean(bk_i[:, 1] == ref_i[:, 1]))
+    rows.append(Row("f3/index_top2_agreement/bucketed", 0.0,
+                    {"agreement": round(bk_agree, 4)}))
     return rows

@@ -49,4 +49,14 @@ def run(fast: bool = False) -> List[Row]:
                            chunk=64)[0].block_until_ready()
     s()
     rows.append(Row("kernel/ssd", timeit(s), {"S": S2, "P": P}))
+
+    # similarity top-k: a whole admission batch of fuzzy lookups per call
+    Qb, Nb = (16, 2_000) if fast else (64, 20_000)
+    qs = jax.random.normal(k, (Qb, 384), jnp.float32)
+    qs = qs / jnp.linalg.norm(qs, axis=1, keepdims=True)
+    bank = jax.random.normal(k, (Nb, 384), jnp.float32)
+    bank = bank / jnp.linalg.norm(bank, axis=1, keepdims=True)
+    t = lambda: ops.batch_topk(qs, bank, k=4)[0].block_until_ready()
+    t()
+    rows.append(Row("kernel/batch_topk", timeit(t), {"Q": Qb, "N": Nb}))
     return rows

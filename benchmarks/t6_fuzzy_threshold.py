@@ -1,4 +1,10 @@
-"""Table 6: fuzzy keyword matching — threshold sweep (hit rate vs accuracy)."""
+"""Table 6: fuzzy keyword matching — threshold sweep (hit rate vs accuracy).
+
+The sweep also carries the ``repro.index`` backend dimension: the
+``*_bucketed`` row runs the same workload with the LSH-backed matcher —
+at Table 4's 100-entry cache it falls back to the exact scan, so its
+hit-rate/accuracy must match the brute row (a live consistency check).
+"""
 
 from __future__ import annotations
 
@@ -12,12 +18,15 @@ from repro.core.harness import run_workload
 def run(fast: bool = False) -> List[Row]:
     n = 80 if fast else 200
     rows = []
-    settings = [("exact_1.00", False, 1.0), ("fuzzy_0.80", True, 0.8),
-                ("fuzzy_0.60", True, 0.6)]
-    for label, fz, thr in settings:
+    settings = [("exact_1.00", False, 1.0, "brute"),
+                ("fuzzy_0.80", True, 0.8, "brute"),
+                ("fuzzy_0.80_bucketed", True, 0.8, "bucketed"),
+                ("fuzzy_0.60", True, 0.6, "brute")]
+    for label, fz, thr, backend in settings:
         r = run_workload(
             "financebench", "apc", n,
-            agent_cfg=AgentConfig(fuzzy=fz, fuzzy_threshold=thr),
+            agent_cfg=AgentConfig(fuzzy=fz, fuzzy_threshold=thr,
+                                  index_backend=backend),
         )
         rows.append(
             Row(

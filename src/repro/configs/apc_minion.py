@@ -61,6 +61,7 @@ class APCDeployment:
     cache_capacity: int = 100  # paper Table 4 default
     fuzzy_matching: bool = False  # paper default: exact matching
     fuzzy_threshold: float = 0.8
+    index_backend: str = "auto"  # repro.index: auto | brute | pallas | bucketed
 
 
 DEFAULT = APCDeployment()

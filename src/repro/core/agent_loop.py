@@ -57,6 +57,7 @@ class AgentConfig:
     fuzzy: bool = False
     fuzzy_threshold: float = 0.8
     semantic_threshold: float = 0.85
+    index_backend: str = "auto"  # repro.index backend for fuzzy/semantic search
     async_cachegen: bool = False  # beyond-paper: don't block on cache writes
     seed: int = 0
 
@@ -82,10 +83,14 @@ class PlanActAgent:
                 capacity=config.cache_capacity,
                 fuzzy=config.fuzzy,
                 fuzzy_threshold=config.fuzzy_threshold,
+                index_backend=config.index_backend,
             )
         )
-        # semantic baseline: (embedding, answer) store
-        self._sem_keys: List[np.ndarray] = []
+        # semantic baseline: repro.index over query embeddings -> answers
+        # (replaces the seed's list-of-arrays + per-lookup np.stack scan)
+        from repro.index import SimilarityIndex
+
+        self._sem_index = SimilarityIndex(backend=config.index_backend)
         self._sem_vals: List[Tuple[str, Optional[float]]] = []
         self._pending_cachegen: List[Tuple[str, PlanTemplate, float]] = []
 
@@ -235,11 +240,9 @@ class PlanActAgent:
         t0 = time.perf_counter()
         q_emb = fuzzy.embed(task.query)
         hit_val = None
-        if self._sem_keys:
-            sims = np.stack(self._sem_keys) @ q_emb
-            i = int(np.argmax(sims))
-            if sims[i] >= self.cfg.semantic_threshold:
-                hit_val = self._sem_vals[i]
+        hit_key = self._sem_index.best_match(q_emb, self.cfg.semantic_threshold)
+        if hit_key is not None:
+            hit_val = self._sem_vals[int(hit_key[1:])]
         lookup_s = time.perf_counter() - t0
         if hit_val is not None:
             # cached final response returned verbatim (GPTCache semantics) —
@@ -250,7 +253,7 @@ class PlanActAgent:
                 "", 0, answer, self.ledger.total_cost(), lookup_s, lookup_s,
             )
         answer, iters, _, lat = self._loop_scratch(task, large=True)
-        self._sem_keys.append(q_emb)
+        self._sem_index.add(f"q{len(self._sem_vals)}", q_emb)
         self._sem_vals.append((task.query, answer))
         return RunRecord(
             task.id, "semantic", judge(answer, task.gt_answer), False,

@@ -2,9 +2,13 @@
 
 Exact matching is the paper's default — O(1) lookups via a hash map,
 validated to scale to 1e6 entries (Table 5). Fuzzy matching is available
-behind the same interface (``fuzzy=True``) using the hashed-ngram embedding
-in fuzzy.py; the paper's threshold/latency trade-offs (Tables 5-6) reproduce
-against this implementation.
+behind the same interface (``fuzzy=True``), backed by the ``repro.index``
+similarity subsystem: the matcher's embedding bank is maintained
+*incrementally* under the cache lock on insert/evict/TTL-expire (no
+per-lookup key-list copy or matrix rebuild), and ``index_backend`` selects
+the search strategy (``brute`` | ``pallas`` | ``bucketed`` | ``auto``).
+The paper's threshold/latency trade-offs (Tables 5-6) reproduce against the
+``brute`` backend; ``bucketed`` removes the Table 5 scaling cliff.
 """
 
 from __future__ import annotations
@@ -13,7 +17,7 @@ import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Dict, Generic, Optional, Tuple, TypeVar
+from typing import Any, Dict, Generic, List, Optional, Tuple, TypeVar
 
 V = TypeVar("V")
 
@@ -55,11 +59,13 @@ class PlanCache(Generic[V]):
         *,
         fuzzy: bool = False,
         fuzzy_threshold: float = 0.8,
+        index_backend: str = "auto",
         ttl_s: Optional[float] = None,
     ):
         self.capacity = capacity
         self.fuzzy = fuzzy
         self.fuzzy_threshold = fuzzy_threshold
+        self.index_backend = index_backend
         self.ttl_s = ttl_s
         self._store: "OrderedDict[str, Tuple[V, float]]" = OrderedDict()
         self._lock = threading.RLock()
@@ -68,7 +74,7 @@ class PlanCache(Generic[V]):
         if fuzzy:
             from repro.core.fuzzy import FuzzyMatcher
 
-            self._matcher = FuzzyMatcher()
+            self._matcher = FuzzyMatcher(backend=index_backend)
 
     # -- core ops ----------------------------------------------------------
 
@@ -78,8 +84,10 @@ class PlanCache(Generic[V]):
             with self._lock:
                 hit = self._lookup_exact(keyword)
                 if hit is None and self._matcher is not None:
+                    # the matcher's index is maintained incrementally on
+                    # insert/evict/TTL-expire — no key-list copy per lookup
                     alt = self._matcher.best_match(
-                        keyword, list(self._store.keys()), self.fuzzy_threshold
+                        keyword, threshold=self.fuzzy_threshold
                     )
                     if alt is not None:
                         hit = self._lookup_exact(alt)
@@ -118,12 +126,51 @@ class PlanCache(Generic[V]):
                 if self._matcher is not None:
                     self._matcher.remove(old)
 
+    def lookup_batch(self, keywords: List[str]) -> List[Optional[V]]:
+        """Answer a whole batch of lookups in one pass.
+
+        Exact hits resolve per-key; the fuzzy fallback for all remaining
+        misses is answered by a single batched top-k (one device call on
+        the ``pallas`` backend) instead of one scan per request.
+        """
+        t0 = time.perf_counter()
+        try:
+            with self._lock:
+                out: List[Optional[V]] = [self._lookup_exact(k) for k in keywords]
+                if self._matcher is not None:
+                    miss_pos = [i for i, v in enumerate(out) if v is None]
+                    if miss_pos:
+                        alts = self._matcher.best_match_batch(
+                            [keywords[i] for i in miss_pos], self.fuzzy_threshold
+                        )
+                        for i, alt in zip(miss_pos, alts):
+                            if alt is not None:
+                                out[i] = self._lookup_exact(alt)
+                for v in out:
+                    if v is None:
+                        self.stats.misses += 1
+                    else:
+                        self.stats.hits += 1
+                return out
+        finally:
+            self.stats.lookup_time_s += time.perf_counter() - t0
+
+    def remove(self, keyword: str) -> bool:
+        """Delete one entry, keeping the fuzzy index in sync. True if present."""
+        with self._lock:
+            if self._store.pop(keyword, None) is None:
+                return False
+            if self._matcher is not None:
+                self._matcher.remove(keyword)
+            return True
+
     def __contains__(self, keyword: str) -> bool:
         with self._lock:
             return keyword in self._store
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:  # consistent reads while writers mutate _store
+            return len(self._store)
 
     def keys(self):
         with self._lock:

@@ -67,11 +67,23 @@ class DistributedPlanCache:
     """PlanCache-compatible facade over sharded, replicated cache nodes."""
 
     def __init__(
-        self, n_nodes: int = 4, *, replication: int = 2, capacity_per_node: int = 64
+        self,
+        n_nodes: int = 4,
+        *,
+        replication: int = 2,
+        capacity_per_node: int = 64,
+        fuzzy: bool = False,
+        fuzzy_threshold: float = 0.8,
+        index_backend: str = "auto",
     ):
         self.ring = HashRing()
         self.replication = replication
         self.capacity_per_node = capacity_per_node
+        # each shard owns a private repro.index similarity index; lookups
+        # fan out per-shard so the fuzzy scan never spans the global key set
+        self.fuzzy = fuzzy
+        self.fuzzy_threshold = fuzzy_threshold
+        self.index_backend = index_backend
         self.shards: Dict[str, PlanCache] = {}
         self.down: set = set()
         self.stats = CacheStats()
@@ -86,7 +98,12 @@ class DistributedPlanCache:
             if name in self.shards:
                 self.down.discard(name)
                 return
-            self.shards[name] = PlanCache(capacity=self.capacity_per_node)
+            self.shards[name] = PlanCache(
+                capacity=self.capacity_per_node,
+                fuzzy=self.fuzzy,
+                fuzzy_threshold=self.fuzzy_threshold,
+                index_backend=self.index_backend,
+            )
             self.ring.add(name)
             self._rebalance()
 
@@ -122,8 +139,9 @@ class DistributedPlanCache:
                     v = shard.lookup(k)
                     moves.append((node, k, v))
         for node, k, v in moves:
-            # remove from stale owner, reinsert at the right owners
-            self.shards[node]._store.pop(k, None)
+            # remove from stale owner (keeps its fuzzy index in sync),
+            # reinsert at the right owners
+            self.shards[node].remove(k)
             self._insert_unlocked(k, v)
 
     # -- cache ops --------------------------------------------------------
@@ -131,16 +149,62 @@ class DistributedPlanCache:
     def _live(self, names: List[str]) -> List[str]:
         return [n for n in names if n not in self.down and n in self.shards]
 
+    def _probe_order(self, keyword: str) -> List[str]:
+        """Ring owners first; with fuzzy shards, scatter to the remaining
+        live nodes — a similar key hashes to *its own* owners, not the
+        query's, so fuzzy resolution must reach every shard's index (each
+        shard still scans only its local keys; in a networked deployment
+        this fan-out runs in parallel)."""
+        owners = self._live(self.ring.nodes_for(keyword, self.replication))
+        if self.fuzzy:
+            owners += [
+                n for n in sorted(self.shards)
+                if n not in self.down and n not in owners
+            ]
+        return owners
+
     def lookup(self, keyword: str) -> Optional[Any]:
         with self._lock:
-            owners = self._live(self.ring.nodes_for(keyword, self.replication))
-            for n in owners:  # fall through replicas on miss/failure
+            for n in self._probe_order(keyword):  # replica/fuzzy fallthrough
                 v = self.shards[n].lookup(keyword)
                 if v is not None:
                     self.stats.hits += 1
                     return v
             self.stats.misses += 1
             return None
+
+    def lookup_batch(self, keywords: List[str]) -> List[Optional[Any]]:
+        """Batched lookups under one lock acquisition (router admission).
+
+        Keywords are grouped by primary owner so each shard's fuzzy index
+        answers its group in one batched call; replica fallthrough applies
+        per keyword as in :meth:`lookup`.
+        """
+        with self._lock:
+            out: List[Optional[Any]] = [None] * len(keywords)
+            owners_of: List[List[str]] = []
+            by_primary: Dict[str, List[int]] = {}
+            for i, k in enumerate(keywords):
+                owners = self._probe_order(k)
+                owners_of.append(owners)
+                if owners:
+                    by_primary.setdefault(owners[0], []).append(i)
+            for node, idxs in by_primary.items():
+                vals = self.shards[node].lookup_batch([keywords[i] for i in idxs])
+                for i, v in zip(idxs, vals):
+                    out[i] = v
+            for i, k in enumerate(keywords):
+                if out[i] is None:
+                    for n in owners_of[i][1:]:
+                        v = self.shards[n].lookup(k)
+                        if v is not None:
+                            out[i] = v
+                            break
+                if out[i] is None:
+                    self.stats.misses += 1
+                else:
+                    self.stats.hits += 1
+            return out
 
     def _insert_unlocked(self, keyword: str, value: Any) -> None:
         owners = self._live(self.ring.nodes_for(keyword, self.replication))
@@ -153,7 +217,11 @@ class DistributedPlanCache:
             self.stats.inserts += 1
 
     def __contains__(self, keyword: str) -> bool:
-        return self.lookup(keyword) is not None
+        # exact membership, no fuzzy resolution and no stats mutation
+        # (mirrors PlanCache.__contains__)
+        with self._lock:
+            owners = self._live(self.ring.nodes_for(keyword, self.replication))
+            return any(keyword in self.shards[n] for n in owners)
 
     def __len__(self) -> int:
         with self._lock:

@@ -1,102 +1,77 @@
-"""Fuzzy keyword matching via hashed character-ngram embeddings.
+"""Fuzzy keyword matching — thin adapter over the ``repro.index`` subsystem.
 
 Stands in for SentenceTransformer('all-MiniLM-L6-v2') from the paper's
-prototype (offline container). Same asymptotics: embedding once per insert,
-O(N * dim) brute-force cosine scan per lookup — which is exactly the poor
-scaling the paper measures in Table 5. Also used by the semantic-caching
-baseline (query-level similarity).
+prototype (offline container). The hashed-ngram embedding itself lives in
+``repro.index.bank`` (batched, memoized); this module keeps the historical
+``embed``/``similarity``/``DIM`` surface plus :class:`FuzzyMatcher`, the
+PlanCache-facing matcher.
+
+The seed implementation reproduced Table 5's scaling cliff on purpose: a
+brute-force numpy cosine scan with an ``np.stack`` matrix rebuild after any
+mutation and an O(N) key-set comparison per lookup. FuzzyMatcher is now a
+view over an :class:`~repro.index.SimilarityIndex` — O(1) add/remove on the
+bank's freelist arena, no rebuilds, and a choice of search backend:
+
+* ``brute``    exact numpy scan (the paper's prototype behavior)
+* ``pallas``   ``ops.batch_topk`` blocked kernel (one device call/batch)
+* ``bucketed`` multi-probe SRP-LSH, sublinear at 1e6 entries
+* ``auto``     brute below ~4k live keys, bucketed above (default)
 """
 
 from __future__ import annotations
 
-import hashlib
-import re
-from typing import Dict, List, Optional
+from typing import List, Optional
 
-import numpy as np
-
-DIM = 384  # matches MiniLM-L6 dim
-
-
-def _tokens(text: str) -> List[str]:
-    text = text.lower()
-    words = re.findall(r"[a-z0-9]+", text)
-    grams = list(words)
-    for w in words:
-        for i in range(len(w) - 2):
-            grams.append(w[i : i + 3])
-    for a, b in zip(words, words[1:]):
-        grams.append(a + "_" + b)
-    return grams
-
-
-def embed(text: str) -> np.ndarray:
-    """Deterministic hashed bag-of-ngrams embedding, L2-normalized."""
-    v = np.zeros(DIM, np.float32)
-    for g in _tokens(text):
-        h = int.from_bytes(hashlib.blake2b(g.encode(), digest_size=8).digest(), "little")
-        idx = h % DIM
-        sign = 1.0 if (h >> 62) & 1 else -1.0
-        v[idx] += sign
-    n = np.linalg.norm(v)
-    return v / n if n > 0 else v
+from repro.index import SimilarityIndex
+from repro.index.bank import DIM, embed, embed_batch  # noqa: F401  (re-export)
 
 
 def similarity(a: str, b: str) -> float:
-    return float(embed(a) @ embed(b))
+    e = embed_batch([a, b])
+    return float(e[0] @ e[1])
 
 
 class FuzzyMatcher:
-    """Brute-force cosine index (matches the paper's prototype)."""
+    """PlanCache-facing matcher backed by a SimilarityIndex.
 
-    def __init__(self):
-        self._keys: List[str] = []
-        self._embs: Optional[np.ndarray] = None
-        self._cache: Dict[str, np.ndarray] = {}
+    API-compatible with the seed matcher; ``best_match``'s ``keys``
+    parameter remains for external callers that manage their own key set,
+    but costs an O(N) reconciliation — PlanCache no longer passes it and
+    instead maintains the index incrementally on insert/evict/TTL-expire.
+    """
+
+    def __init__(self, backend: str = "auto", **index_kw):
+        self.index = SimilarityIndex(backend=backend, **index_kw)
 
     def add(self, key: str) -> None:
-        if key in self._cache:
-            return
-        e = embed(key)
-        self._cache[key] = e
-        self._keys.append(key)
-        self._embs = None  # invalidate matrix
+        self.index.add(key)
 
     def remove(self, key: str) -> None:
-        if key in self._cache:
-            del self._cache[key]
-            self._keys.remove(key)
-            self._embs = None
+        self.index.remove(key)
 
     def clear(self) -> None:
-        self._keys = []
-        self._embs = None
-        self._cache = {}
+        self.index.clear()
 
-    def _matrix(self) -> np.ndarray:
-        if self._embs is None:
-            if not self._keys:
-                self._embs = np.zeros((0, DIM), np.float32)
-            else:
-                self._embs = np.stack([self._cache[k] for k in self._keys])
-        return self._embs
+    def _sync(self, keys: List[str]) -> None:
+        """Compat path: reconcile the index with an externally-owned key
+        set. O(N) — incremental add/remove is the fast path."""
+        want = set(keys)
+        have = set(self.index.bank.keys())
+        for k in have - want:
+            self.index.remove(k)
+        for k in want - have:
+            self.index.add(k)
 
     def best_match(
         self, query: str, keys: Optional[List[str]] = None, threshold: float = 0.8
     ) -> Optional[str]:
-        if keys is not None and set(keys) != set(self._keys):
-            # caller supplied the live key set; rebuild lazily
-            self._keys = list(keys)
-            for k in self._keys:
-                if k not in self._cache:
-                    self._cache[k] = embed(k)
-            self._embs = None
-        M = self._matrix()
-        if M.shape[0] == 0:
-            return None
-        q = embed(query)
-        sims = M @ q
-        i = int(np.argmax(sims))
-        if sims[i] >= threshold:
-            return self._keys[i]
-        return None
+        if keys is not None:
+            self._sync(keys)
+        return self.index.best_match(query, threshold)
+
+    def best_match_batch(
+        self, queries: List[str], threshold: float = 0.8
+    ) -> List[Optional[str]]:
+        """Batched lookup: embeds all queries at once and answers them in a
+        single top-k call (one device call on the pallas backend)."""
+        return self.index.best_match_batch(queries, threshold)

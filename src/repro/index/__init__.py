@@ -1,0 +1,184 @@
+"""repro.index — the shared similarity-index subsystem.
+
+Every fuzzy consumer (PlanCache, the semantic baseline, distributed shards,
+the serving router) plugs into this layer instead of rolling its own cosine
+scan:
+
+* :class:`~repro.index.bank.EmbeddingBank` — contiguous float32 slot arena
+  with a freelist (O(1) add/remove, zero-copy ``matrix()`` view, batched
+  hashed-ngram embedding).
+* ``kernels/similarity.py`` via ``ops.batch_topk`` — Pallas blocked cosine
+  top-k, one device call per request batch (interpret on CPU, Mosaic on
+  TPU).
+* :class:`~repro.index.bucketed.BucketedIndex` — multi-probe SRP-LSH for
+  sublinear candidate generation at 1e6 entries.
+
+:class:`SimilarityIndex` is the facade: pick a backend (``brute`` |
+``pallas`` | ``bucketed`` | ``auto``) and get add/remove/topk/best_match
+over keys. ``auto`` serves exact brute scans while the bank is small and
+switches to the bucketed index beyond ``auto_bucketed_min`` live entries.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.index.bank import DIM, EmbeddingBank, embed, embed_batch
+from repro.index.bucketed import NEG_INF, BucketedIndex, _brute_topk
+
+BACKENDS = ("auto", "brute", "pallas", "bucketed")
+
+
+class SimilarityIndex:
+    """Key -> embedding store with pluggable top-k search backend."""
+
+    def __init__(
+        self,
+        *,
+        backend: str = "auto",
+        bank: Optional[EmbeddingBank] = None,
+        initial_capacity: int = 64,
+        n_tables: int = 4,
+        n_bits: Optional[int] = None,  # None: adaptive, ~log2(N) (bucketed.py)
+        lsh_seed: int = 0,
+        probe_hamming: int = 1,
+        auto_bucketed_min: int = 4096,
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+        self.backend = backend
+        self.bank = bank if bank is not None else EmbeddingBank(initial_capacity)
+        self._bucketed: Optional[BucketedIndex] = None
+        if backend in ("bucketed", "auto"):
+            self._bucketed = BucketedIndex(
+                self.bank,
+                n_tables=n_tables,
+                n_bits=n_bits,
+                seed=lsh_seed,
+                probe_hamming=probe_hamming,
+                scan_threshold=auto_bucketed_min if backend == "auto" else 2048,
+            )
+
+    # -- mutation (O(1) amortized; keeps LSH buckets in sync) -------------
+
+    def __len__(self) -> int:
+        return len(self.bank)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.bank
+
+    def add(self, key: str, vector: Optional[np.ndarray] = None) -> int:
+        with self.bank.lock:
+            slot = self.bank.add(key, vector)
+            if self._bucketed is not None:
+                self._bucketed.on_add(slot, self.bank.matrix()[slot])
+            return slot
+
+    def remove(self, key: str) -> None:
+        with self.bank.lock:
+            slot = self.bank.remove(key)
+            if slot is not None and self._bucketed is not None:
+                self._bucketed.on_remove(slot)
+
+    def clear(self) -> None:
+        with self.bank.lock:
+            self.bank.clear()
+            if self._bucketed is not None:
+                self._bucketed.clear()
+
+    # -- search -----------------------------------------------------------
+
+    def _as_queries(self, queries: Union[Sequence[str], np.ndarray]) -> np.ndarray:
+        if isinstance(queries, np.ndarray):
+            return np.atleast_2d(queries.astype(np.float32, copy=False))
+        return embed_batch(list(queries))
+
+    def topk(
+        self, queries: Union[Sequence[str], np.ndarray], k: int = 1
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k over live keys: (scores (Q, k) f32, slots (Q, k) i32).
+
+        ``queries`` is either raw texts (embedded in one batch) or an
+        already-embedded (Q, DIM) array. Slots map to keys via
+        ``bank.key_of``; every returned ``slot >= 0`` is a live key.
+        Freed/empty arena rows score 0.0 in the underlying scan; their
+        result positions are masked to (-1, NEG_INF) here rather than
+        re-compacted, so with tombstones present fewer than k live entries
+        may be returned even when k live keys exist — over-request k if an
+        exact count matters.
+        """
+        q = self._as_queries(queries)
+        if self.backend == "pallas":
+            from repro.kernels import ops  # lazy: keep core import jax-free
+
+            # search the full arena, not matrix(): its capacity changes
+            # only on doubling, so the jit'd kernel sees O(log N) shapes
+            # instead of retracing on every insert; pad Q likewise
+            nq = q.shape[0]
+            qp = max(8, 1 << max(0, nq - 1).bit_length())
+            if qp != nq:
+                q = np.pad(q, ((0, qp - nq), (0, 0)))
+            s, i = ops.batch_topk(q, self.bank.arena(), k=k)
+            scores, slots = np.array(s[:nq]), np.array(i[:nq])
+        elif self._bucketed is not None:  # bucketed | auto
+            scores, slots = self._bucketed.topk(q, k)
+        else:
+            scores, slots = _brute_topk(self.bank.matrix(), q, k)
+        # mask tombstoned / beyond-high-water slots: slot >= 0 => live key
+        for r in range(slots.shape[0]):
+            for c in range(slots.shape[1]):
+                slot = slots[r, c]
+                if slot >= 0 and self.bank.key_of(int(slot)) is None:
+                    slots[r, c] = -1
+                    scores[r, c] = NEG_INF
+        return scores, slots
+
+    def best_match_batch(
+        self,
+        queries: Union[Sequence[str], np.ndarray],
+        threshold: float = 0.8,
+    ) -> List[Optional[str]]:
+        """Per query: the best live key with cosine >= threshold, else None."""
+        scores, slots = self.topk(queries, k=1)
+        out: List[Optional[str]] = []
+        for r in range(scores.shape[0]):
+            key = None
+            if slots[r, 0] >= 0 and scores[r, 0] >= threshold:
+                key = self.bank.key_of(int(slots[r, 0]))
+            out.append(key)
+        return out
+
+    def best_match(
+        self, query: Union[str, np.ndarray], threshold: float = 0.8
+    ) -> Optional[str]:
+        if isinstance(query, str):
+            query = embed(query)
+        if self.backend != "pallas":  # lean single-lookup path, no (Q,k) arrays
+            q = query.astype(np.float32, copy=False).reshape(-1)
+            if self._bucketed is not None:
+                score, slot = self._bucketed.best_slot(q)
+            else:
+                M = self.bank.matrix()
+                if M.shape[0] == 0:
+                    return None
+                s = M @ q
+                slot = int(np.argmax(s))
+                score = float(s[slot])
+            if slot >= 0 and score >= threshold:
+                return self.bank.key_of(slot)
+            return None
+        return self.best_match_batch(query.reshape(1, -1), threshold)[0]
+
+
+__all__ = [
+    "BACKENDS",
+    "DIM",
+    "NEG_INF",
+    "BucketedIndex",
+    "EmbeddingBank",
+    "SimilarityIndex",
+    "embed",
+    "embed_batch",
+]

@@ -1,0 +1,240 @@
+"""Signed-random-projection LSH over an EmbeddingBank: sublinear candidates.
+
+The brute/Pallas backends still touch all N rows per lookup; at 1e6 cache
+entries that is the Table 5 scaling cliff. This index hashes each row into
+``n_tables`` independent ``n_bits``-bit signatures (sign patterns of
+projections onto fixed random hyperplanes — SRP-LSH, per-bit collision
+probability 1 - theta/pi for angle theta) and, at query time, scans only
+the buckets within Hamming distance ``probe_hamming`` of the query's
+signature in *each* table (multi-probe, multi-table). A neighbor is missed
+only if it flips >probe_hamming bits in every table simultaneously: at
+4 tables x 12 bits x 1-probe, recall at cosine 0.85 is ~0.9 versus ~0.4
+for a single 16-bit table, while expected candidates stay
+~ n_tables * (n_bits + 1) * N / 2^n_bits. By default ``n_bits`` adapts
+(grows with the bank, ~log2(N)) so lookup cost stays roughly flat as N
+scales; see ``__init__``.
+
+Below ``scan_threshold`` live entries the index transparently falls back to
+the exact brute scan — at small N the full matmul is both faster and
+recall-perfect, so LSH only ever replaces the regime where it wins.
+
+Maintenance is incremental: ``on_add``/``on_remove`` are
+O(n_tables * n_bits) per key (one small matvec + set ops), called by
+SimilarityIndex/EmbeddingBank users under their own locks.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.index.bank import DIM, EmbeddingBank
+
+NEG_INF = np.float32(-1e30)
+
+
+def _brute_topk(
+    matrix: np.ndarray, queries: np.ndarray, k: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact numpy top-k over ``matrix`` rows; shared fallback path."""
+    Q = queries.shape[0]
+    N = matrix.shape[0]
+    scores = np.full((Q, k), NEG_INF, np.float32)
+    idx = np.full((Q, k), -1, np.int32)
+    if N == 0 or Q == 0:
+        return scores, idx
+    s = queries.astype(np.float32) @ matrix.T  # (Q, N)
+    kk = min(k, N)
+    if kk < N:
+        part = np.argpartition(-s, kk - 1, axis=1)[:, :kk]
+    else:
+        part = np.broadcast_to(np.arange(N), (Q, N)).copy()
+    ps = np.take_along_axis(s, part, axis=1)
+    order = np.argsort(-ps, axis=1, kind="stable")
+    scores[:, :kk] = np.take_along_axis(ps, order, axis=1)
+    idx[:, :kk] = np.take_along_axis(part, order, axis=1).astype(np.int32)
+    return scores, idx
+
+
+class BucketedIndex:
+    """Multi-table multi-probe SRP-LSH + exact rerank over a bank."""
+
+    MAX_BITS = 20
+    TARGET_OCCUPANCY = 4  # resize when avg live entries per bucket exceeds this
+
+    def __init__(
+        self,
+        bank: EmbeddingBank,
+        *,
+        n_tables: int = 4,
+        n_bits: Optional[int] = None,
+        seed: int = 0,
+        probe_hamming: int = 1,
+        scan_threshold: int = 2048,
+    ):
+        """``n_bits=None`` (default) adapts: start at 12 bits and rebuild
+        with +2 bits whenever average bucket occupancy exceeds
+        ``TARGET_OCCUPANCY`` — keeping n_bits ~ log2(N) so candidate count
+        (and lookup cost) stays roughly flat as the bank grows. Rebuilds
+        re-hash every live row in one vectorized matmul, amortized O(1)
+        per insert. An explicit ``n_bits`` pins the table size."""
+        self._adaptive = n_bits is None
+        n_bits = 12 if n_bits is None else n_bits
+        assert 1 <= n_bits <= 30 and n_tables >= 1
+        # the probe ball is enumerated up to Hamming distance 2; reject
+        # larger radii instead of silently under-probing
+        assert 0 <= probe_hamming <= 2, probe_hamming
+        self.bank = bank
+        self.n_tables = n_tables
+        self.probe_hamming = probe_hamming
+        self.scan_threshold = scan_threshold
+        self._seed = seed
+        self._set_geometry(n_bits)
+        # bootstrap from whatever the bank already holds (batched hashing)
+        self._rebuild()
+
+    def _set_geometry(self, n_bits: int) -> None:
+        self.n_bits = n_bits
+        rs = np.random.RandomState(self._seed + n_bits)
+        # one (DIM, n_bits) hyperplane block per table, drawn contiguously
+        self._planes = rs.randn(DIM, self.n_tables * n_bits).astype(np.float32)
+        self._buckets: List[Dict[int, Set[int]]] = [
+            {} for _ in range(self.n_tables)
+        ]
+        self._sigs_of: Dict[int, Tuple[int, ...]] = {}
+        self._bit_weights = (1 << np.arange(n_bits)).astype(np.int64)
+        # XOR masks enumerating the probe ball once: [0, single bits, pairs]
+        masks = [0]
+        if self.probe_hamming >= 1:
+            masks += [1 << b for b in range(n_bits)]
+        if self.probe_hamming >= 2:
+            masks += [
+                (1 << b1) ^ (1 << b2)
+                for b1 in range(n_bits)
+                for b2 in range(b1 + 1, n_bits)
+            ]
+        self._probe_masks = np.asarray(masks, np.int64)
+
+    def _rebuild(self) -> None:
+        keys = self.bank.keys()
+        if not keys:
+            return
+        slots = [self.bank.slot_of(k) for k in keys]
+        sig_mat = self._signatures(self.bank.matrix()[slots])
+        for slot, sigs in zip(slots, sig_mat):
+            self._insert_sigs(slot, tuple(int(s) for s in sigs))
+
+    def _maybe_grow(self) -> None:
+        if (
+            self._adaptive
+            and self.n_bits < self.MAX_BITS
+            and len(self._sigs_of) > self.TARGET_OCCUPANCY << self.n_bits
+        ):
+            self._set_geometry(min(self.n_bits + 2, self.MAX_BITS))
+            self._rebuild()
+
+    # -- maintenance ------------------------------------------------------
+
+    def _signatures(self, vecs: np.ndarray) -> np.ndarray:
+        """(M, DIM) -> (M, n_tables) int64 signatures."""
+        bits = (np.atleast_2d(vecs) @ self._planes) > 0  # (M, T*b)
+        return bits.reshape(-1, self.n_tables, self.n_bits) @ self._bit_weights
+
+    def _insert_sigs(self, slot: int, sigs: Tuple[int, ...]) -> None:
+        self._sigs_of[slot] = sigs
+        for t, sig in enumerate(sigs):
+            self._buckets[t].setdefault(sig, set()).add(slot)
+
+    def on_add(self, slot: int, vec: np.ndarray) -> None:
+        self.on_remove(slot)  # slot reuse: drop any stale signature first
+        sigs = self._signatures(np.asarray(vec, np.float32))[0]
+        self._insert_sigs(slot, tuple(int(s) for s in sigs))
+        self._maybe_grow()
+
+    def on_remove(self, slot: int) -> None:
+        sigs = self._sigs_of.pop(slot, None)
+        if sigs is None:
+            return
+        for t, sig in enumerate(sigs):
+            b = self._buckets[t].get(sig)
+            if b is not None:
+                b.discard(slot)
+                if not b:
+                    del self._buckets[t][sig]
+
+    def clear(self) -> None:
+        for b in self._buckets:
+            b.clear()
+        self._sigs_of.clear()
+
+    # -- search -----------------------------------------------------------
+
+    def _probe_sigs(self, sig: int) -> List[int]:
+        return (sig ^ self._probe_masks).tolist()
+
+    def _candidates_raw(self, query: np.ndarray) -> np.ndarray:
+        """Probed slots, possibly duplicated across tables (argmax-safe)."""
+        sigs = self._signatures(query)[0]
+        out: List[int] = []
+        for t in range(self.n_tables):
+            get = self._buckets[t].get
+            for s in (int(sigs[t]) ^ self._probe_masks).tolist():
+                b = get(s)
+                if b:
+                    out.extend(b)
+        return np.asarray(out, np.int64)
+
+    def candidates(self, query: np.ndarray) -> np.ndarray:
+        """Slot ids in probed buckets across all tables (sorted, deduped)."""
+        raw = self._candidates_raw(np.asarray(query, np.float32))
+        return np.unique(raw) if raw.size else raw
+
+    def best_slot(self, query: np.ndarray) -> Tuple[float, int]:
+        """Lean single-query argmax: (score, slot) or (-1e30, -1).
+
+        The plan-cache lookup hot path — no (Q, k) result arrays, no
+        candidate dedup (duplicates can't change an argmax)."""
+        M = self.bank.matrix()
+        if len(self.bank) <= self.scan_threshold:
+            if M.shape[0] == 0:
+                return float(NEG_INF), -1
+            s = M @ query
+            j = int(np.argmax(s))
+            return float(s[j]), j
+        cand = self._candidates_raw(query)
+        if cand.size == 0:
+            return float(NEG_INF), -1
+        s = M[cand] @ query
+        j = int(np.argmax(s))
+        return float(s[j]), int(cand[j])
+
+    def topk(
+        self, queries: np.ndarray, k: int = 1
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(scores (Q, k) f32, slots (Q, k) i32), -1/-1e30 padded.
+
+        Exact within the probed candidate set; exact over the whole bank
+        when it is smaller than ``scan_threshold``.
+        """
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        M = self.bank.matrix()
+        if len(self.bank) <= self.scan_threshold:
+            return _brute_topk(M, queries, k)
+        Q = queries.shape[0]
+        scores = np.full((Q, k), NEG_INF, np.float32)
+        slots = np.full((Q, k), -1, np.int32)
+        for r in range(Q):
+            if k == 1:  # argmax path (dup candidates are harmless)
+                sc, slot = self.best_slot(queries[r])
+                scores[r, 0] = sc
+                slots[r, 0] = slot
+                continue
+            cand = self.candidates(queries[r])
+            if cand.size == 0:
+                continue
+            s, i = _brute_topk(M[cand], queries[r : r + 1], k)
+            scores[r] = s[0]
+            valid = i[0] >= 0
+            slots[r, valid] = cand[i[0][valid]].astype(np.int32)
+        return scores, slots

@@ -1,0 +1,6 @@
+"""Version shims shared by all Pallas kernels in this package."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

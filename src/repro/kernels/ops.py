@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rwkv6 as _rwkv
+from repro.kernels import similarity as _sim
 from repro.kernels import ssd as _ssd
 
 
@@ -54,6 +55,19 @@ def wkv6_op(r, k, v, w_log, u, *, chunk=64):
         tr(r), tr(k), tr(v), tr(w_log), u, chunk=chunk, interpret=_on_cpu()
     )
     return y.transpose(0, 2, 1, 3), st
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n"))
+def batch_topk(queries, bank, *, k=1, block_q=128, block_n=1024):
+    """Batched fuzzy-lookup primitive for the repro.index subsystem.
+
+    queries (Q, D) against bank (N, D), rows L2-normalized -> (scores
+    (Q, k) f32, indices (Q, k) i32), one device call for the whole request
+    batch. Indices are -1 (scores -1e30) where fewer than k rows exist.
+    """
+    return _sim.topk_cosine(
+        queries, bank, k, block_q=block_q, block_n=block_n, interpret=_on_cpu()
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

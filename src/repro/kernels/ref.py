@@ -68,6 +68,28 @@ def rwkv6_ref(r, k, v, w_log, u, state0):
     return ys.transpose(1, 0, 2, 3), state
 
 
+def topk_cosine_ref(queries, bank, k):
+    """Numpy oracle for kernels/similarity.py: brute-force scores + stable
+    argsort. queries (Q, D), bank (N, D), rows L2-normalized.
+    Returns (scores (Q, k) f32, indices (Q, k) i32), -1/-1e30 padded when
+    N < k; ties resolve to the lowest bank row (matches the kernel)."""
+    import numpy as np
+
+    q = np.asarray(queries, np.float32)
+    b = np.asarray(bank, np.float32)
+    Q, N = q.shape[0], b.shape[0]
+    out_s = np.full((Q, k), NEG_INF, np.float32)
+    out_i = np.full((Q, k), -1, np.int32)
+    if N == 0 or Q == 0:
+        return out_s, out_i
+    scores = q @ b.T  # (Q, N)
+    kk = min(k, N)
+    order = np.argsort(-scores, axis=1, kind="stable")[:, :kk]
+    out_s[:, :kk] = np.take_along_axis(scores, order, axis=1)
+    out_i[:, :kk] = order
+    return out_s, out_i
+
+
 def ssd_ref(x, dt, A_log, B_, C_, D, state0):
     """Sequential SSD. x: (B,S,H,P); dt: (B,S,H); B_/C_: (B,S,Ns);
     A_log, D: (H,); state0: (B,H,P,Ns). Returns (y, state)."""

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _ssd_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, o_ref, st_out_ref,
                 state_scr, *, chunk, n_chunks):
@@ -106,7 +108,7 @@ def ssd(
             jax.ShapeDtypeStruct((Bb, H, P, Ns), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, Ns), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

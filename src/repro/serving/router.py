@@ -103,6 +103,29 @@ class TwoTierRouter:
         t0 = time.perf_counter()
         tpl = self.cache.lookup(kw)
         self.metrics.lookup_s += time.perf_counter() - t0
+        return self._dispatch(request, kw, tpl)
+
+    def route_batch(self, requests: List[Any]) -> List[Any]:
+        """Admit a whole batch of requests through one cache pass.
+
+        All keywords are answered by a single ``lookup_batch`` — with a
+        fuzzy cache on the ``pallas`` backend that is one ``batch_topk``
+        device call for the entire batch instead of one scan per request —
+        then each request takes its usual hit/miss tier dispatch.
+        """
+        self.metrics.requests += len(requests)
+        kws = [self.extract_keyword(r) for r in requests]
+        t0 = time.perf_counter()
+        if hasattr(self.cache, "lookup_batch"):
+            tpls = self.cache.lookup_batch(kws)
+        else:
+            tpls = [self.cache.lookup(kw) for kw in kws]
+        self.metrics.lookup_s += time.perf_counter() - t0
+        return [
+            self._dispatch(r, kw, tpl) for r, kw, tpl in zip(requests, kws, tpls)
+        ]
+
+    def _dispatch(self, request: Any, kw: str, tpl: Optional[Any]) -> Any:
         if tpl is not None:
             self.metrics.hits += 1
             self.metrics.small_tier_calls += 1

@@ -166,6 +166,23 @@ def test_distributed_cache_data_loss_without_replication():
     assert hits < 40  # r=1 must lose the downed node's keys
 
 
+def test_distributed_cache_fuzzy_shards_and_batch_lookup():
+    dc = DistributedPlanCache(
+        4, replication=2, capacity_per_node=64, fuzzy=True, fuzzy_threshold=0.7
+    )
+    dc.insert("working capital ratio", "wc")
+    dc.insert("net revenue growth", "nr")
+    # fuzzy resolution happens inside the owning shard's index
+    assert dc.lookup("working capital ratio analysis") == "wc"
+    out = dc.lookup_batch(
+        ["net revenue growth", "net revenue growth 2023", "zz unrelated zz"]
+    )
+    assert out[0] == "nr" and out[1] == "nr" and out[2] is None
+    # elastic add keeps shard indexes in sync through rebalancing
+    dc.add_node("cache-9")
+    assert dc.lookup("working capital ratio analysis") == "wc"
+
+
 def test_graceful_remove_rehomes_keys():
     dc = DistributedPlanCache(4, replication=1, capacity_per_node=64)
     for i in range(30):

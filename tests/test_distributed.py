@@ -85,9 +85,17 @@ def test_big_matrices_are_sharded():
     assert any("data" in str(s) for s in leaves.values())  # FSDP present
 
 
+NEEDS_NEW_MESH_API = pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType"),
+    reason="subprocess uses the jax>=0.6 mesh API (AxisType/set_mesh/"
+           "shard_map); unavailable on this jax",
+)
+
+
 # -- multi-device subprocess tests ----------------------------------------------
 
 
+@NEEDS_NEW_MESH_API
 def test_ep_moe_matches_oracle_on_mesh():
     run_sub(
         """
@@ -116,6 +124,7 @@ def test_ep_moe_matches_oracle_on_mesh():
     )
 
 
+@NEEDS_NEW_MESH_API
 def test_pipeline_parallel_fwd_bwd():
     run_sub(
         """
@@ -144,6 +153,7 @@ def test_pipeline_parallel_fwd_bwd():
     )
 
 
+@NEEDS_NEW_MESH_API
 def test_sharded_train_step_runs_and_matches_single():
     """Tiny model: sharded (2x4 mesh) train step == single-device step."""
     run_sub(
@@ -188,6 +198,7 @@ def test_sharded_train_step_runs_and_matches_single():
     )
 
 
+@NEEDS_NEW_MESH_API
 def test_elastic_reshard_preserves_values():
     run_sub(
         """
@@ -212,6 +223,7 @@ def test_elastic_reshard_preserves_values():
     )
 
 
+@NEEDS_NEW_MESH_API
 def test_compressed_allreduce_on_mesh():
     run_sub(
         """

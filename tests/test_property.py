@@ -1,9 +1,17 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+Skipped cleanly when hypothesis is absent (it is a dev-only dependency —
+see requirements-dev.txt); a bare import would error out collection and
+take the whole pytest run down with it.
+"""
 
 import math
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cache import PlanCache
 from repro.core.distributed_cache import HashRing

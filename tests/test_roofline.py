@@ -42,7 +42,10 @@ def test_scan_flops_multiplied_by_trip_count():
         return y
 
     compiled = jax.jit(f).lower(x, ws).compile()
-    raw = compiled.cost_analysis()["flops"]
+    raw = compiled.cost_analysis()
+    if isinstance(raw, list):  # jax<=0.4 returns one entry per program
+        raw = raw[0]
+    raw = raw["flops"]
     parsed = HloCostModel(compiled.as_text()).entry_cost().flops
     expected = L * 2 * 64**3
     assert abs(parsed - expected) / expected < 0.05, (parsed, expected)
@@ -84,6 +87,11 @@ def test_unrolled_matches_scan_accounting():
     assert abs(a - b) / a < 0.05
 
 
+@pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType"),
+    reason="subprocess uses the jax>=0.6 mesh API (AxisType); unavailable "
+           "on this jax",
+)
 def test_collective_bytes_from_sharded_fn():
     import os
     import subprocess

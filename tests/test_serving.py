@@ -103,6 +103,36 @@ def test_router_routes_by_cache_and_async_cachegen():
     router.close()
 
 
+def test_router_route_batch_single_lookup_pass():
+    """route_batch answers the whole batch via one lookup_batch pass; fuzzy
+    near-keywords resolve against the cache's incremental index."""
+    cache = PlanCache(capacity=10, fuzzy=True, fuzzy_threshold=0.7)
+    cache.insert("working capital ratio", {"tpl_for": "working capital ratio"})
+
+    router = TwoTierRouter(
+        cache,
+        extract_keyword=lambda req: req["kw"],
+        plan_large=lambda req: {"plan": "fresh"},
+        plan_small_with_template=lambda req, tpl: {"plan": "adapted", "tpl": tpl},
+        make_template=lambda req, res: {"tpl_for": req["kw"]},
+        async_cachegen=False,
+    )
+    out = router.route_batch(
+        [
+            {"kw": "working capital ratio"},           # exact hit
+            {"kw": "working capital ratio analysis"},  # fuzzy hit
+            {"kw": "quantum chromodynamics"},          # miss -> large tier
+        ]
+    )
+    assert [o["plan"] for o in out] == ["adapted", "adapted", "fresh"]
+    m = router.metrics.snapshot()
+    assert m["requests"] == 3
+    assert m["small_tier_calls"] == 2 and m["large_tier_calls"] == 1
+    # the miss distilled its template into the cache synchronously
+    assert router.route({"kw": "quantum chromodynamics"})["plan"] == "adapted"
+    router.close()
+
+
 def test_router_async_does_not_block():
     cache = PlanCache(capacity=10)
     slow = {"done": False}
