@@ -1,7 +1,7 @@
 # Local mirror of .github/workflows/smoke.yml
 PYTHONPATH := src
 
-.PHONY: smoke test bench-fast
+.PHONY: smoke test bench-fast docs-check
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -9,4 +9,7 @@ test:
 bench-fast:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --fast --only t5,f3
 
-smoke: test bench-fast
+docs-check:
+	PYTHONPATH=$(PYTHONPATH) python tools/check_docs.py
+
+smoke: test bench-fast docs-check

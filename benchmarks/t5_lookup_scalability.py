@@ -5,31 +5,58 @@ carries an **index-backend dimension** (``repro.index``):
 
 * ``brute``     the paper prototype's O(N*dim) numpy cosine scan — this is
                 the Table 5 scaling cliff, kept as the baseline;
-* ``pallas``    ``ops.batch_topk`` blocked kernel. On this CPU container it
-                runs in interpret mode (constant-factor slow; measured only
-                up to 10k entries) — on TPU the identical call compiles to
-                Mosaic and the N axis streams through the MXU;
+* ``pallas``    ``ops.batch_topk`` blocked kernel against the *host* bank:
+                every call re-uploads the whole ``capacity * DIM * 4``-byte
+                arena to the device. On this CPU container it runs in
+                interpret mode (constant-factor slow; capped at 50k
+                entries) — on TPU the identical call compiles to Mosaic;
 * ``bucketed``  multi-probe SRP-LSH candidate generation: sublinear in N,
                 falling back to the exact brute scan below its size
-                threshold (so small sizes print identical latencies).
+                threshold (so small sizes print identical latencies);
+* ``device``    ``ops.resident_topk`` against a device-resident
+                ``DeviceBank`` arena: the bank never travels again after
+                admission, so steady-state H2D is the query batch only
+                (~DIM*4 bytes/lookup vs the pallas column's
+                ``capacity*DIM*4``).
 
-Rows: ``t5/exact/{n}``, ``t5/fuzzy/{backend}/{n}``, plus a derived
-``t5/fuzzy/speedup_bucketed_vs_brute/{n_max}`` row whose ``hit_x``/
-``miss_x`` record how many times faster the bucketed backend answers the
-same lookups at the largest measured size.
+Every fuzzy row's ``derived`` includes ``h2d_per_lookup`` — host-to-device
+bytes moved per lookup (0 for the host-resident brute/bucketed backends;
+measured from DeviceBank telemetry for ``device``; the full arena + query
+upload for ``pallas``).
+
+Rows: ``t5/exact/{n}``, ``t5/fuzzy/{backend}/{n}``, plus derived speedup
+rows at the largest common size: ``t5/fuzzy/speedup_bucketed_vs_brute/{n}``
+and ``t5/fuzzy/speedup_device_vs_pallas/{n}`` (hit_x/miss_x = how many
+times faster the resident-bank device backend answers the same lookups
+than the re-uploading host-bank pallas backend).
+
+Standalone CLI (the CI docs job smoke-tests ``--help``):
+
+    PYTHONPATH=src python -m benchmarks.t5_lookup_scalability \
+        --backend device --fast
 """
 
 from __future__ import annotations
 
-from typing import List
+import pathlib
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+if __package__ in (None, ""):  # direct-file execution: python benchmarks/t5_...
+    _root = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_root / "src"))
+    sys.path.insert(0, str(_root))
 
 from benchmarks.common import Row, timeit
 from repro.core.cache import PlanCache
 from repro.index import DIM, SimilarityIndex
 
-PALLAS_MAX_N = 10_000  # interpret-mode CPU cap; on TPU there is no cap
+FUZZY_BACKENDS = ("brute", "pallas", "bucketed", "device")
+PALLAS_MAX_N = 50_000  # interpret-mode CPU cap; on TPU there is no cap
+DEVICE_MAX_N = 100_000  # bounds resident-arena memory on the CPU container
+ADMISSION_WAVE = 8192  # device builds insert in waves (one scatter each)
 
 
 def _fill_exact(n: int) -> PlanCache:
@@ -40,17 +67,35 @@ def _fill_exact(n: int) -> PlanCache:
 
 
 def _build_index(backend: str, M: np.ndarray) -> SimilarityIndex:
+    # build in admission waves for every backend: one lock acquisition and
+    # (device) one donated multi-slot scatter per wave, instead of paying
+    # N Python-level add() calls at the 1M sizes
     idx = SimilarityIndex(backend=backend, initial_capacity=M.shape[0])
-    for i in range(M.shape[0]):
-        idx.add(f"k{i}", M[i])
+    for lo in range(0, M.shape[0], ADMISSION_WAVE):
+        hi = min(lo + ADMISSION_WAVE, M.shape[0])
+        idx.add_batch([f"k{i}" for i in range(lo, hi)], M[lo:hi])
     return idx
 
 
-def run(fast: bool = False) -> List[Row]:
-    # fast still reaches 50k: the brute-vs-bucketed gap is the point of this
-    # table, and it only becomes unambiguous past ~10k entries
+def _skip(backend: str, n: int) -> bool:
+    return (backend == "pallas" and n > PALLAS_MAX_N) or (
+        backend == "device" and n > DEVICE_MAX_N
+    )
+
+
+def run(
+    fast: bool = False, backends: Optional[Sequence[str]] = None
+) -> List[Row]:
+    # fast still reaches 50k: the brute-vs-bucketed and pallas-vs-device
+    # gaps are the point of this table, and they only become unambiguous
+    # past ~10k entries
     sizes = ([100, 1_000, 10_000, 50_000] if fast
-             else [100, 1_000, 10_000, 100_000, 1_000_000])
+             else [100, 1_000, 10_000, 50_000, 100_000, 1_000_000])
+    backends = tuple(backends) if backends else FUZZY_BACKENDS
+    # the device column's acceptance metric is its speedup over the
+    # host-bank pallas backend, so measuring device implies the reference
+    if "device" in backends and "pallas" not in backends:
+        backends = backends + ("pallas",)
     rows: List[Row] = []
     for n in sizes:
         c = _fill_exact(n)
@@ -61,39 +106,92 @@ def run(fast: bool = False) -> List[Row]:
         rows.append(Row(f"t5/exact/{n}", hit_us,
                         {"hit_us": round(hit_us, 1), "miss_us": round(miss_us, 1)}))
 
-    # fuzzy: one shared bank of normalized embeddings per size, three backends
-    brute_at, bucketed_at = {}, {}
+    # fuzzy: one shared bank of normalized embeddings per size
+    measured: Dict[str, Dict[int, Tuple[float, float]]] = {
+        b: {} for b in FUZZY_BACKENDS
+    }
     for n in sizes:
         M = np.random.RandomState(0).randn(n, DIM).astype(np.float32)
         M /= np.linalg.norm(M, axis=1, keepdims=True)
         q_hit = (M[n // 2] + 0.01).astype(np.float32)
         q_hit /= np.linalg.norm(q_hit)
         q_miss = -M[0]
-        for backend in ("brute", "pallas", "bucketed"):
-            if backend == "pallas" and n > PALLAS_MAX_N:
+        for backend in backends:
+            if _skip(backend, n):
                 continue
             idx = _build_index(backend, M)
 
             def lookup(q):
                 return idx.best_match(q, threshold=0.8)
 
-            reps, num = (2, 1) if backend == "pallas" else (3, max(3, 2000 // n))
-            if backend == "pallas":
+            on_device = backend in ("pallas", "device")
+            reps, num = (2, 1) if on_device else (3, max(3, 2000 // n))
+            if on_device:
                 lookup(q_hit)  # warm the jit cache outside the timed region
+            h2d_before = (
+                idx.telemetry()["device"]["h2d_bytes_total"]
+                if backend == "device" else 0
+            )
             hit_us = timeit(lambda: lookup(q_hit), repeats=reps, number=num)
             miss_us = timeit(lambda: lookup(q_miss), repeats=reps, number=num)
-            rows.append(Row(f"t5/fuzzy/{backend}/{n}", hit_us,
-                            {"hit_us": round(hit_us, 1),
-                             "miss_us": round(miss_us, 1)}))
-            if backend == "brute":
-                brute_at[n] = (hit_us, miss_us)
-            elif backend == "bucketed":
-                bucketed_at[n] = (hit_us, miss_us)
+            derived = {"hit_us": round(hit_us, 1), "miss_us": round(miss_us, 1)}
+            if backend == "device":
+                # steady-state H2D measured from DeviceBank telemetry: the
+                # bank is resident, only query batches crossed
+                moved = idx.telemetry()["device"]["h2d_bytes_total"] - h2d_before
+                derived["h2d_per_lookup"] = moved // (2 * reps * num)
+                derived["bank_h2d_per_lookup"] = 0
+            elif backend == "pallas":
+                # the host arena is re-uploaded inside every batch_topk call
+                arena_bytes = idx.bank.arena().nbytes
+                derived["h2d_per_lookup"] = arena_bytes + 8 * DIM * 4
+                derived["bank_h2d_per_lookup"] = arena_bytes
+            else:
+                derived["h2d_per_lookup"] = 0  # host-resident compute
+            rows.append(Row(f"t5/fuzzy/{backend}/{n}", hit_us, derived))
+            measured[backend][n] = (hit_us, miss_us)
 
-    n_max = sizes[-1]
-    bh, bm = brute_at[n_max]
-    ch, cm = bucketed_at[n_max]
-    rows.append(Row(f"t5/fuzzy/speedup_bucketed_vs_brute/{n_max}", 0.0,
-                    {"hit_x": round(bh / max(ch, 1e-9), 1),
-                     "miss_x": round(bm / max(cm, 1e-9), 1)}))
+    for name, fast_b, slow_b in (
+        ("speedup_bucketed_vs_brute", "bucketed", "brute"),
+        ("speedup_device_vs_pallas", "device", "pallas"),
+    ):
+        common = sorted(set(measured[fast_b]) & set(measured[slow_b]))
+        if not common:
+            continue
+        n_at = common[-1]
+        sh, sm = measured[slow_b][n_at]
+        fh, fm = measured[fast_b][n_at]
+        rows.append(Row(f"t5/fuzzy/{name}/{n_at}", 0.0,
+                        {"hit_x": round(sh / max(fh, 1e-9), 1),
+                         "miss_x": round(sm / max(fm, 1e-9), 1)}))
     return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Table 5 lookup-scalability sweep (exact + fuzzy "
+        "backends, H2D bytes per lookup)"
+    )
+    ap.add_argument("--fast", action="store_true",
+                    help="sizes up to 50k instead of 1M")
+    ap.add_argument(
+        "--backend", default="",
+        help="comma list of fuzzy backends to measure "
+        f"(default: all of {','.join(FUZZY_BACKENDS)}); 'device' always "
+        "measures the pallas reference too for the speedup row",
+    )
+    args = ap.parse_args()
+    backends = tuple(b for b in args.backend.split(",") if b) or None
+    for b in backends or ():
+        if b not in FUZZY_BACKENDS:
+            raise SystemExit(f"unknown backend {b!r} (choose from "
+                             f"{','.join(FUZZY_BACKENDS)})")
+    print("name,us_per_call,derived")
+    for row in run(fast=args.fast, backends=backends):
+        print(row.csv())
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised by the CI docs job
+    main()

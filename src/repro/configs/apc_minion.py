@@ -61,7 +61,10 @@ class APCDeployment:
     cache_capacity: int = 100  # paper Table 4 default
     fuzzy_matching: bool = False  # paper default: exact matching
     fuzzy_threshold: float = 0.8
-    index_backend: str = "auto"  # repro.index: auto | brute | pallas | bucketed
+    # repro.index: auto | brute | pallas | bucketed | device
+    # ("device" keeps the embedding bank resident on the accelerator —
+    # zero bank H2D per lookup; see docs/architecture.md)
+    index_backend: str = "auto"
 
 
 DEFAULT = APCDeployment()

@@ -6,9 +6,11 @@ behind the same interface (``fuzzy=True``), backed by the ``repro.index``
 similarity subsystem: the matcher's embedding bank is maintained
 *incrementally* under the cache lock on insert/evict/TTL-expire (no
 per-lookup key-list copy or matrix rebuild), and ``index_backend`` selects
-the search strategy (``brute`` | ``pallas`` | ``bucketed`` | ``auto``).
-The paper's threshold/latency trade-offs (Tables 5-6) reproduce against the
-``brute`` backend; ``bucketed`` removes the Table 5 scaling cliff.
+the search strategy (``brute`` | ``pallas`` | ``bucketed`` | ``device`` |
+``auto``). The paper's threshold/latency trade-offs (Tables 5-6) reproduce
+against the ``brute`` backend; ``bucketed`` removes the Table 5 scaling
+cliff, and ``device`` keeps the embedding bank resident on the accelerator
+so batched lookups move zero bank bytes per call.
 """
 
 from __future__ import annotations
@@ -120,6 +122,30 @@ class PlanCache(Generic[V]):
             self.stats.inserts += 1
             if self._matcher is not None:
                 self._matcher.add(keyword)
+            while len(self._store) > self.capacity:
+                old, _ = self._store.popitem(last=False)
+                self.stats.evictions += 1
+                if self._matcher is not None:
+                    self._matcher.remove(old)
+
+    def insert_batch(self, items: List[Tuple[str, V]]) -> None:
+        """Insert a whole admission wave under one lock acquisition.
+
+        The fuzzy index ingests the wave via ``add_batch`` — one embedding
+        batch and, on the ``device`` backend, one donated multi-slot device
+        scatter — instead of one index write per key. Eviction runs after
+        the wave lands, so a wave larger than ``capacity`` keeps its newest
+        entries (same LRU order as sequential inserts).
+        """
+        with self._lock:
+            now = time.time()
+            for kw, v in items:
+                if kw in self._store:
+                    self._store.move_to_end(kw)
+                self._store[kw] = (v, now)
+                self.stats.inserts += 1
+            if self._matcher is not None and items:
+                self._matcher.add_batch([kw for kw, _ in items])
             while len(self._store) > self.capacity:
                 old, _ = self._store.popitem(last=False)
                 self.stats.evictions += 1

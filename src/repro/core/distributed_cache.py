@@ -6,6 +6,12 @@ elastic add/remove of cache servers moves only ~K/N keys. Each key is
 replicated onto R successive ring nodes; reads fall through replicas on
 node failure (fault tolerance), writes go to all live replicas.
 
+Each shard is a full PlanCache, so with ``fuzzy=True`` every shard owns a
+private ``repro.index`` similarity index scoped to its local keys;
+``index_backend="device"`` gives each shard its own device-resident
+embedding bank, making the grouped ``lookup_batch`` fan-out one
+resident-bank device call per probed shard per tier.
+
 In-process shards stand in for network nodes (the container has one host);
 the interface (lookup/insert/add_node/remove_node/mark_down) is what a
 networked implementation would expose.
@@ -176,31 +182,40 @@ class DistributedPlanCache:
     def lookup_batch(self, keywords: List[str]) -> List[Optional[Any]]:
         """Batched lookups under one lock acquisition (router admission).
 
-        Keywords are grouped by primary owner so each shard's fuzzy index
-        answers its group in one batched call; replica fallthrough applies
-        per keyword as in :meth:`lookup`.
+        Tier-by-tier grouped fan-out: tier 0 groups keywords by primary
+        owner so each shard's fuzzy index answers its group in one batched
+        call (on the ``device`` backend, one resident-bank device call per
+        shard); every subsequent replica/fuzzy-scatter tier batches the
+        *still-missing* keywords the same way, so the fallthrough path is
+        also O(tiers) shard calls instead of one per keyword. Probe order
+        per keyword is identical to :meth:`lookup`, so results match the
+        sequential path exactly.
         """
         with self._lock:
             out: List[Optional[Any]] = [None] * len(keywords)
-            owners_of: List[List[str]] = []
-            by_primary: Dict[str, List[int]] = {}
-            for i, k in enumerate(keywords):
-                owners = self._probe_order(k)
-                owners_of.append(owners)
-                if owners:
-                    by_primary.setdefault(owners[0], []).append(i)
-            for node, idxs in by_primary.items():
-                vals = self.shards[node].lookup_batch([keywords[i] for i in idxs])
-                for i, v in zip(idxs, vals):
-                    out[i] = v
-            for i, k in enumerate(keywords):
-                if out[i] is None:
-                    for n in owners_of[i][1:]:
-                        v = self.shards[n].lookup(k)
-                        if v is not None:
-                            out[i] = v
-                            break
-                if out[i] is None:
+            owners_of = [self._probe_order(k) for k in keywords]
+            pending = list(range(len(keywords)))
+            tier = 0
+            while pending:
+                by_node: Dict[str, List[int]] = {}
+                for i in pending:
+                    if tier < len(owners_of[i]):
+                        by_node.setdefault(owners_of[i][tier], []).append(i)
+                if not by_node:
+                    break
+                for node, idxs in by_node.items():
+                    vals = self.shards[node].lookup_batch(
+                        [keywords[i] for i in idxs]
+                    )
+                    for i, v in zip(idxs, vals):
+                        out[i] = v
+                pending = [
+                    i for i in pending
+                    if out[i] is None and tier + 1 < len(owners_of[i])
+                ]
+                tier += 1
+            for v in out:
+                if v is None:
                     self.stats.misses += 1
                 else:
                     self.stats.hits += 1
@@ -215,6 +230,19 @@ class DistributedPlanCache:
         with self._lock:
             self._insert_unlocked(keyword, value)
             self.stats.inserts += 1
+
+    def insert_batch(self, items: List[Tuple[str, Any]]) -> None:
+        """Admission-wave insert: group by owner shard so each shard takes
+        the wave in one ``insert_batch`` call (one device scatter per shard
+        on the ``device`` backend)."""
+        with self._lock:
+            by_node: Dict[str, List[Tuple[str, Any]]] = {}
+            for kw, v in items:
+                for n in self._live(self.ring.nodes_for(kw, self.replication)):
+                    by_node.setdefault(n, []).append((kw, v))
+            for n, wave in by_node.items():
+                self.shards[n].insert_batch(wave)
+            self.stats.inserts += len(items)
 
     def __contains__(self, keyword: str) -> bool:
         # exact membership, no fuzzy resolution and no stats mutation

@@ -13,7 +13,10 @@ view over an :class:`~repro.index.SimilarityIndex` — O(1) add/remove on the
 bank's freelist arena, no rebuilds, and a choice of search backend:
 
 * ``brute``    exact numpy scan (the paper's prototype behavior)
-* ``pallas``   ``ops.batch_topk`` blocked kernel (one device call/batch)
+* ``pallas``   ``ops.batch_topk`` blocked kernel (one device call/batch,
+               bank re-uploaded per call)
+* ``device``   ``ops.resident_topk`` against a device-resident DeviceBank
+               mirror — one device call/batch, zero bank H2D per lookup
 * ``bucketed`` multi-probe SRP-LSH, sublinear at 1e6 entries
 * ``auto``     brute below ~4k live keys, bucketed above (default)
 """
@@ -45,6 +48,11 @@ class FuzzyMatcher:
 
     def add(self, key: str) -> None:
         self.index.add(key)
+
+    def add_batch(self, keys: List[str]) -> None:
+        """Admission-wave insert: one embedding batch, and on the ``device``
+        backend one donated multi-slot device scatter for the whole wave."""
+        self.index.add_batch(keys)
 
     def remove(self, key: str) -> None:
         self.index.remove(key)

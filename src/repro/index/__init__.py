@@ -12,11 +12,30 @@ scan:
   TPU).
 * :class:`~repro.index.bucketed.BucketedIndex` — multi-probe SRP-LSH for
   sublinear candidate generation at 1e6 entries.
+* :class:`~repro.index.device.DeviceBank` — device-resident mirror of the
+  host arena (donated in-place updates), searched by ``ops.resident_topk``
+  with zero bank bytes re-uploaded per lookup.
 
 :class:`SimilarityIndex` is the facade: pick a backend (``brute`` |
-``pallas`` | ``bucketed`` | ``auto``) and get add/remove/topk/best_match
-over keys. ``auto`` serves exact brute scans while the bank is small and
-switches to the bucketed index beyond ``auto_bucketed_min`` live entries.
+``pallas`` | ``bucketed`` | ``device`` | ``auto``) and get
+add/remove/topk/best_match over keys. ``auto`` serves exact brute scans
+while the bank is small and switches to the bucketed index beyond
+``auto_bucketed_min`` live entries; ``device`` keeps host and device
+arenas in lockstep and answers whole query batches in one device call
+with zero steady-state H2D bank traffic.
+
+Thread-safety contract: all mutation (``add`` / ``add_batch`` / ``remove``
+/ ``clear``) takes ``self.bank.lock`` and updates the host arena, the LSH
+buckets, and the device arena atomically with respect to other
+lock-holders. Host-side searches (``brute`` / ``bucketed``) are lock-free
+reads of the arena snapshot: callers that interleave searches with writers
+and need a consistent view must hold ``bank.lock`` across the search —
+PlanCache does exactly this by wrapping every index call in its own RLock,
+which is the supported pattern. ``device``-backend searches always
+dispatch under ``bank.lock`` internally: a donating write does not merely
+race a reader, it *deletes* the arena buffer the reader captured (buffer
+donation is in-place on TPU), so search-vs-mutation serialization is
+mandatory there, not optional.
 """
 
 from __future__ import annotations
@@ -27,8 +46,9 @@ import numpy as np
 
 from repro.index.bank import DIM, EmbeddingBank, embed, embed_batch
 from repro.index.bucketed import NEG_INF, BucketedIndex, _brute_topk
+from repro.index.device import DeviceBank
 
-BACKENDS = ("auto", "brute", "pallas", "bucketed")
+BACKENDS = ("auto", "brute", "pallas", "bucketed", "device")
 
 
 class SimilarityIndex:
@@ -51,6 +71,7 @@ class SimilarityIndex:
         self.backend = backend
         self.bank = bank if bank is not None else EmbeddingBank(initial_capacity)
         self._bucketed: Optional[BucketedIndex] = None
+        self._device: Optional[DeviceBank] = None
         if backend in ("bucketed", "auto"):
             self._bucketed = BucketedIndex(
                 self.bank,
@@ -60,6 +81,12 @@ class SimilarityIndex:
                 probe_hamming=probe_hamming,
                 scan_threshold=auto_bucketed_min if backend == "auto" else 2048,
             )
+        elif backend == "device":
+            with self.bank.lock:
+                self._device = DeviceBank(self.bank.arena().shape[0])
+                if len(self.bank):  # bootstrap: one upload of existing rows
+                    slots = [self.bank.slot_of(k) for k in self.bank.keys()]
+                    self._device.set_rows(slots, self.bank.arena()[slots])
 
     # -- mutation (O(1) amortized; keeps LSH buckets in sync) -------------
 
@@ -74,19 +101,67 @@ class SimilarityIndex:
             slot = self.bank.add(key, vector)
             if self._bucketed is not None:
                 self._bucketed.on_add(slot, self.bank.matrix()[slot])
+            if self._device is not None:
+                self._device.set_row(slot, self.bank.matrix()[slot])
             return slot
+
+    def add_batch(
+        self, keys: Sequence[str], vectors: Optional[np.ndarray] = None
+    ) -> List[int]:
+        """Insert a whole admission wave: one embedding batch and — on the
+        ``device`` backend — one donated multi-slot scatter instead of one
+        device write per key."""
+        keys = list(keys)
+        if not keys:
+            return []
+        if vectors is None:
+            vectors = embed_batch(keys)
+        vectors = np.asarray(vectors, np.float32)
+        # dedupe with last-wins (the sequential host semantics): a repeated
+        # slot in one device scatter has an *unspecified* winner, which
+        # would let the device row diverge from the host arena
+        vec_of = {key: vec for key, vec in zip(keys, vectors)}
+        with self.bank.lock:
+            slot_of = {}
+            for key, vec in vec_of.items():
+                slot = self.bank.add(key, vec)
+                slot_of[key] = slot
+                if self._bucketed is not None:
+                    self._bucketed.on_add(slot, self.bank.matrix()[slot])
+            if self._device is not None:
+                self._device.set_rows(
+                    list(slot_of.values()),
+                    np.stack([vec_of[k] for k in slot_of]),
+                )
+            return [slot_of[k] for k in keys]
 
     def remove(self, key: str) -> None:
         with self.bank.lock:
             slot = self.bank.remove(key)
-            if slot is not None and self._bucketed is not None:
-                self._bucketed.on_remove(slot)
+            if slot is not None:
+                if self._bucketed is not None:
+                    self._bucketed.on_remove(slot)
+                if self._device is not None:
+                    self._device.clear_row(slot)
 
     def clear(self) -> None:
         with self.bank.lock:
             self.bank.clear()
             if self._bucketed is not None:
                 self._bucketed.clear()
+            if self._device is not None:
+                self._device.clear()
+
+    def telemetry(self) -> dict:
+        """Live counters for serving dashboards / auto-tuning: device-bank
+        H2D accounting and (on bucketed backends) LSH recall/candidate
+        stats."""
+        out: dict = {"backend": self.backend, "size": len(self.bank)}
+        if self._device is not None:
+            out["device"] = self._device.telemetry()
+        if self._bucketed is not None:
+            out["bucketed"] = self._bucketed.telemetry.snapshot()
+        return out
 
     # -- search -----------------------------------------------------------
 
@@ -110,7 +185,7 @@ class SimilarityIndex:
         exact count matters.
         """
         q = self._as_queries(queries)
-        if self.backend == "pallas":
+        if self.backend in ("pallas", "device"):
             from repro.kernels import ops  # lazy: keep core import jax-free
 
             # search the full arena, not matrix(): its capacity changes
@@ -120,7 +195,16 @@ class SimilarityIndex:
             qp = max(8, 1 << max(0, nq - 1).bit_length())
             if qp != nq:
                 q = np.pad(q, ((0, qp - nq), (0, 0)))
-            s, i = ops.batch_topk(q, self.bank.arena(), k=k)
+            if self._device is not None:
+                # resident bank: only the query batch crosses to the device.
+                # Dispatch under bank.lock — a concurrent donating write
+                # would DELETE the arena buffer captured here (donation is
+                # in-place on TPU), which is a crash, not a stale read.
+                with self.bank.lock:
+                    self._device.note_h2d(q.nbytes)
+                    s, i = ops.resident_topk(q, self._device.arena, k=k)
+            else:
+                s, i = ops.batch_topk(q, self.bank.arena(), k=k)
             scores, slots = np.array(s[:nq]), np.array(i[:nq])
         elif self._bucketed is not None:  # bucketed | auto
             scores, slots = self._bucketed.topk(q, k)
@@ -155,7 +239,9 @@ class SimilarityIndex:
     ) -> Optional[str]:
         if isinstance(query, str):
             query = embed(query)
-        if self.backend != "pallas":  # lean single-lookup path, no (Q,k) arrays
+        # device/pallas answer through the batched device call; the rest
+        # take the lean host single-lookup path (no (Q, k) arrays)
+        if self.backend not in ("pallas", "device"):
             q = query.astype(np.float32, copy=False).reshape(-1)
             if self._bucketed is not None:
                 score, slot = self._bucketed.best_slot(q)
@@ -177,6 +263,7 @@ __all__ = [
     "DIM",
     "NEG_INF",
     "BucketedIndex",
+    "DeviceBank",
     "EmbeddingBank",
     "SimilarityIndex",
     "embed",

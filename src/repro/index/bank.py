@@ -16,6 +16,16 @@ here, in *batched* form: gram -> (dim index, sign) hashing is memoized and
 the accumulation is a single vectorized ``np.add.at`` scatter instead of the
 seed's per-gram Python loop. Because gram contributions are exact +/-1.0
 float32 integers, the batched path is bit-identical to the sequential one.
+
+Thread-safety contract: every mutator (``add`` / ``remove`` / ``clear``)
+takes ``self.lock`` (an RLock) internally, so interleaved mutation from
+multiple threads is always safe. Reads of ``matrix()`` / ``arena()`` /
+``vector()`` return live views, NOT copies: a reader that must not observe
+concurrent writes holds ``bank.lock`` around the read and everything
+derived from it. Higher layers compose on this single lock — a
+SimilarityIndex nests its bucket/device-arena updates inside it, and
+PlanCache's own RLock wraps every index call — so "hold ``bank.lock``"
+is the one rule that makes the whole index stack consistent.
 """
 
 from __future__ import annotations

@@ -21,17 +21,95 @@ recall-perfect, so LSH only ever replaces the regime where it wins.
 Maintenance is incremental: ``on_add``/``on_remove`` are
 O(n_tables * n_bits) per key (one small matvec + set ops), called by
 SimilarityIndex/EmbeddingBank users under their own locks.
+
+Thread-safety contract: BucketedIndex has no lock of its own. Mutation
+(``on_add`` / ``on_remove`` / ``clear``) must run under the owning bank's
+lock — SimilarityIndex guarantees this — because it rewrites the bucket
+dicts and may trigger an adaptive-geometry rebuild. Queries
+(``best_slot`` / ``topk`` / ``candidates``) are unlocked reads; a caller
+that interleaves queries with writers and needs a consistent view holds
+``bank.lock`` across the query (PlanCache's RLock does this transitively).
+The :class:`LSHTelemetry` counters on the query path are deliberately
+lock-free and benign-racy.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.index.bank import DIM, EmbeddingBank
 
 NEG_INF = np.float32(-1e30)
+
+
+@dataclass
+class LSHTelemetry:
+    """Live quality/cost counters for one BucketedIndex.
+
+    Serving reads ``snapshot()`` to auto-tune ``n_bits``/``probe_hamming``:
+    rising ``avg_candidates`` means the tables are under-sized (grow
+    ``n_bits``); a falling ``top1_agreement`` or rising
+    ``empty_candidate_rate`` means probes miss too often (grow
+    ``probe_hamming`` or ``n_tables``). Recall is measured *live* by
+    re-answering every ``recall_sample_every``-th probed query with the
+    exact brute scan and recording top-1 agreement — an amortized-O(1)
+    overhead instead of an offline sweep (the f3 benchmark's job).
+
+    Counter updates are benign-racy under concurrent queries (they feed
+    dashboards, never control flow); exactness is not required and no lock
+    is taken on the query path.
+    """
+
+    queries: int = 0
+    brute_fallback_queries: int = 0  # answered below scan_threshold
+    probed_queries: int = 0          # answered via bucket probing
+    candidates_total: int = 0
+    empty_candidate_queries: int = 0
+    # histogram of per-query candidate counts, log2 buckets: index b counts
+    # queries that scanned [2^b, 2^(b+1)) candidates (index 0: 0 or 1)
+    candidate_hist: List[int] = field(default_factory=lambda: [0] * 32)
+    recall_checks: int = 0
+    recall_agreements: int = 0
+
+    def observe_brute(self) -> None:
+        self.queries += 1
+        self.brute_fallback_queries += 1
+
+    def observe_probe(self, n_candidates: int) -> None:
+        self.queries += 1
+        self.probed_queries += 1
+        self.candidates_total += n_candidates
+        if n_candidates == 0:
+            self.empty_candidate_queries += 1
+        self.candidate_hist[max(0, int(n_candidates).bit_length() - 1)] += 1
+
+    def observe_recall(self, agreed: bool) -> None:
+        self.recall_checks += 1
+        self.recall_agreements += int(agreed)
+
+    def snapshot(self) -> Dict[str, Any]:
+        probed = max(1, self.probed_queries)
+        return {
+            "queries": self.queries,
+            "probed_queries": self.probed_queries,
+            "brute_fallback_queries": self.brute_fallback_queries,
+            "avg_candidates": round(self.candidates_total / probed, 2),
+            "empty_candidate_rate": round(
+                self.empty_candidate_queries / probed, 4
+            ),
+            "candidate_hist": {
+                f"2^{b}": c for b, c in enumerate(self.candidate_hist) if c
+            },
+            "top1_agreement": (
+                round(self.recall_agreements / self.recall_checks, 4)
+                if self.recall_checks
+                else None
+            ),
+            "recall_checks": self.recall_checks,
+        }
 
 
 def _brute_topk(
@@ -72,6 +150,7 @@ class BucketedIndex:
         seed: int = 0,
         probe_hamming: int = 1,
         scan_threshold: int = 2048,
+        recall_sample_every: int = 64,
     ):
         """``n_bits=None`` (default) adapts: start at 12 bits and rebuild
         with +2 bits whenever average bucket occupancy exceeds
@@ -89,6 +168,10 @@ class BucketedIndex:
         self.n_tables = n_tables
         self.probe_hamming = probe_hamming
         self.scan_threshold = scan_threshold
+        # live quality counters; every recall_sample_every-th probed query
+        # is re-answered exactly to measure recall in production (0: off)
+        self.telemetry = LSHTelemetry()
+        self._recall_every = recall_sample_every
         self._seed = seed
         self._set_geometry(n_bits)
         # bootstrap from whatever the bank already holds (batched hashing)
@@ -170,9 +253,6 @@ class BucketedIndex:
 
     # -- search -----------------------------------------------------------
 
-    def _probe_sigs(self, sig: int) -> List[int]:
-        return (sig ^ self._probe_masks).tolist()
-
     def _candidates_raw(self, query: np.ndarray) -> np.ndarray:
         """Probed slots, possibly duplicated across tables (argmax-safe)."""
         sigs = self._signatures(query)[0]
@@ -197,17 +277,34 @@ class BucketedIndex:
         candidate dedup (duplicates can't change an argmax)."""
         M = self.bank.matrix()
         if len(self.bank) <= self.scan_threshold:
+            self.telemetry.observe_brute()
             if M.shape[0] == 0:
                 return float(NEG_INF), -1
             s = M @ query
             j = int(np.argmax(s))
             return float(s[j]), j
         cand = self._candidates_raw(query)
+        self.telemetry.observe_probe(int(cand.size))
         if cand.size == 0:
             return float(NEG_INF), -1
         s = M[cand] @ query
         j = int(np.argmax(s))
-        return float(s[j]), int(cand[j])
+        slot = int(cand[j])
+        if (
+            self._recall_every
+            and self.telemetry.probed_queries % self._recall_every == 0
+        ):
+            # live recall sample: re-answer this query exactly (amortized
+            # O(N / recall_sample_every) per query). Compare *scores* over
+            # *live* slots only (``_sigs_of`` keys are exactly the hashed
+            # live set): an argmax over the raw matrix would pick a
+            # tombstoned zero row whenever the best live cosine is
+            # negative, and slot comparison would count exact ties as
+            # misses — both are false disagreements.
+            live = np.fromiter(self._sigs_of.keys(), np.int64)
+            exact_best = float(np.max(M[live] @ query))
+            self.telemetry.observe_recall(float(s[j]) >= exact_best - 1e-6)
+        return float(s[j]), slot
 
     def topk(
         self, queries: np.ndarray, k: int = 1
@@ -220,6 +317,8 @@ class BucketedIndex:
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         M = self.bank.matrix()
         if len(self.bank) <= self.scan_threshold:
+            for _ in range(queries.shape[0]):
+                self.telemetry.observe_brute()
             return _brute_topk(M, queries, k)
         Q = queries.shape[0]
         scores = np.full((Q, k), NEG_INF, np.float32)
@@ -231,6 +330,7 @@ class BucketedIndex:
                 slots[r, 0] = slot
                 continue
             cand = self.candidates(queries[r])
+            self.telemetry.observe_probe(int(cand.size))
             if cand.size == 0:
                 continue
             s, i = _brute_topk(M[cand], queries[r : r + 1], k)

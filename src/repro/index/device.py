@@ -1,0 +1,185 @@
+"""DeviceBank: device-resident mirror of an :class:`EmbeddingBank` arena.
+
+The host :class:`~repro.index.bank.EmbeddingBank` is a numpy slot arena; the
+``pallas`` search backend passes that numpy array to ``ops.batch_topk`` on
+every call, which re-uploads ``capacity * DIM * 4`` bytes of bank to the
+device per lookup — the dominant data-movement cost once the cache holds
+tens of thousands of plans. DeviceBank removes that traffic: the arena
+lives on-device as a jax array and is updated *in place* (donated buffers,
+so XLA reuses the storage instead of allocating a fresh arena per write):
+
+* ``set_row(slot, vec)``      — one donated ``arena.at[slot].set(vec)``
+  scatter per insert; uploads exactly one row (``dim * 4`` bytes).
+* ``set_rows(slots, vecs)``   — one donated multi-slot scatter for a whole
+  admission wave (``lookup_batch`` miss-fill / ``insert_batch``).
+* ``clear_row`` / ``clear``   — tombstone/reset with device-generated
+  zeros: **zero** host-to-device bytes.
+* ``grow``                    — capacity doubling via a device-side pad
+  (device-to-device copy, zero H2D).
+
+Steady-state lookups therefore move only the query batch
+(``Q * dim * 4`` bytes) to the device; the bank itself never travels
+again. Every transfer this class *does* perform is accounted in
+``h2d_bytes_total`` so benchmarks (``t5``, ``kernel_bench``) can report
+bytes-moved-per-lookup per backend.
+
+Thread-safety contract: DeviceBank itself is NOT locked. It is owned by a
+:class:`~repro.index.SimilarityIndex`, which mutates it only under
+``bank.lock`` — the same lock serializing host-arena writes — so the host
+and device arenas can never be observed out of lockstep by a consumer that
+follows the lock protocol (PlanCache holds its own lock around every index
+call, which nests the bank lock). Readers of ``arena`` must hold that same
+lock across their device dispatch: a donated update does not leave the old
+buffer stale, it *deletes* it, so an unserialized reader on TPU crashes
+rather than reading a snapshot.
+
+Slot layout is identical to the host arena by construction: slot ``i`` on
+the host is row ``i`` on the device, so top-k indices from a device search
+resolve through ``EmbeddingBank.key_of`` unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.bank import DIM
+
+
+def _donated(fn, *args):
+    """Call a donating jit'd helper with the CPU donation notice silenced.
+
+    CPU jax cannot honor buffer donation and warns per call; the donation
+    is a TPU-side optimization, so the notice is pure noise here (and a
+    module-level filter would not survive pytest's per-test filter reset).
+    """
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        return fn(*args)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _set_row(arena, slot, vec):
+    return arena.at[slot].set(vec)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _set_rows(arena, slots, vecs):
+    return arena.at[slots].set(vecs)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _clear_row(arena, slot):
+    return arena.at[slot].set(jnp.zeros((arena.shape[1],), arena.dtype))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _clear_all(arena):
+    return jnp.zeros_like(arena)
+
+
+@functools.partial(jax.jit, static_argnames=("new_cap",), donate_argnums=(0,))
+def _grow(arena, *, new_cap):
+    return jnp.pad(arena, ((0, new_cap - arena.shape[0]), (0, 0)))
+
+
+class DeviceBank:
+    """Device-resident ``(capacity, dim)`` float32 arena with donated writes.
+
+    Capacity only ever doubles (mirroring ``EmbeddingBank._grow``), so the
+    jit caches for search kernels and the scatter helpers see O(log N)
+    distinct arena shapes, never one per insert.
+    """
+
+    def __init__(self, capacity: int = 64, dim: int = DIM):
+        cap = max(1, int(capacity))
+        self.dim = dim
+        self._arena = jnp.zeros((cap, dim), jnp.float32)
+        # telemetry: every host->device byte this bank moves, by cause
+        self.h2d_bytes_total = 0
+        self.row_updates = 0
+        self.batched_updates = 0
+        self.clears = 0
+        self.grows = 0
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self._arena.shape[0]
+
+    @property
+    def arena(self) -> jnp.ndarray:
+        """The live device buffer. Do not mutate; donated helpers own it."""
+        return self._arena
+
+    def telemetry(self) -> Dict[str, Any]:
+        return {
+            "capacity": self.capacity,
+            "h2d_bytes_total": self.h2d_bytes_total,
+            "row_updates": self.row_updates,
+            "batched_updates": self.batched_updates,
+            "clears": self.clears,
+            "grows": self.grows,
+        }
+
+    def note_h2d(self, nbytes: int) -> None:
+        """Account a transfer performed on this bank's behalf (queries)."""
+        self.h2d_bytes_total += int(nbytes)
+
+    # -- mutation (caller holds the host bank's lock) ---------------------
+
+    def ensure_capacity(self, capacity: int) -> None:
+        """Grow (device-side, zero H2D) until at least ``capacity`` rows."""
+        if capacity > self.capacity:
+            new_cap = self.capacity
+            while new_cap < capacity:
+                new_cap *= 2
+            self._arena = _donated(
+                functools.partial(_grow, new_cap=new_cap), self._arena
+            )
+            self.grows += 1
+
+    def set_row(self, slot: int, vec: np.ndarray) -> None:
+        self.ensure_capacity(slot + 1)
+        v = np.asarray(vec, np.float32)
+        self._arena = _donated(_set_row, self._arena, np.int32(slot), v)
+        self.h2d_bytes_total += v.nbytes
+        self.row_updates += 1
+
+    def set_rows(self, slots: Sequence[int], vecs: np.ndarray) -> None:
+        """One donated scatter for a whole admission wave.
+
+        ``slots`` is padded to the next power of two (by repeating the last
+        slot/vector pair — a duplicate ``set`` of an identical value is a
+        no-op) so the jit cache sees O(log Q) wave shapes.
+        """
+        if len(slots) == 0:
+            return
+        self.ensure_capacity(max(slots) + 1)
+        s = np.asarray(slots, np.int32)
+        v = np.asarray(vecs, np.float32)
+        n = s.shape[0]
+        pad = (1 << max(0, n - 1).bit_length()) - n
+        if pad:
+            s = np.concatenate([s, np.repeat(s[-1:], pad)])
+            v = np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
+        self._arena = _donated(_set_rows, self._arena, s, v)
+        self.h2d_bytes_total += v.nbytes + s.nbytes
+        self.batched_updates += 1
+
+    def clear_row(self, slot: int) -> None:
+        """Tombstone a slot with device-generated zeros (zero H2D)."""
+        if slot < self.capacity:
+            self._arena = _donated(_clear_row, self._arena, np.int32(slot))
+
+    def clear(self) -> None:
+        self._arena = _donated(_clear_all, self._arena)
+        self.clears += 1

@@ -64,9 +64,55 @@ def batch_topk(queries, bank, *, k=1, block_q=128, block_n=1024):
     queries (Q, D) against bank (N, D), rows L2-normalized -> (scores
     (Q, k) f32, indices (Q, k) i32), one device call for the whole request
     batch. Indices are -1 (scores -1e30) where fewer than k rows exist.
+
+    The bank argument is uploaded to the device on every call when it is a
+    host array — ``resident_topk`` is the zero-copy variant for banks that
+    already live on-device (``repro.index.DeviceBank``).
     """
     return _sim.topk_cosine(
         queries, bank, k, block_q=block_q, block_n=block_n, interpret=_on_cpu()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _dense_topk(queries, bank, *, k):
+    """XLA dense cosine top-k with the same tie/padding semantics as the
+    Pallas kernel: ties go to the lowest bank row (``jax.lax.top_k``), and
+    positions past the bank end come back as (-1e30, -1)."""
+    s = jax.lax.dot_general(
+        queries.astype(jnp.float32),
+        bank.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Q, N)
+    n = bank.shape[0]
+    if n < k:
+        s = jnp.pad(s, ((0, 0), (0, k - n)), constant_values=_sim.NEG_INF)
+    top_s, top_i = jax.lax.top_k(s, k)
+    top_i = jnp.where(top_s <= _sim.NEG_INF / 2, -1, top_i).astype(jnp.int32)
+    return top_s, top_i
+
+
+def resident_topk(queries, bank, *, k=1, block_q=128, block_n=1024):
+    """Top-k against a bank that is already device-resident (DeviceBank).
+
+    Dispatch rule (the resident twin of the interpret/Mosaic rule above):
+    on TPU this compiles the Pallas blocked kernel with Mosaic, streaming
+    the resident bank through the MXU with zero bank H2D; on CPU it runs a
+    jitted dense XLA matmul + ``lax.top_k`` instead — interpret-mode Pallas
+    would re-simulate the grid in Python per call and forfeit the resident
+    bank's entire advantage. Both paths match ``ref.topk_cosine_ref`` on
+    indices exactly (scores to float tolerance).
+    """
+    if queries.shape[0] == 0 or bank.shape[0] == 0:
+        return (
+            jnp.full((queries.shape[0], k), _sim.NEG_INF, jnp.float32),
+            jnp.full((queries.shape[0], k), -1, jnp.int32),
+        )
+    if _on_cpu():
+        return _dense_topk(queries, bank, k=k)
+    return _sim.topk_cosine(
+        queries, bank, k, block_q=block_q, block_n=block_n, interpret=False
     )
 
 

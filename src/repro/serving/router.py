@@ -10,6 +10,19 @@ future work in §4.3; implemented here).
 The router is deployment-scale aware: the plan cache can be a local
 PlanCache or a DistributedPlanCache (consistent-hash sharded across serving
 frontends), and each tier is a pool of engines with hedged dispatch.
+``route_batch`` admits a whole arrival wave through a single
+``lookup_batch`` pass — with a ``device``-backend fuzzy cache that is one
+resident-bank device call for the entire batch — and distills the wave's
+misses back into the cache through one ``insert_batch`` (one donated
+multi-slot device scatter) rather than one insert per request.
+
+Thread-safety contract: the router itself holds ``self._lock`` only around
+the ``_pending`` futures list. Cache reads/writes need no router-side lock
+— PlanCache/DistributedPlanCache serialize internally (their RLock nests
+the embedding bank's lock, so host arena, LSH buckets, and device arena
+mutate atomically). ``route``/``route_batch`` may be called concurrently
+from many request threads while async cache-generation workers insert;
+``RouterMetrics`` counters are benign-racy (never consistency-critical).
 """
 
 from __future__ import annotations
@@ -17,6 +30,7 @@ from __future__ import annotations
 import concurrent.futures as cf
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -95,6 +109,7 @@ class TwoTierRouter:
             else None
         )
         self._pending: List[cf.Future] = []
+        self._sync_cachegen_errors: List[BaseException] = []
         self._lock = threading.Lock()
 
     def route(self, request: Any) -> Any:
@@ -109,9 +124,12 @@ class TwoTierRouter:
         """Admit a whole batch of requests through one cache pass.
 
         All keywords are answered by a single ``lookup_batch`` — with a
-        fuzzy cache on the ``pallas`` backend that is one ``batch_topk``
+        fuzzy cache on the ``device`` backend that is one resident-bank
         device call for the entire batch instead of one scan per request —
-        then each request takes its usual hit/miss tier dispatch.
+        then each request takes its usual hit/miss tier dispatch. The
+        misses' distilled templates land back in the cache as one
+        admission wave (``insert_batch``: one lock acquisition, one device
+        scatter) instead of one insert per miss.
         """
         self.metrics.requests += len(requests)
         kws = [self.extract_keyword(r) for r in requests]
@@ -121,18 +139,82 @@ class TwoTierRouter:
         else:
             tpls = [self.cache.lookup(kw) for kw in kws]
         self.metrics.lookup_s += time.perf_counter() - t0
-        return [
-            self._dispatch(r, kw, tpl) for r, kw, tpl in zip(requests, kws, tpls)
-        ]
+
+        out: List[Any] = []
+        wave: List[tuple] = []  # (request, kw, large-tier result) misses
+        for r, kw, tpl in zip(requests, kws, tpls):
+            if tpl is not None:
+                out.append(self._serve_hit(r, tpl))
+            else:
+                result = self._serve_miss(r)
+                out.append(result)
+                wave.append((r, kw, result))
+
+        if wave:
+            def gen_and_insert_wave():
+                # per-request failure isolation: one bad make_template must
+                # not discard the rest of the wave's templates (the
+                # per-request path loses only its own); the first error
+                # still surfaces through drain() after the wave lands
+                items, first_err = [], None
+                for r, kw, result in wave:
+                    try:
+                        template = self.make_template(r, result)
+                    except Exception as e:
+                        first_err = first_err or e
+                        continue
+                    if template is not None:
+                        items.append((kw, template))
+                if items:
+                    if hasattr(self.cache, "insert_batch"):
+                        self.cache.insert_batch(items)
+                    else:
+                        for kw, template in items:
+                            self.cache.insert(kw, template)
+                if first_err is not None:
+                    raise first_err
+                return items
+
+            if self._pool is not None:
+                with self._lock:
+                    self._pending.append(self._pool.submit(gen_and_insert_wave))
+                self.metrics.async_cachegens += len(wave)
+            else:
+                # sync mode: the batch's plans are already computed and paid
+                # for — defer the wave error to drain()/close() rather than
+                # discarding every served result by raising here. Warn so a
+                # caller that never drains still sees the failure; keep the
+                # stash bounded (first error is what drain re-raises).
+                try:
+                    gen_and_insert_wave()
+                except Exception as e:
+                    warnings.warn(
+                        f"cache generation failed for an admission wave "
+                        f"(deferred to drain()): {e!r}"
+                    )
+                    with self._lock:
+                        if len(self._sync_cachegen_errors) < 16:
+                            self._sync_cachegen_errors.append(e)
+        return out
+
+    def _serve_hit(self, request: Any, tpl: Any) -> Any:
+        """Cache hit: cheap tier adapts the cached template (shared by the
+        single and batched admission paths so metrics/policy can't drift)."""
+        self.metrics.hits += 1
+        self.metrics.small_tier_calls += 1
+        return self.plan_small_with_template(request, tpl)
+
+    def _serve_miss(self, request: Any) -> Any:
+        """Cache miss: expensive tier replans (cache distillation is the
+        caller's job — per-request future or batched wave)."""
+        self.metrics.misses += 1
+        self.metrics.large_tier_calls += 1
+        return self.plan_large(request)
 
     def _dispatch(self, request: Any, kw: str, tpl: Optional[Any]) -> Any:
         if tpl is not None:
-            self.metrics.hits += 1
-            self.metrics.small_tier_calls += 1
-            return self.plan_small_with_template(request, tpl)
-        self.metrics.misses += 1
-        self.metrics.large_tier_calls += 1
-        result = self.plan_large(request)
+            return self._serve_hit(request, tpl)
+        result = self._serve_miss(request)
 
         def gen_and_insert():
             template = self.make_template(request, result)
@@ -149,11 +231,20 @@ class TwoTierRouter:
         return result
 
     def drain(self, timeout: float = 30.0) -> None:
-        """Wait for async cache generations (tests / shutdown)."""
+        """Wait for async cache generations (tests / shutdown).
+
+        Raises the first deferred cache-generation error from either mode:
+        async waves raise out of their future here; sync waves stash their
+        first error at route time (the batch's responses were already
+        served) and it surfaces now.
+        """
         with self._lock:
             pending, self._pending = self._pending, []
+            errors, self._sync_cachegen_errors = self._sync_cachegen_errors, []
         for f in pending:
             f.result(timeout=timeout)
+        if errors:
+            raise errors[0]
 
     def close(self) -> None:
         self.drain()

@@ -1,0 +1,115 @@
+"""Docs hygiene gate (run by the CI docs job and ``make docs-check``).
+
+Three checks, all against the working tree:
+
+1. ``README.md`` exists at the repo root.
+2. Every *internal* markdown link in ``README.md`` and ``docs/*.md``
+   resolves to a real file (anchors are stripped; external schemes —
+   http/https/mailto — are skipped).
+3. Every ``python -m <module> ...`` and ``make <target>`` command quoted
+   in those documents still parses: ``python -m <module> --help`` must
+   exit 0 (argparse wiring intact, imports clean) and ``make -n
+   <target>`` must exit 0 (target exists). This keeps the docs from
+   drifting into quoting commands that no longer run.
+
+Usage:  PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+PY_M_RE = re.compile(r"\bpython\s+-m\s+([A-Za-z_][\w.]*)")
+MAKE_RE = re.compile(r"\bmake\s+([a-z][\w-]*)")
+FENCE_RE = re.compile(r"```[^\n]*\n(.*?)```", re.S)
+SPAN_RE = re.compile(r"`([^`\n]+)`")
+
+
+def code_regions(text: str) -> str:
+    """Fenced blocks + inline code spans, newline-joined.
+
+    Commands are only extracted from these — prose like "make sure jax is
+    installed" must not be executed as ``make -n sure``.
+    """
+    fenced = FENCE_RE.findall(text)
+    stripped = FENCE_RE.sub("", text)  # keep spans outside fences only
+    return "\n".join(fenced + SPAN_RE.findall(stripped))
+
+
+def fail(errors: list) -> None:
+    for e in errors:
+        print(f"FAIL: {e}")
+    raise SystemExit(1)
+
+
+def doc_files() -> list:
+    docs = [ROOT / "README.md"]
+    docs += sorted((ROOT / "docs").glob("*.md"))
+    return [d for d in docs if d.exists()]
+
+
+def check_links(errors: list) -> int:
+    n = 0
+    for doc in doc_files():
+        for target in LINK_RE.findall(doc.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            n += 1
+            rel = target.split("#", 1)[0]
+            if not (doc.parent / rel).exists():
+                errors.append(f"{doc.relative_to(ROOT)}: broken link -> {target}")
+    return n
+
+
+def check_commands(errors: list) -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    py_mods, make_targets = set(), set()
+    for doc in doc_files():
+        code = code_regions(doc.read_text())
+        py_mods.update(PY_M_RE.findall(code))
+        make_targets.update(MAKE_RE.findall(code))
+    for mod in sorted(py_mods):
+        r = subprocess.run(
+            [sys.executable, "-m", mod, "--help"],
+            capture_output=True, cwd=ROOT, env=env, timeout=120,
+        )
+        if r.returncode != 0:
+            errors.append(
+                f"`python -m {mod} --help` exited {r.returncode}: "
+                f"{r.stderr.decode(errors='replace').strip()[-300:]}"
+            )
+    for tgt in sorted(make_targets):
+        r = subprocess.run(
+            ["make", "-n", tgt], capture_output=True, cwd=ROOT, timeout=60,
+        )
+        if r.returncode != 0:
+            errors.append(f"`make -n {tgt}` exited {r.returncode} (missing target?)")
+    return len(py_mods) + len(make_targets)
+
+
+def main() -> None:
+    errors: list = []
+    if not (ROOT / "README.md").exists():
+        fail(["README.md does not exist at the repo root"])
+    n_links = check_links(errors)
+    n_cmds = check_commands(errors)
+    if errors:
+        fail(errors)
+    print(
+        f"docs OK: {len(doc_files())} documents, {n_links} internal links "
+        f"resolve, {n_cmds} quoted commands parse"
+    )
+
+
+if __name__ == "__main__":
+    main()
