@@ -1,13 +1,21 @@
 """Benchmark runner: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--only t1,t5]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only t1,t5] \
+        [--json-dir DIR]
 
 Prints ``name,us_per_call,derived`` CSV (one row per measured cell).
+``--json-dir`` additionally writes one machine-readable ``BENCH_<key>.json``
+per module ({"module", "fast", "rows": [{name, us_per_call, derived}]}) —
+the CI smoke workflow uploads these as artifacts so the perf trajectory
+(t1 headline aggregate, t5 lookup scaling) is tracked per commit.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import os
 import sys
 import time
 import traceback
@@ -41,10 +49,22 @@ MODULES = {
 }
 
 
+def _write_json(json_dir: str, key: str, payload: dict) -> None:
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"BENCH_{key}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument(
+        "--json-dir", default="",
+        help="also write one BENCH_<module>.json per module into this dir",
+    )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(MODULES)
 
@@ -55,12 +75,27 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            for row in mod.run(fast=args.fast):
-                print(row.csv())
+            rows = list(mod.run(fast=args.fast))
         except Exception:
             failures += 1
             print(f"{key},0,{{\"error\": true}}")
             traceback.print_exc(file=sys.stderr)
+            if args.json_dir:
+                _write_json(args.json_dir, key,
+                            {"module": key, "fast": args.fast, "error": True})
+            print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
+            continue
+        for row in rows:
+            print(row.csv())
+        if args.json_dir:
+            _write_json(
+                args.json_dir, key,
+                {
+                    "module": key,
+                    "fast": args.fast,
+                    "rows": [dataclasses.asdict(r) for r in rows],
+                },
+            )
         print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
     if failures:
         raise SystemExit(1)

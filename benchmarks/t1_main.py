@@ -6,7 +6,8 @@ import time
 from typing import List
 
 from benchmarks.common import Row
-from repro.core.harness import METHODS, run_workload
+from repro.core.harness import run_workload
+from repro.core.methods import method_names
 from repro.envs.workloads import ALL_ENVS
 
 
@@ -15,7 +16,9 @@ def run(fast: bool = False) -> List[Row]:
     n = 60 if fast else 200
     envs = ["financebench", "tabmwp"] if fast else ALL_ENVS
     for env in envs:
-        for method in METHODS:
+        # live registry enumeration: a method registered after import
+        # (an out-of-tree scenario baseline) is still benchmarked
+        for method in method_names():
             t0 = time.perf_counter()
             r = run_workload(env, method, n)
             wall = (time.perf_counter() - t0) * 1e6 / n

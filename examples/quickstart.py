@@ -2,25 +2,28 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Runs 30 FinanceBench-style tasks through Agentic Plan Caching and prints the
-paper's headline comparison against the no-cache baselines.
+Runs FinanceBench-style tasks through every method registered in the
+``repro.memory`` method registry (the paper's baselines, APC, and the
+exact->fuzzy->semantic ``cascade`` hybrid) and prints the paper's headline
+comparison against the accuracy-optimal baseline.
 """
 
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.harness import run_workload
+from repro.core.harness import METHODS, run_workload
 
 N = 120  # cold-start dominates below ~50 tasks; 120 shows steady-state savings
 
 print(f"{'method':20s} {'accuracy':>9s} {'cost $':>8s} {'latency s':>10s} {'hit%':>6s}")
-for method in ("accuracy_optimal", "cost_optimal", "apc"):
+results = {}
+for method in METHODS:  # enumerated from the registry, not a hand-kept list
     r = run_workload("financebench", method, N)
+    results[method] = r
     print(f"{method:20s} {r.accuracy:9.3f} {r.cost:8.3f} "
           f"{r.latency_s:10.1f} {100*r.hit_rate:5.1f}%")
 
-apc = run_workload("financebench", "apc", N)
-ao = run_workload("financebench", "accuracy_optimal", N)
+apc, ao = results["apc"], results["accuracy_optimal"]
 print(f"\nAPC vs accuracy-optimal: "
       f"cost -{100*(1-apc.cost/ao.cost):.1f}%, "
       f"latency -{100*(1-apc.latency_s/ao.latency_s):.1f}%, "

@@ -1,37 +1,31 @@
-"""The Plan-Act agent loop: Algorithms 1-3 from the paper, plus the four
-evaluation baselines (accuracy-optimal, cost-optimal, semantic caching,
-full-history caching).
+"""The Plan-Act agent loop: Algorithms 1-3 from the paper.
 
-Method map (paper §4.1):
-  apc               Alg.1: keyword -> cache -> Alg.2 (hit, small planner
-                    adapts template) / Alg.3 (miss, large planner plans from
-                    scratch; successful log distilled into the cache)
-  accuracy_optimal  always the large planner, no cache
-  cost_optimal      always the small planner, no cache
-  semantic          GPTCache-style query-similarity cache of final responses
-  full_history      keyword cache of raw execution logs used as in-context
-                    examples for the small planner
+``PlanActAgent`` owns one serving deployment (backends + plan store +
+ledger) and the two inner loops every method composes:
+
+* ``_loop_scratch`` — plan from scratch on the large/small planner
+  (Algorithm 3's replan path and both no-cache baselines);
+* ``_loop_adapt``   — adapt a cached template with the small planner
+  (Algorithm 2).
+
+WHICH loop runs, and how the plan store is consulted, is a method
+strategy: ``run_task`` dispatches to a class registered in
+:mod:`repro.memory.registry` (``@register_method``) and implemented in
+:mod:`repro.core.methods` — apc, the paper's baselines, and any
+out-of-tree method a scenario registers. There is no per-method branching
+here.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
-import numpy as np
-
-from repro.core.backends import PlanMsg, SimulatedBackend
+from repro.core.backends import SimulatedBackend
 from repro.core.cache import PlanCache
-from repro.core.cost_model import CostLedger, estimate_tokens
-from repro.core import fuzzy
-from repro.core.template import (
-    ExecutionLog,
-    PlanTemplate,
-    make_template,
-    rule_filter,
-)
-from repro.envs.base import Task, judge
+from repro.core.cost_model import CostLedger
+from repro.core.template import ExecutionLog, PlanTemplate, make_template
+from repro.envs.base import Task
 
 
 @dataclass
@@ -58,6 +52,7 @@ class AgentConfig:
     fuzzy_threshold: float = 0.8
     semantic_threshold: float = 0.85
     index_backend: str = "auto"  # repro.index backend for fuzzy/semantic search
+    eviction: str = "lru"  # repro.memory eviction policy (lru | lfu | cost)
     async_cachegen: bool = False  # beyond-paper: don't block on cache writes
     seed: int = 0
 
@@ -75,24 +70,24 @@ class PlanActAgent:
         self.be = backend
         self.ledger = ledger
         self.cfg = config
-        # NB: `cache or ...` would be wrong — an empty PlanCache is falsy
-        self.cache: PlanCache = (
-            cache
-            if cache is not None
-            else PlanCache(
+        # NB: `cache is not None` — an empty PlanCache is falsy
+        self.cache_external = cache is not None
+        self.cache: Optional[PlanCache] = cache
+        # registry dispatch: the method strategy may SUPPLY self.cache in
+        # its setup() (cascade builds an exact->fuzzy->semantic store), so
+        # the default store is built only if neither the caller nor the
+        # strategy provided one — no throwaway construction.
+        from repro.core.methods import make_method
+
+        self._method = make_method(config.method, self)
+        if self.cache is None:
+            self.cache = PlanCache(
                 capacity=config.cache_capacity,
                 fuzzy=config.fuzzy,
                 fuzzy_threshold=config.fuzzy_threshold,
                 index_backend=config.index_backend,
+                eviction=config.eviction,
             )
-        )
-        # semantic baseline: repro.index over query embeddings -> answers
-        # (replaces the seed's list-of-arrays + per-lookup np.stack scan)
-        from repro.index import SimilarityIndex
-
-        self._sem_index = SimilarityIndex(backend=config.index_backend)
-        self._sem_vals: List[Tuple[str, Optional[float]]] = []
-        self._pending_cachegen: List[Tuple[str, PlanTemplate, float]] = []
 
     # ==================================================================
     # Cache pre-warming (paper §4.5: "pre-populating the cache with
@@ -119,67 +114,14 @@ class PlanActAgent:
         return inserted
 
     # ==================================================================
-    # Algorithm 1: end-to-end
+    # Algorithm 1: end-to-end (registry dispatch, no method branching)
     # ==================================================================
 
     def run_task(self, task: Task) -> RunRecord:
-        m = self.cfg.method
-        if m == "apc":
-            return self._run_apc(task)
-        if m == "accuracy_optimal":
-            return self._run_scratch(task, large=True)
-        if m == "cost_optimal":
-            return self._run_scratch(task, large=False)
-        if m == "semantic":
-            return self._run_semantic(task)
-        if m == "full_history":
-            return self._run_full_history(task)
-        raise ValueError(m)
+        return self._method.run(task)
 
     # ==================================================================
-    # APC (Algorithms 1-3)
-    # ==================================================================
-
-    def _run_apc(self, task: Task) -> RunRecord:
-        lat = 0.0
-        kw, ki, ko = self.be.extract_keyword(task)
-        lat += self.ledger.record("keyword_extractor", ki, ko)
-
-        t0 = time.perf_counter()
-        template = self.cache.lookup(kw)
-        lookup_s = time.perf_counter() - t0
-        lat += lookup_s
-
-        if template is not None:  # ---- Algorithm 2: cache hit
-            template.uses += 1
-            answer, iters, l2 = self._loop_adapt(task, template, full_history=False)
-            lat += l2
-            correct = judge(answer, task.gt_answer)
-            return RunRecord(
-                task.id, "apc", correct, True, kw, iters, answer,
-                self.ledger.total_cost(), lat, lookup_s,
-            )
-
-        # ---- Algorithm 3: cache miss
-        answer, iters, log, l3 = self._loop_scratch(task, large=True)
-        lat += l3
-        correct = judge(answer, task.gt_answer)
-        gen_s = 0.0
-        if answer is not None and log.final_answer is not None:
-            gi, go = self.be.cachegen_tokens(log.raw_tokens())
-            gen_s = self.ledger.record("cache_generator", gi, go)
-            miss_slots = self.be.generalization_misses(task)
-            tpl = make_template(log, kw, task.slots, miss_slots=miss_slots)
-            self.cache.insert(kw, tpl)
-            if not self.cfg.async_cachegen:
-                lat += gen_s  # synchronous generation blocks the response
-        return RunRecord(
-            task.id, "apc", correct, False, kw, iters, answer,
-            self.ledger.total_cost(), lat, lookup_s, gen_s,
-        )
-
-    # ==================================================================
-    # inner loops
+    # inner loops (shared by every method strategy)
     # ==================================================================
 
     def _loop_scratch(
@@ -222,70 +164,3 @@ class PlanActAgent:
             if it + 1 >= n_rounds and it + 1 < self.cfg.max_iterations:
                 continue  # next adapt() call emits the answer
         return None, self.cfg.max_iterations, lat
-
-    # ==================================================================
-    # baselines
-    # ==================================================================
-
-    def _run_scratch(self, task: Task, *, large: bool) -> RunRecord:
-        answer, iters, _, lat = self._loop_scratch(task, large=large)
-        return RunRecord(
-            task.id,
-            "accuracy_optimal" if large else "cost_optimal",
-            judge(answer, task.gt_answer),
-            False, "", iters, answer, self.ledger.total_cost(), lat,
-        )
-
-    def _run_semantic(self, task: Task) -> RunRecord:
-        t0 = time.perf_counter()
-        q_emb = fuzzy.embed(task.query)
-        hit_val = None
-        hit_key = self._sem_index.best_match(q_emb, self.cfg.semantic_threshold)
-        if hit_key is not None:
-            hit_val = self._sem_vals[int(hit_key[1:])]
-        lookup_s = time.perf_counter() - t0
-        if hit_val is not None:
-            # cached final response returned verbatim (GPTCache semantics) —
-            # correct only if the numeric answer transfers to THIS task.
-            answer = hit_val[1]
-            return RunRecord(
-                task.id, "semantic", judge(answer, task.gt_answer), True,
-                "", 0, answer, self.ledger.total_cost(), lookup_s, lookup_s,
-            )
-        answer, iters, _, lat = self._loop_scratch(task, large=True)
-        self._sem_index.add(f"q{len(self._sem_vals)}", q_emb)
-        self._sem_vals.append((task.query, answer))
-        return RunRecord(
-            task.id, "semantic", judge(answer, task.gt_answer), False,
-            "", iters, answer, self.ledger.total_cost(), lat + lookup_s, lookup_s,
-        )
-
-    def _run_full_history(self, task: Task) -> RunRecord:
-        lat = 0.0
-        kw, ki, ko = self.be.extract_keyword(task)
-        lat += self.ledger.record("keyword_extractor", ki, ko)
-        t0 = time.perf_counter()
-        log: Optional[ExecutionLog] = self.cache.lookup(kw)
-        lookup_s = time.perf_counter() - t0
-        lat += lookup_s
-        if log is not None:
-            # raw log as in-context example: build an UNfiltered pseudo-template
-            steps = rule_filter(log)
-            tpl = PlanTemplate(keyword=kw, steps=steps, source_task=log.task_query)
-            # charge the long history into the small planner's context
-            hist_tokens = log.raw_tokens()
-            self.ledger.record("small_planner", hist_tokens, 0)
-            answer, iters, l2 = self._loop_adapt(task, tpl, full_history=True)
-            lat += l2
-            return RunRecord(
-                task.id, "full_history", judge(answer, task.gt_answer), True,
-                kw, iters, answer, self.ledger.total_cost(), lat, lookup_s,
-            )
-        answer, iters, log, l3 = self._loop_scratch(task, large=True)
-        lat += l3
-        if answer is not None:
-            self.cache.insert(kw, log)
-        return RunRecord(
-            task.id, "full_history", judge(answer, task.gt_answer), False,
-            kw, iters, answer, self.ledger.total_cost(), lat, lookup_s,
-        )

@@ -1,55 +1,40 @@
-"""The plan cache: exact-match dict with LRU eviction (paper §3.2, §4.4).
+"""The plan cache: a batch-native ``PlanStore`` with composable eviction
+policies and a pluggable match pipeline (paper §3.2, §4.4).
 
-Exact matching is the paper's default — O(1) lookups via a hash map,
-validated to scale to 1e6 entries (Table 5). Fuzzy matching is available
-behind the same interface (``fuzzy=True``), backed by the ``repro.index``
-similarity subsystem: the matcher's embedding bank is maintained
-*incrementally* under the cache lock on insert/evict/TTL-expire (no
-per-lookup key-list copy or matrix rebuild), and ``index_backend`` selects
-the search strategy (``brute`` | ``pallas`` | ``bucketed`` | ``device`` |
-``auto``). The paper's threshold/latency trade-offs (Tables 5-6) reproduce
-against the ``brute`` backend; ``bucketed`` removes the Table 5 scaling
-cliff, and ``device`` keeps the embedding bank resident on the accelerator
-so batched lookups move zero bank bytes per call.
+``PlanCache`` implements the :class:`repro.memory.protocol.PlanStore`
+protocol: ``lookup_batch``/``insert_batch`` are the primitive operations
+(one lock acquisition, one batched fuzzy/semantic resolution, one device
+scatter per admission wave on the ``device`` index backend); the singular
+``lookup``/``insert`` are thin wrappers inherited from ``PlanStoreBase``.
+
+Matching is a :class:`~repro.memory.pipeline.MatchPipeline` — exact dict
+membership by default, exact -> fuzzy with ``fuzzy=True`` (the paper's
+Tables 5-6 configuration, backed by the ``repro.index`` subsystem with
+``index_backend`` selecting ``brute`` | ``pallas`` | ``bucketed`` |
+``device`` | ``auto``), and arbitrary cascades via ``pipeline=("exact",
+"fuzzy", "semantic")``. Stage indexes are maintained *incrementally* under
+the cache lock on insert/evict/TTL-expire — no per-lookup key-list copy or
+matrix rebuild.
+
+Eviction is an :class:`~repro.memory.policies.EvictionPolicy`
+(``eviction="lru" | "lfu" | "cost"`` or an instance); the historical
+``ttl_s`` kwarg wraps the chosen policy in TTL expiry, so pre-protocol
+constructor calls behave exactly as before.
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from collections import OrderedDict
-from dataclasses import dataclass, field
-from typing import Any, Dict, Generic, List, Optional, Tuple, TypeVar
+from typing import Any, Dict, Generic, List, Optional, Sequence, Tuple, Union
 
-V = TypeVar("V")
-
-
-@dataclass
-class CacheStats:
-    hits: int = 0
-    misses: int = 0
-    inserts: int = 0
-    evictions: int = 0
-    lookup_time_s: float = 0.0
-
-    @property
-    def hit_rate(self) -> float:
-        n = self.hits + self.misses
-        return self.hits / n if n else 0.0
-
-    def snapshot(self) -> Dict[str, Any]:
-        return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "hit_rate": round(self.hit_rate, 4),
-            "inserts": self.inserts,
-            "evictions": self.evictions,
-            "lookup_time_s": round(self.lookup_time_s, 6),
-        }
+from repro.memory.pipeline import MatchPipeline, build_pipeline
+from repro.memory.policies import CacheEntry, EvictionPolicy, make_policy
+from repro.memory.protocol import CacheStats, PlanStoreBase, V
 
 
-class PlanCache(Generic[V]):
-    """keyword -> plan-template store with LRU eviction.
+class PlanCache(PlanStoreBase, Generic[V]):
+    """keyword -> plan-template store with pluggable eviction + matching.
 
     Thread-safe: the serving router calls lookup/insert from request threads
     while async cache generation (speculative.py) inserts from workers.
@@ -61,117 +46,81 @@ class PlanCache(Generic[V]):
         *,
         fuzzy: bool = False,
         fuzzy_threshold: float = 0.8,
+        semantic_threshold: float = 0.85,
         index_backend: str = "auto",
         ttl_s: Optional[float] = None,
+        eviction: Union[str, EvictionPolicy] = "lru",
+        pipeline: Optional[Union[MatchPipeline, Sequence[Any]]] = None,
     ):
         self.capacity = capacity
-        self.fuzzy = fuzzy
         self.fuzzy_threshold = fuzzy_threshold
+        self.semantic_threshold = semantic_threshold
         self.index_backend = index_backend
         self.ttl_s = ttl_s
-        self._store: "OrderedDict[str, Tuple[V, float]]" = OrderedDict()
+        self.policy = make_policy(eviction, ttl_s=ttl_s)
+        if pipeline is None:
+            pipeline = ("exact", "fuzzy") if fuzzy else ("exact",)
+        self.pipeline = (
+            pipeline
+            if isinstance(pipeline, MatchPipeline)
+            else build_pipeline(
+                pipeline,
+                fuzzy_threshold=fuzzy_threshold,
+                semantic_threshold=semantic_threshold,
+                index_backend=index_backend,
+            )
+        )
+        self.fuzzy = self.pipeline.stage("fuzzy") is not None
+        self._store: Dict[str, CacheEntry] = {}
         self._lock = threading.RLock()
         self.stats = CacheStats()
-        self._matcher = None
-        if fuzzy:
-            from repro.core.fuzzy import FuzzyMatcher
 
-            self._matcher = FuzzyMatcher(backend=index_backend)
+    @property
+    def _matcher(self):
+        """Back-compat alias: the fuzzy stage's matcher (None when exact-only)."""
+        stage = self.pipeline.stage("fuzzy")
+        return None if stage is None else stage.matcher
 
     # -- core ops ----------------------------------------------------------
 
-    def lookup(self, keyword: str) -> Optional[V]:
+    def lookup_batch(
+        self,
+        keywords: Sequence[str],
+        *,
+        contexts: Optional[Sequence[Optional[str]]] = None,
+    ) -> List[Optional[V]]:
+        """Answer a whole batch of lookups in one pipeline walk.
+
+        Each stage resolves the still-unresolved queries in one batched
+        call (a single top-k device call for the fuzzy/semantic stages on
+        the ``pallas``/``device`` backends); resolved keys are served
+        through the one exact path that accounts TTL expiry, hit counters,
+        and policy touches — so batched and singular lookups can't drift.
+        """
         t0 = time.perf_counter()
+        if contexts is None:
+            contexts = [None] * len(keywords)
         try:
             with self._lock:
-                hit = self._lookup_exact(keyword)
-                if hit is None and self._matcher is not None:
-                    # the matcher's index is maintained incrementally on
-                    # insert/evict/TTL-expire — no key-list copy per lookup
-                    alt = self._matcher.best_match(
-                        keyword, threshold=self.fuzzy_threshold
+                now = time.time()
+                out: List[Optional[V]] = [None] * len(keywords)
+                pending = list(range(len(keywords)))
+                for stage in self.pipeline.stages:
+                    if not pending:
+                        break
+                    alts = stage.resolve(
+                        [keywords[i] for i in pending],
+                        [contexts[i] for i in pending],
+                        self._store.__contains__,
                     )
-                    if alt is not None:
-                        hit = self._lookup_exact(alt)
-                if hit is None:
-                    self.stats.misses += 1
-                else:
-                    self.stats.hits += 1
-                return hit
-        finally:
-            self.stats.lookup_time_s += time.perf_counter() - t0
-
-    def _lookup_exact(self, keyword: str) -> Optional[V]:
-        item = self._store.get(keyword)
-        if item is None:
-            return None
-        value, ts = item
-        if self.ttl_s is not None and time.time() - ts > self.ttl_s:
-            del self._store[keyword]
-            if self._matcher is not None:
-                self._matcher.remove(keyword)
-            return None
-        self._store.move_to_end(keyword)  # LRU touch
-        return value
-
-    def insert(self, keyword: str, value: V) -> None:
-        with self._lock:
-            if keyword in self._store:
-                self._store.move_to_end(keyword)
-            self._store[keyword] = (value, time.time())
-            self.stats.inserts += 1
-            if self._matcher is not None:
-                self._matcher.add(keyword)
-            while len(self._store) > self.capacity:
-                old, _ = self._store.popitem(last=False)
-                self.stats.evictions += 1
-                if self._matcher is not None:
-                    self._matcher.remove(old)
-
-    def insert_batch(self, items: List[Tuple[str, V]]) -> None:
-        """Insert a whole admission wave under one lock acquisition.
-
-        The fuzzy index ingests the wave via ``add_batch`` — one embedding
-        batch and, on the ``device`` backend, one donated multi-slot device
-        scatter — instead of one index write per key. Eviction runs after
-        the wave lands, so a wave larger than ``capacity`` keeps its newest
-        entries (same LRU order as sequential inserts).
-        """
-        with self._lock:
-            now = time.time()
-            for kw, v in items:
-                if kw in self._store:
-                    self._store.move_to_end(kw)
-                self._store[kw] = (v, now)
-                self.stats.inserts += 1
-            if self._matcher is not None and items:
-                self._matcher.add_batch([kw for kw, _ in items])
-            while len(self._store) > self.capacity:
-                old, _ = self._store.popitem(last=False)
-                self.stats.evictions += 1
-                if self._matcher is not None:
-                    self._matcher.remove(old)
-
-    def lookup_batch(self, keywords: List[str]) -> List[Optional[V]]:
-        """Answer a whole batch of lookups in one pass.
-
-        Exact hits resolve per-key; the fuzzy fallback for all remaining
-        misses is answered by a single batched top-k (one device call on
-        the ``pallas`` backend) instead of one scan per request.
-        """
-        t0 = time.perf_counter()
-        try:
-            with self._lock:
-                out: List[Optional[V]] = [self._lookup_exact(k) for k in keywords]
-                if self._matcher is not None:
-                    miss_pos = [i for i, v in enumerate(out) if v is None]
-                    if miss_pos:
-                        alts = self._matcher.best_match_batch(
-                            [keywords[i] for i in miss_pos], self.fuzzy_threshold
-                        )
-                        for i, alt in zip(miss_pos, alts):
-                            if alt is not None:
-                                out[i] = self._lookup_exact(alt)
+                    still: List[int] = []
+                    for i, alt in zip(pending, alts):
+                        v = None if alt is None else self._get_live(alt, now)
+                        if v is None:
+                            still.append(i)
+                        else:
+                            out[i] = v
+                    pending = still
                 for v in out:
                     if v is None:
                         self.stats.misses += 1
@@ -181,14 +130,76 @@ class PlanCache(Generic[V]):
         finally:
             self.stats.lookup_time_s += time.perf_counter() - t0
 
-    def remove(self, keyword: str) -> bool:
-        """Delete one entry, keeping the fuzzy index in sync. True if present."""
+    def _get_live(self, keyword: str, now: float) -> Optional[V]:
+        """Serve one exact key: TTL-expire, count the hit, touch the policy."""
+        entry = self._store.get(keyword)
+        if entry is None:
+            return None
+        if self.policy.expired(keyword, entry, now):
+            self._delete(keyword)
+            return None
+        entry.hits += 1
+        self.policy.on_access(keyword, entry)
+        return entry.value
+
+    def _delete(self, keyword: str) -> None:
+        del self._store[keyword]
+        self.policy.on_remove(keyword)
+        self.pipeline.on_remove(keyword)
+
+    def insert_batch(
+        self,
+        items: Sequence[Tuple[str, V]],
+        *,
+        contexts: Optional[Sequence[Optional[str]]] = None,
+        vectors: Optional[Any] = None,
+    ) -> None:
+        """Insert a whole admission wave under one lock acquisition.
+
+        Pipeline stages ingest the wave batched — one embedding batch and,
+        on the ``device`` backend, one donated multi-slot device scatter —
+        instead of one index write per key. ``vectors`` lets a caller that
+        already embedded the keys (a replicating distributed cache) skip
+        re-embedding. Eviction runs after the wave lands, so a wave larger
+        than ``capacity`` keeps its newest entries.
+        """
+        items = list(items)
+        if contexts is None:
+            contexts = [None] * len(items)
         with self._lock:
-            if self._store.pop(keyword, None) is None:
+            now = time.time()
+            for kw, v in items:
+                entry = CacheEntry(v, now)
+                self._store[kw] = entry
+                self.policy.on_insert(kw, entry)
+                self.stats.inserts += 1
+            if items:
+                self.pipeline.on_insert_batch(items, contexts, vectors)
+            while len(self._store) > self.capacity:
+                self._delete(self.policy.victim(self._store))
+                self.stats.evictions += 1
+
+    def remove(self, keyword: str) -> bool:
+        """Delete one entry, keeping stage indexes in sync. True if present."""
+        with self._lock:
+            if keyword not in self._store:
                 return False
-            if self._matcher is not None:
-                self._matcher.remove(keyword)
+            self._delete(keyword)
             return True
+
+    def autotune(self, **thresholds) -> List[str]:
+        """One auto-tuning step for every stage index that supports it
+        (LSH ``n_bits``/``probe_hamming`` adjustment from live telemetry);
+        returns the actions taken, e.g. ``["fuzzy:n_bits->14"]``."""
+        with self._lock:
+            actions: List[str] = []
+            for stage in self.pipeline.stages:
+                tune = getattr(stage, "autotune", None)
+                if tune is not None:
+                    act = tune(**thresholds)
+                    if act:
+                        actions.append(f"{stage.name}:{act}")
+            return actions
 
     def __contains__(self, keyword: str) -> bool:
         with self._lock:
@@ -198,16 +209,16 @@ class PlanCache(Generic[V]):
         with self._lock:  # consistent reads while writers mutate _store
             return len(self._store)
 
-    def keys(self):
+    def keys(self) -> List[str]:
         with self._lock:
-            return list(self._store.keys())
+            return list(self._store)
 
     def clear(self) -> None:
         with self._lock:
             self._store.clear()
             self.stats = CacheStats()
-            if self._matcher is not None:
-                self._matcher.clear()
+            self.policy.reset()
+            self.pipeline.clear()
 
     # -- serialization (checkpoint/restore of the test-time memory) --------
 
@@ -215,12 +226,14 @@ class PlanCache(Generic[V]):
         with self._lock:
             return {
                 "capacity": self.capacity,
-                "entries": [(k, v) for k, (v, _) in self._store.items()],
+                "entries": [(k, e.value) for k, e in self._store.items()],
             }
 
     @classmethod
     def from_state(cls, state: Dict[str, Any], **kw) -> "PlanCache":
         c = cls(capacity=state["capacity"], **kw)
-        for k, v in state["entries"]:
-            c.insert(k, v)
+        c.insert_batch(state["entries"])
         return c
+
+
+__all__ = ["CacheStats", "PlanCache"]

@@ -6,11 +6,19 @@ elastic add/remove of cache servers moves only ~K/N keys. Each key is
 replicated onto R successive ring nodes; reads fall through replicas on
 node failure (fault tolerance), writes go to all live replicas.
 
-Each shard is a full PlanCache, so with ``fuzzy=True`` every shard owns a
-private ``repro.index`` similarity index scoped to its local keys;
-``index_backend="device"`` gives each shard its own device-resident
+``DistributedPlanCache`` implements the same batch-native
+:class:`repro.memory.protocol.PlanStore` protocol as ``PlanCache`` — the
+router and harness program against the protocol and never probe for
+capabilities. Each shard is a full PlanCache, so with ``fuzzy=True`` every
+shard owns a private ``repro.index`` similarity index scoped to its local
+keys; ``index_backend="device"`` gives each shard its own device-resident
 embedding bank, making the grouped ``lookup_batch`` fan-out one
-resident-bank device call per probed shard per tier.
+resident-bank device call per probed shard per tier. Eviction policy
+(``eviction="lru" | "lfu" | "cost"``) and TTL are forwarded to every shard.
+
+Replicated writes embed each key exactly ONCE: the facade embeds the wave
+and ships ``(key, vector)`` pairs to every replica shard, instead of each
+shard's index re-embedding the key privately.
 
 In-process shards stand in for network nodes (the container has one host);
 the interface (lookup/insert/add_node/remove_node/mark_down) is what a
@@ -22,9 +30,11 @@ from __future__ import annotations
 import bisect
 import hashlib
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cache import CacheStats, PlanCache
+from repro.index.bank import embed, embed_batch
+from repro.memory.protocol import PlanStoreBase
 
 
 def _hash(s: str) -> int:
@@ -69,8 +79,8 @@ class HashRing:
         return sorted(self._nodes)
 
 
-class DistributedPlanCache:
-    """PlanCache-compatible facade over sharded, replicated cache nodes."""
+class DistributedPlanCache(PlanStoreBase):
+    """PlanStore-conformant facade over sharded, replicated cache nodes."""
 
     def __init__(
         self,
@@ -81,7 +91,12 @@ class DistributedPlanCache:
         fuzzy: bool = False,
         fuzzy_threshold: float = 0.8,
         index_backend: str = "auto",
+        eviction: str = "lru",
+        ttl_s: Optional[float] = None,
     ):
+        if not isinstance(eviction, str):
+            # a policy INSTANCE would be shared bookkeeping across shards
+            raise TypeError("DistributedPlanCache takes an eviction policy name")
         self.ring = HashRing()
         self.replication = replication
         self.capacity_per_node = capacity_per_node
@@ -90,6 +105,8 @@ class DistributedPlanCache:
         self.fuzzy = fuzzy
         self.fuzzy_threshold = fuzzy_threshold
         self.index_backend = index_backend
+        self.eviction = eviction
+        self.ttl_s = ttl_s
         self.shards: Dict[str, PlanCache] = {}
         self.down: set = set()
         self.stats = CacheStats()
@@ -109,6 +126,8 @@ class DistributedPlanCache:
                 fuzzy=self.fuzzy,
                 fuzzy_threshold=self.fuzzy_threshold,
                 index_backend=self.index_backend,
+                eviction=self.eviction,
+                ttl_s=self.ttl_s,
             )
             self.ring.add(name)
             self._rebalance()
@@ -169,17 +188,12 @@ class DistributedPlanCache:
             ]
         return owners
 
-    def lookup(self, keyword: str) -> Optional[Any]:
-        with self._lock:
-            for n in self._probe_order(keyword):  # replica/fuzzy fallthrough
-                v = self.shards[n].lookup(keyword)
-                if v is not None:
-                    self.stats.hits += 1
-                    return v
-            self.stats.misses += 1
-            return None
-
-    def lookup_batch(self, keywords: List[str]) -> List[Optional[Any]]:
+    def lookup_batch(
+        self,
+        keywords: Sequence[str],
+        *,
+        contexts: Optional[Sequence[Optional[str]]] = None,
+    ) -> List[Optional[Any]]:
         """Batched lookups under one lock acquisition (router admission).
 
         Tier-by-tier grouped fan-out: tier 0 groups keywords by primary
@@ -188,9 +202,12 @@ class DistributedPlanCache:
         shard); every subsequent replica/fuzzy-scatter tier batches the
         *still-missing* keywords the same way, so the fallthrough path is
         also O(tiers) shard calls instead of one per keyword. Probe order
-        per keyword is identical to :meth:`lookup`, so results match the
-        sequential path exactly.
+        per keyword is identical to the singular ``lookup`` (which IS this
+        path with a batch of one), and ``contexts`` ride along to each
+        shard's match pipeline.
         """
+        if contexts is None:
+            contexts = [None] * len(keywords)
         with self._lock:
             out: List[Optional[Any]] = [None] * len(keywords)
             owners_of = [self._probe_order(k) for k in keywords]
@@ -205,7 +222,8 @@ class DistributedPlanCache:
                     break
                 for node, idxs in by_node.items():
                     vals = self.shards[node].lookup_batch(
-                        [keywords[i] for i in idxs]
+                        [keywords[i] for i in idxs],
+                        contexts=[contexts[i] for i in idxs],
                     )
                     for i, v in zip(idxs, vals):
                         out[i] = v
@@ -221,28 +239,72 @@ class DistributedPlanCache:
                     self.stats.hits += 1
             return out
 
-    def _insert_unlocked(self, keyword: str, value: Any) -> None:
+    def _insert_unlocked(
+        self,
+        keyword: str,
+        value: Any,
+        context: Optional[str] = None,
+        vector: Optional[Any] = None,
+    ) -> None:
         owners = self._live(self.ring.nodes_for(keyword, self.replication))
+        if self.fuzzy and vector is None and owners:
+            vector = embed(keyword)  # embed once, ship to every replica
         for n in owners:
-            self.shards[n].insert(keyword, value)
+            self.shards[n].insert(keyword, value, context=context, vector=vector)
 
-    def insert(self, keyword: str, value: Any) -> None:
-        with self._lock:
-            self._insert_unlocked(keyword, value)
-            self.stats.inserts += 1
-
-    def insert_batch(self, items: List[Tuple[str, Any]]) -> None:
+    def insert_batch(
+        self,
+        items: Sequence[Tuple[str, Any]],
+        *,
+        contexts: Optional[Sequence[Optional[str]]] = None,
+        vectors: Optional[Any] = None,
+    ) -> None:
         """Admission-wave insert: group by owner shard so each shard takes
         the wave in one ``insert_batch`` call (one device scatter per shard
-        on the ``device`` backend)."""
+        on the ``device`` backend). With fuzzy shards the wave is embedded
+        ONCE here and the (key, vector) pairs are replicated, so an R-way
+        replicated key never embeds R times."""
+        items = list(items)
+        if contexts is None:
+            contexts = [None] * len(items)
         with self._lock:
-            by_node: Dict[str, List[Tuple[str, Any]]] = {}
-            for kw, v in items:
+            if self.fuzzy and vectors is None and items:
+                vectors = embed_batch([kw for kw, _ in items])
+            by_node: Dict[str, List[int]] = {}
+            for j, (kw, _) in enumerate(items):
                 for n in self._live(self.ring.nodes_for(kw, self.replication)):
-                    by_node.setdefault(n, []).append((kw, v))
-            for n, wave in by_node.items():
-                self.shards[n].insert_batch(wave)
+                    by_node.setdefault(n, []).append(j)
+            for n, idxs in by_node.items():
+                self.shards[n].insert_batch(
+                    [items[j] for j in idxs],
+                    contexts=[contexts[j] for j in idxs],
+                    vectors=None if vectors is None else [vectors[j] for j in idxs],
+                )
             self.stats.inserts += len(items)
+
+    def remove(self, keyword: str) -> bool:
+        """Delete from every shard holding the key (owners may be stale
+        after membership churn). True if any replica held it."""
+        with self._lock:
+            removed = False
+            for shard in self.shards.values():
+                removed = shard.remove(keyword) or removed
+            return removed
+
+    def clear(self) -> None:
+        with self._lock:
+            for shard in self.shards.values():
+                shard.clear()
+            self.stats = CacheStats()
+
+    def autotune(self, **thresholds) -> List[str]:
+        """Run one index auto-tune step on every shard; see PlanCache."""
+        with self._lock:
+            actions: List[str] = []
+            for name, shard in sorted(self.shards.items()):
+                for act in shard.autotune(**thresholds):
+                    actions.append(f"{name}/{act}")
+            return actions
 
     def __contains__(self, keyword: str) -> bool:
         # exact membership, no fuzzy resolution and no stats mutation

@@ -46,13 +46,15 @@ class FuzzyMatcher:
     def __init__(self, backend: str = "auto", **index_kw):
         self.index = SimilarityIndex(backend=backend, **index_kw)
 
-    def add(self, key: str) -> None:
-        self.index.add(key)
+    def add(self, key: str, vector=None) -> None:
+        self.index.add(key, vector)
 
-    def add_batch(self, keys: List[str]) -> None:
+    def add_batch(self, keys: List[str], vectors=None) -> None:
         """Admission-wave insert: one embedding batch, and on the ``device``
-        backend one donated multi-slot device scatter for the whole wave."""
-        self.index.add_batch(keys)
+        backend one donated multi-slot device scatter for the whole wave.
+        ``vectors`` skips embedding for callers that already embedded the
+        keys (e.g. a replicating distributed cache)."""
+        self.index.add_batch(keys, vectors)
 
     def remove(self, key: str) -> None:
         self.index.remove(key)

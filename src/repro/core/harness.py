@@ -97,4 +97,17 @@ def run_workload(
     return res
 
 
-METHODS = ["accuracy_optimal", "cost_optimal", "semantic", "full_history", "apc"]
+# METHODS is derived from the repro.memory method registry (importing
+# repro.core.methods registers the built-ins, including the beyond-paper
+# `cascade` hybrid). It is resolved LIVE via module __getattr__ so a
+# method registered after this module was imported still shows up in
+# `harness.METHODS` — note that `from repro.core.harness import METHODS`
+# snapshots at the importing module's import time, so enumerators that
+# must see late registrations should call method_names() instead.
+from repro.core.methods import method_names
+
+
+def __getattr__(name: str):
+    if name == "METHODS":
+        return method_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

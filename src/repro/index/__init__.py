@@ -152,6 +152,15 @@ class SimilarityIndex:
             if self._device is not None:
                 self._device.clear()
 
+    def autotune(self, **thresholds) -> Optional[str]:
+        """One LSH auto-tuning step from live telemetry (bucketed/auto
+        backends; no-op None otherwise). Serializes against writers via
+        ``bank.lock``; see :meth:`BucketedIndex.autotune` for the rules."""
+        if self._bucketed is None:
+            return None
+        with self.bank.lock:
+            return self._bucketed.autotune(**thresholds)
+
     def telemetry(self) -> dict:
         """Live counters for serving dashboards / auto-tuning: device-bank
         H2D accounting and (on bucketed backends) LSH recall/candidate

@@ -187,7 +187,11 @@ class BucketedIndex:
         ]
         self._sigs_of: Dict[int, Tuple[int, ...]] = {}
         self._bit_weights = (1 << np.arange(n_bits)).astype(np.int64)
+        self._set_probe_masks()
+
+    def _set_probe_masks(self) -> None:
         # XOR masks enumerating the probe ball once: [0, single bits, pairs]
+        n_bits = self.n_bits
         masks = [0]
         if self.probe_hamming >= 1:
             masks += [1 << b for b in range(n_bits)]
@@ -250,6 +254,58 @@ class BucketedIndex:
         for b in self._buckets:
             b.clear()
         self._sigs_of.clear()
+
+    # -- auto-tuning (closes the telemetry loop) --------------------------
+
+    def autotune(
+        self,
+        *,
+        target_candidates: float = 96.0,
+        min_recall: float = 0.92,
+        min_queries: int = 64,
+    ) -> Optional[str]:
+        """One tuning step from the LIVE telemetry window; returns the
+        action taken (or None if the window is thin or the geometry is
+        already converged). Call periodically from a serving loop — each
+        action resets the telemetry window so the next call measures the
+        NEW geometry, and a drifting workload converges in a few windows:
+
+        1. sampled top-1 recall below ``min_recall`` -> widen the probe
+           ball (``probe_hamming`` +1, masks-only rebuild) — growing bits
+           here would make recall *worse*;
+        2. ``avg_candidates`` above ``target_candidates`` -> grow
+           ``n_bits`` by 2 (full re-hash, amortized by the window length)
+           so lookup cost stays flat as the bank grows;
+        3. >10% of probed queries found an EMPTY candidate set -> widen
+           the probe ball (the tables are over-partitioned for N).
+
+        Callers must hold ``bank.lock`` (SimilarityIndex.autotune does):
+        rules 1-3 rewrite probe masks or buckets under queries' feet.
+        """
+        t = self.telemetry
+        if t.probed_queries < min_queries:
+            return None
+        recall = (
+            t.recall_agreements / t.recall_checks if t.recall_checks else None
+        )
+        avg_candidates = t.candidates_total / t.probed_queries
+        empty_rate = t.empty_candidate_queries / t.probed_queries
+        action = None
+        if recall is not None and recall < min_recall and self.probe_hamming < 2:
+            self.probe_hamming += 1
+            self._set_probe_masks()
+            action = f"probe_hamming->{self.probe_hamming}"
+        elif avg_candidates > target_candidates and self.n_bits < self.MAX_BITS:
+            self._set_geometry(min(self.n_bits + 2, self.MAX_BITS))
+            self._rebuild()
+            action = f"n_bits->{self.n_bits}"
+        elif empty_rate > 0.10 and self.probe_hamming < 2:
+            self.probe_hamming += 1
+            self._set_probe_masks()
+            action = f"probe_hamming->{self.probe_hamming}"
+        if action is not None:
+            self.telemetry = LSHTelemetry()  # fresh window for new geometry
+        return action
 
     # -- search -----------------------------------------------------------
 

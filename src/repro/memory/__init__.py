@@ -1,0 +1,76 @@
+"""repro.memory — the plan-store API: protocol, policies, pipeline,
+registry.
+
+This package is the contract layer between the APC test-time memory and
+everything that consumes it:
+
+* :mod:`repro.memory.protocol`  — :class:`PlanStore`, the batch-native
+  store protocol (``lookup_batch``/``insert_batch`` primitive, singular
+  ops are :class:`PlanStoreBase` wrappers), plus :class:`CacheStats`;
+* :mod:`repro.memory.policies`  — composable :class:`EvictionPolicy`
+  objects (``lru`` | ``lfu`` | ``ttl`` | ``cost``), paper §4.4;
+* :mod:`repro.memory.pipeline`  — :class:`MatchPipeline` of
+  exact -> fuzzy -> semantic :class:`MatchStage` resolution stages;
+* :mod:`repro.memory.registry`  — the ``@register_method`` agent-strategy
+  registry the harness and benchmarks enumerate.
+
+Implementations live in ``repro.core`` (:class:`~repro.core.cache.PlanCache`,
+:class:`~repro.core.distributed_cache.DistributedPlanCache`, the method
+strategies in :mod:`repro.core.methods`); see docs/architecture.md for the
+composition guide and migration notes from the pre-protocol constructor
+kwargs.
+"""
+
+from repro.memory.pipeline import (
+    ExactStage,
+    FuzzyStage,
+    MatchPipeline,
+    MatchStage,
+    SemanticStage,
+    build_pipeline,
+)
+from repro.memory.policies import (
+    EVICTION_POLICIES,
+    CacheEntry,
+    CostAwarePolicy,
+    EvictionPolicy,
+    LFUPolicy,
+    LRUPolicy,
+    TTLPolicy,
+    make_policy,
+)
+from repro.memory.protocol import CacheStats, PlanStore, PlanStoreBase
+from repro.memory.registry import (
+    METHOD_REGISTRY,
+    AgentMethod,
+    get_method_class,
+    make_method,
+    method_names,
+    register_method,
+)
+
+__all__ = [
+    "AgentMethod",
+    "CacheEntry",
+    "CacheStats",
+    "CostAwarePolicy",
+    "EVICTION_POLICIES",
+    "EvictionPolicy",
+    "ExactStage",
+    "FuzzyStage",
+    "LFUPolicy",
+    "LRUPolicy",
+    "MatchPipeline",
+    "MatchStage",
+    "METHOD_REGISTRY",
+    "PlanStore",
+    "PlanStoreBase",
+    "SemanticStage",
+    "TTLPolicy",
+    "build_pipeline",
+    "get_method_class",
+    "make_method",
+    "make_policy",
+    "method_names",
+    "register_method",
+]

@@ -1,0 +1,149 @@
+"""The ``PlanStore`` protocol: the batch-native contract every plan-cache
+implementation satisfies.
+
+The paper's test-time memory (arXiv 2506.14852 §3) is consumed by several
+surfaces — the agent loop, the two-tier serving router, distributed shards,
+benchmarks — and each used to duck-type its way around the differences
+(``hasattr(cache, "lookup_batch")`` probes, per-method ``if`` ladders).
+This module pins the contract down:
+
+* ``lookup_batch`` / ``insert_batch`` are the PRIMITIVE operations. Every
+  implementation answers a whole wave in one pass (one lock acquisition,
+  one batched fuzzy/semantic resolution, one device scatter on the
+  ``device`` index backend).
+* ``lookup`` / ``insert`` are thin wrappers over the batch primitives,
+  provided once by :class:`PlanStoreBase` — single-request callers get the
+  exact same semantics as the batched path because they ARE the batched
+  path with a batch of one.
+* ``contexts`` carry optional side-channel text per keyword (e.g. the raw
+  task query) for pipeline stages that match on something other than the
+  key — see :class:`repro.memory.pipeline.SemanticStage`.
+* ``vectors`` let a caller that already embedded the KEYS (a replicating
+  distributed cache, a benchmark with a prebuilt bank) ship those key
+  embeddings instead of having every shard re-embed them. They feed the
+  key-matching stages only — a context-matching stage (semantic) always
+  embeds its context text itself.
+
+``CacheStats`` lives here too (re-exported from ``repro.core.cache`` for
+backward compatibility) so implementations share one accounting shape.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import (
+    Any,
+    Dict,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    Tuple,
+    TypeVar,
+    runtime_checkable,
+)
+
+V = TypeVar("V")
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    inserts: int = 0
+    evictions: int = 0
+    lookup_time_s: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": round(self.hit_rate, 4),
+            "inserts": self.inserts,
+            "evictions": self.evictions,
+            "lookup_time_s": round(self.lookup_time_s, 6),
+        }
+
+
+@runtime_checkable
+class PlanStore(Protocol):
+    """Batch-native keyword -> plan store.
+
+    Implementations: :class:`repro.core.cache.PlanCache` and
+    :class:`repro.core.distributed_cache.DistributedPlanCache`. Consumers
+    (router, agent methods, harness) program against this protocol and
+    never probe for optional capabilities.
+    """
+
+    stats: CacheStats
+
+    def lookup_batch(
+        self,
+        keywords: Sequence[str],
+        *,
+        contexts: Optional[Sequence[Optional[str]]] = None,
+    ) -> List[Optional[Any]]: ...
+
+    def insert_batch(
+        self,
+        items: Sequence[Tuple[str, Any]],
+        *,
+        contexts: Optional[Sequence[Optional[str]]] = None,
+        vectors: Optional[Any] = None,
+    ) -> None: ...
+
+    def lookup(
+        self, keyword: str, *, context: Optional[str] = None
+    ) -> Optional[Any]: ...
+
+    def insert(
+        self,
+        keyword: str,
+        value: Any,
+        *,
+        context: Optional[str] = None,
+        vector: Optional[Any] = None,
+    ) -> None: ...
+
+    def remove(self, keyword: str) -> bool: ...
+
+    def keys(self) -> List[str]: ...
+
+    def clear(self) -> None: ...
+
+    def __contains__(self, keyword: str) -> bool: ...
+
+    def __len__(self) -> int: ...
+
+
+class PlanStoreBase:
+    """Singular ``lookup``/``insert`` as thin wrappers over the batch
+    primitives — inherit this and implement only ``lookup_batch`` /
+    ``insert_batch``."""
+
+    def lookup(
+        self, keyword: str, *, context: Optional[str] = None
+    ) -> Optional[Any]:
+        return self.lookup_batch([keyword], contexts=[context])[0]
+
+    def insert(
+        self,
+        keyword: str,
+        value: Any,
+        *,
+        context: Optional[str] = None,
+        vector: Optional[Any] = None,
+    ) -> None:
+        self.insert_batch(
+            [(keyword, value)],
+            contexts=[context],
+            vectors=None if vector is None else [vector],
+        )
+
+
+__all__ = ["CacheStats", "PlanStore", "PlanStoreBase", "V"]

@@ -7,9 +7,12 @@ completed execution is distilled into the plan cache (optionally async so
 cache generation never blocks the response path — the paper lists this as
 future work in §4.3; implemented here).
 
-The router is deployment-scale aware: the plan cache can be a local
-PlanCache or a DistributedPlanCache (consistent-hash sharded across serving
-frontends), and each tier is a pool of engines with hedged dispatch.
+The router is deployment-scale aware: the plan cache is any
+``repro.memory.protocol.PlanStore`` — a local PlanCache or a
+DistributedPlanCache (consistent-hash sharded across serving frontends) —
+consumed through the protocol's batch primitives (no ``hasattr``
+capability probing), and each tier is a pool of engines with hedged
+dispatch.
 ``route_batch`` admits a whole arrival wave through a single
 ``lookup_batch`` pass — with a ``device``-backend fuzzy cache that is one
 resident-bank device call for the entire batch — and distills the wave's
@@ -45,21 +48,51 @@ class TierPool:
     replicas: List[Any] = field(default_factory=list)
     _rr: int = 0
     hedge_timeout_s: float = 30.0
+    _executor: Optional[cf.ThreadPoolExecutor] = field(
+        default=None, repr=False, compare=False
+    )
+    _executor_lock: threading.Lock = field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
 
     def pick(self) -> Any:
-        self._rr = (self._rr + 1) % max(1, len(self.replicas))
-        return self.replicas[self._rr]
+        # return-then-increment so the rotation starts at replica 0 and
+        # visits every replica (increment-first skipped slot 0 forever)
+        eng = self.replicas[self._rr % len(self.replicas)]
+        self._rr = (self._rr + 1) % len(self.replicas)
+        return eng
 
     def dispatch(self, fn: Callable[[Any], Any], *, hedge: bool = False) -> Any:
-        """Run fn(engine); optionally hedge onto a second replica."""
+        """Run fn(engine); optionally hedge onto a second replica.
+
+        Hedged calls share ONE executor per pool (lazily created) instead
+        of paying thread-pool construction + teardown per request."""
         if not hedge or len(self.replicas) < 2:
             return fn(self.pick())
-        with cf.ThreadPoolExecutor(max_workers=2) as ex:
-            futs = [ex.submit(fn, self.pick()) for _ in range(2)]
-            done, not_done = cf.wait(futs, return_when=cf.FIRST_COMPLETED)
-            for f in not_done:
-                f.cancel()
-            return next(iter(done)).result()
+        if self._executor is None:
+            # locked lazy init: concurrent first dispatches must not each
+            # build an executor (the loser's threads would leak). Sized
+            # above 2 because a hedge loser that is already running cannot
+            # be cancelled and holds its worker until it finishes — a hard
+            # cap of 2 would let one straggler serialize (or block) every
+            # later hedged dispatch on this pool.
+            with self._executor_lock:
+                if self._executor is None:
+                    self._executor = cf.ThreadPoolExecutor(
+                        max_workers=max(4, 2 * len(self.replicas)),
+                        thread_name_prefix=f"tier-{self.name}",
+                    )
+        futs = [self._executor.submit(fn, self.pick()) for _ in range(2)]
+        done, not_done = cf.wait(futs, return_when=cf.FIRST_COMPLETED)
+        for f in not_done:
+            f.cancel()
+        return next(iter(done)).result()
+
+    def close(self) -> None:
+        with self._executor_lock:
+            if self._executor is not None:
+                self._executor.shutdown(wait=True)
+                self._executor = None
 
 
 @dataclass
@@ -134,10 +167,9 @@ class TwoTierRouter:
         self.metrics.requests += len(requests)
         kws = [self.extract_keyword(r) for r in requests]
         t0 = time.perf_counter()
-        if hasattr(self.cache, "lookup_batch"):
-            tpls = self.cache.lookup_batch(kws)
-        else:
-            tpls = [self.cache.lookup(kw) for kw in kws]
+        # PlanStore contract: lookup_batch is the primitive — no capability
+        # probing; any conformant store answers the wave in one pass
+        tpls = self.cache.lookup_batch(kws)
         self.metrics.lookup_s += time.perf_counter() - t0
 
         out: List[Any] = []
@@ -166,11 +198,7 @@ class TwoTierRouter:
                     if template is not None:
                         items.append((kw, template))
                 if items:
-                    if hasattr(self.cache, "insert_batch"):
-                        self.cache.insert_batch(items)
-                    else:
-                        for kw, template in items:
-                            self.cache.insert(kw, template)
+                    self.cache.insert_batch(items)
                 if first_err is not None:
                     raise first_err
                 return items

@@ -257,3 +257,95 @@ def test_plan_cache_concurrent_fuzzy_ops_stay_consistent():
     assert len(c) <= 32
     # index and store agree exactly after the storm
     assert sorted(c._matcher.index.bank.keys()) == sorted(c.keys())
+
+
+# -- LSH auto-tuning (telemetry loop closed) ----------------------------------
+
+
+def _bank_of(vectors):
+    bank = EmbeddingBank(initial_capacity=len(vectors))
+    idx_slots = []
+    with bank.lock:
+        for i, v in enumerate(vectors):
+            idx_slots.append(bank.add(f"k{i}", v))
+    return bank, idx_slots
+
+
+def test_lsh_autotune_converges_on_drifting_workload():
+    """A workload that drifts 10x larger drives avg_candidates up; periodic
+    autotune grows n_bits until candidates fall back under target, then
+    goes quiet (converged)."""
+    rng = np.random.RandomState(0)
+    vectors = _unit_rows(6000, seed=1)
+    bank = EmbeddingBank(initial_capacity=64)
+    idx = BucketedIndex(bank, n_tables=4, n_bits=6, probe_hamming=1,
+                        scan_threshold=0, recall_sample_every=0)
+
+    def grow_to(n, start):
+        with bank.lock:
+            for i in range(start, n):
+                slot = bank.add(f"k{i}", vectors[i])
+                idx.on_add(slot, vectors[i])
+
+    queries = _unit_rows(80, seed=2)
+    actions = []
+    sizes = [500, 2000, 6000]
+    prev = 0
+    for size in sizes:  # the drift: the bank keeps growing
+        grow_to(size, prev)
+        prev = size
+        for _ in range(6):  # tuning windows per phase
+            for q in queries:
+                idx.best_slot(q)
+            act = idx.autotune(target_candidates=96, min_queries=50)
+            if act is None:
+                break
+            actions.append(act)
+
+    assert actions, "autotune never acted on a 10x drift"
+    assert idx.n_bits > 6  # candidate pressure grew the tables
+    # converged: a fresh window triggers no further action and candidate
+    # cost is back near target
+    for q in queries:
+        idx.best_slot(q)
+    assert idx.autotune(target_candidates=96, min_queries=50) is None
+    snap = idx.telemetry.snapshot()
+    assert snap["avg_candidates"] <= 96 * 2
+
+
+def test_lsh_autotune_widens_probe_on_low_recall():
+    """With one table and no multi-probe, sampled live recall is poor;
+    autotune widens probe_hamming (masks-only, no rebuild) up to its cap."""
+    vectors = _unit_rows(3000, seed=3)
+    bank = EmbeddingBank(initial_capacity=4096)
+    with bank.lock:
+        slots = [bank.add(f"k{i}", v) for i, v in enumerate(vectors)]
+    idx = BucketedIndex(bank, n_tables=1, n_bits=12, probe_hamming=0,
+                        scan_threshold=0, recall_sample_every=1)
+    queries = _unit_rows(120, seed=4)
+    actions = []
+    for _ in range(4):
+        for q in queries:
+            idx.best_slot(q)
+        act = idx.autotune(min_queries=50)
+        if act is None:
+            break
+        actions.append(act)
+    assert actions[:1] == ["probe_hamming->1"]
+    assert idx.probe_hamming >= 1  # telemetry drove the widening
+    # geometry survived: probing still answers and masks match n_bits
+    s, slot = idx.best_slot(queries[0])
+    assert slot == -1 or 0 <= slot < 4096
+
+
+def test_similarity_index_autotune_facade():
+    idx = SimilarityIndex(backend="brute")
+    assert idx.autotune() is None  # no LSH tables to tune
+    idx2 = SimilarityIndex(backend="bucketed")
+    assert idx2.autotune() is None  # thin window: no action, no crash
+
+
+def test_plan_cache_autotune_reaches_fuzzy_stage():
+    c = PlanCache(capacity=16, fuzzy=True, index_backend="bucketed")
+    c.insert("net revenue growth", 1)
+    assert c.autotune() == []  # thin window -> no actions, plumbing intact

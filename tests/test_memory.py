@@ -1,0 +1,312 @@
+"""repro.memory: PlanStore conformance suite, eviction policies, match
+pipeline, and the method registry round-trip."""
+
+import pytest
+
+from repro.core.cache import PlanCache
+from repro.core.distributed_cache import DistributedPlanCache
+from repro.core.harness import METHODS, run_workload
+from repro.memory import (
+    AgentMethod,
+    CostAwarePolicy,
+    LRUPolicy,
+    METHOD_REGISTRY,
+    PlanStore,
+    build_pipeline,
+    make_method,
+    make_policy,
+    method_names,
+    register_method,
+)
+
+
+# -- PlanStore conformance ----------------------------------------------------
+#
+# One behavioral contract, every implementation x policy x index backend.
+
+STORE_KINDS = ["plan", "distributed"]
+POLICIES = ["lru", "lfu", "cost"]
+BACKENDS = [None, "brute", "bucketed"]  # None = exact-only pipeline
+
+
+def make_store(kind: str, policy: str, backend):
+    kw = dict(eviction=policy)
+    if backend is not None:
+        kw.update(fuzzy=True, fuzzy_threshold=0.7, index_backend=backend)
+    if kind == "plan":
+        return PlanCache(capacity=64, **kw)
+    return DistributedPlanCache(3, replication=2, capacity_per_node=64, **kw)
+
+
+@pytest.mark.parametrize("kind", STORE_KINDS)
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_plan_store_conformance(kind, policy, backend):
+    s = make_store(kind, policy, backend)
+    assert isinstance(s, PlanStore)  # protocol, not hasattr probing
+
+    # singular ops are the batch primitives with a batch of one
+    s.insert("working capital ratio", 1)
+    assert s.lookup("working capital ratio") == 1
+    assert "working capital ratio" in s and len(s) == 1
+
+    # batch ops: one wave in, one wave out, order preserved
+    s.insert_batch([(f"key number {i}", i) for i in range(8)])
+    got = s.lookup_batch([f"key number {i}" for i in range(8)] + ["absent"])
+    assert got[:8] == list(range(8)) and got[8] is None
+    assert sorted(s.keys()) == sorted(
+        ["working capital ratio"] + [f"key number {i}" for i in range(8)]
+    )
+
+    if backend is not None:  # fuzzy stage resolves near-keywords
+        assert s.lookup("working capital ratio analysis") == 1
+
+    # stats account every probe
+    assert s.stats.inserts == 9
+    assert s.stats.hits >= 9 and s.stats.misses >= 1
+
+    # remove is exact and idempotent
+    assert s.remove("key number 0") is True
+    assert "key number 0" not in s
+    if backend is None:
+        assert s.lookup("key number 0") is None
+    else:  # a fuzzy store legitimately resolves the gap to a near key
+        assert s.lookup("key number 0") in (None, *range(1, 8))
+    assert s.remove("key number 0") is False
+
+    s.clear()
+    assert len(s) == 0 and s.keys() == [] and "key number 1" not in s
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_capacity_bound_under_every_policy(policy):
+    c = PlanCache(capacity=4, eviction=policy)
+    for i in range(10):
+        c.insert(f"k{i}", i)
+    assert len(c) == 4 and c.stats.evictions == 6
+    # with no accesses every policy degenerates to insertion order
+    assert sorted(c.keys()) == [f"k{i}" for i in range(6, 10)]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_ttl_composes_with_any_policy(policy):
+    c = PlanCache(capacity=8, eviction=policy, ttl_s=0.0)
+    c.insert("k", 1)
+    assert c.lookup("k") is None  # instantly stale, regardless of policy
+
+
+# -- policy behavior ----------------------------------------------------------
+
+
+def test_lfu_keeps_frequent_entry():
+    c = PlanCache(capacity=3, eviction="lfu")
+    c.insert("hot", 1)
+    for _ in range(3):
+        c.lookup("hot")
+    c.insert("a", 2)
+    c.insert("b", 3)
+    c.insert("c", 4)  # evicts one of the cold entries, never "hot"
+    assert "hot" in c and len(c) == 3
+
+
+def test_cost_aware_keeps_high_value_template():
+    class Tpl:
+        def __init__(self, uses, tokens):
+            self.uses = uses
+            self._tokens = tokens
+
+        def size_tokens(self):
+            return self._tokens
+
+    c = PlanCache(capacity=2, eviction="cost")
+    c.insert("big", Tpl(uses=5, tokens=400))  # oldest but most valuable
+    c.insert("small-1", Tpl(uses=0, tokens=10))
+    c.insert("small-2", Tpl(uses=0, tokens=10))
+    assert "big" in c and "small-1" not in c  # LRU would have evicted "big"
+
+
+def test_policy_instance_and_unknown_name():
+    c = PlanCache(capacity=2, eviction=LRUPolicy())
+    c.insert("a", 1)
+    assert c.lookup("a") == 1
+    with pytest.raises(ValueError):
+        make_policy("nope")
+    with pytest.raises(ValueError):
+        make_policy("ttl")  # ttl requires ttl_s
+    # ttl_s wraps any base policy in TTL expiry
+    wrapped = make_policy("cost", ttl_s=5.0)
+    assert isinstance(wrapped.inner, CostAwarePolicy)
+
+
+def test_distributed_rejects_policy_instance():
+    with pytest.raises(TypeError):
+        DistributedPlanCache(2, eviction=LRUPolicy())
+
+
+# -- match pipeline -----------------------------------------------------------
+
+
+def test_semantic_stage_matches_on_insert_context():
+    c = PlanCache(
+        capacity=8, pipeline=("exact", "semantic"), semantic_threshold=0.5
+    )
+    c.insert(
+        "kw-1", "tpl",
+        context="What is the FY2019 working capital ratio for Costco?",
+    )
+    # different keyword, paraphrased query -> semantic stage resolves it
+    assert (
+        c.lookup(
+            "kw-2",
+            context="What is the FY2021 working capital ratio for Best Buy?",
+        )
+        == "tpl"
+    )
+    assert c.lookup("kw-3", context="orbital mechanics of jupiter") is None
+
+
+def test_semantic_stage_falls_back_to_key_text():
+    # query-keyed store (the semantic baseline's shape): context defaults
+    # to the key at insert AND lookup
+    c = PlanCache(capacity=8, pipeline=("exact", "semantic"),
+                  semantic_threshold=0.6)
+    c.insert("what is the net profit margin for Acme", "answer")
+    assert c.lookup("what is the net profit margin for Acme Corp") == "answer"
+
+
+def test_full_cascade_pipeline_order():
+    c = PlanCache(
+        capacity=8,
+        pipeline=("exact", "fuzzy", "semantic"),
+        fuzzy_threshold=0.7,
+        semantic_threshold=0.5,
+    )
+    c.insert("working capital ratio", "wc",
+             context="What is FY2019 working capital ratio for Costco?")
+    assert c.lookup("working capital ratio") == "wc"  # exact
+    assert c.lookup("working capital ratio analysis") == "wc"  # fuzzy
+    assert (  # neither keyword matches; the query context does
+        c.lookup("liquidity check",
+                 context="What is FY2020 working capital ratio for Target?")
+        == "wc"
+    )
+
+
+def test_caller_key_vectors_do_not_poison_semantic_stage():
+    # the vectors= channel ships KEY embeddings (for fuzzy stages); the
+    # semantic stage must still embed the context text itself, or
+    # paraphrase matching silently dies on cascade stores
+    from repro.index import embed
+
+    c = PlanCache(
+        capacity=8,
+        pipeline=("exact", "fuzzy", "semantic"),
+        fuzzy_threshold=0.7,
+        semantic_threshold=0.5,
+    )
+    kw = "working capital ratio"
+    c.insert(kw, "tpl",
+             context="What is FY2019 working capital ratio for Costco?",
+             vector=embed(kw))
+    assert (  # semantic stage matches the context, not the shipped vector
+        c.lookup("liquidity check",
+                 context="What is FY2020 working capital ratio for Target?")
+        == "tpl"
+    )
+
+
+def test_build_pipeline_rejects_unknown_stage():
+    with pytest.raises(ValueError):
+        build_pipeline(("exact", "psychic"))
+
+
+def test_distributed_store_accepts_contexts():
+    # contexts ride through the tiered fan-out to each shard's pipeline
+    # (exact shards ignore them; the call shape is part of the protocol)
+    dc = DistributedPlanCache(3, replication=1, capacity_per_node=16)
+    dc.insert("kw", 7, context="some query text")
+    assert dc.lookup_batch(["kw"], contexts=["other text"]) == [7]
+    assert dc.lookup("kw", context="third text") == 7
+
+
+# -- replication ships (key, vector) pairs ------------------------------------
+
+
+def test_replicated_insert_embeds_each_key_exactly_once(monkeypatch):
+    import repro.core.distributed_cache as dcm
+    import repro.index as rindex
+    import repro.index.bank as bank
+
+    embedded_texts = []
+    real_embed_batch = bank.embed_batch
+
+    def counting_batch(texts):
+        embedded_texts.extend(texts)
+        return real_embed_batch(texts)
+
+    # patch every module-level binding on the insert-side embed path
+    # (bank.embed funnels through bank.embed_batch, so this covers the
+    # per-key path too)
+    for mod in (bank, rindex, dcm):
+        monkeypatch.setattr(mod, "embed_batch", counting_batch)
+
+    dc = DistributedPlanCache(4, replication=3, capacity_per_node=64,
+                              fuzzy=True)
+    dc.insert_batch([(f"keyword number {i}", i) for i in range(10)])
+    dc.insert("solo keyword", 99)
+    # 10 wave keys + 1 single key, each embedded ONCE despite 3 replicas
+    assert sorted(embedded_texts) == sorted(
+        [f"keyword number {i}" for i in range(10)] + ["solo keyword"]
+    )
+    # and the replicas really did index the shipped vectors
+    assert dc.lookup("solo keyword") == 99
+    assert dc.lookup_batch(["keyword number 3"]) == [3]
+
+
+# -- method registry ----------------------------------------------------------
+
+
+def test_methods_enumerates_registry_and_includes_cascade():
+    assert METHODS == method_names()
+    for m in ("accuracy_optimal", "cost_optimal", "semantic",
+              "full_history", "apc", "cascade"):
+        assert m in METHODS
+
+
+@pytest.mark.parametrize("method", list(METHOD_REGISTRY))
+def test_every_registered_method_runs_through_the_harness(method):
+    r = run_workload("financebench", method, 12)
+    assert r.method == method
+    assert 0.0 <= r.accuracy <= 1.0
+    assert r.cost > 0
+    assert len(r.records) == 0  # keep_records defaults off
+
+
+def test_unknown_method_raises_value_error():
+    with pytest.raises(ValueError):
+        run_workload("financebench", "not-a-method", 4)
+
+
+def test_register_method_roundtrip():
+    @register_method("_test_stub")
+    class Stub(AgentMethod):
+        def run(self, task):
+            return "ran"
+
+    try:
+        assert METHOD_REGISTRY["_test_stub"] is Stub
+        assert Stub.name == "_test_stub"
+        m = make_method("_test_stub", agent=object())
+        assert m.run(None) == "ran"
+    finally:
+        METHOD_REGISTRY.pop("_test_stub", None)
+
+
+def test_cascade_is_cheaper_than_accuracy_optimal():
+    cascade = run_workload("financebench", "cascade", 60)
+    ao = run_workload("financebench", "accuracy_optimal", 60)
+    apc = run_workload("financebench", "apc", 60)
+    assert cascade.cost < ao.cost
+    assert cascade.accuracy > 0.8 * ao.accuracy
+    # the semantic tail stage can only ADD hits over plain apc
+    assert cascade.hit_rate >= apc.hit_rate

@@ -9,7 +9,7 @@ from repro.configs import registry
 from repro.core.cache import PlanCache
 from repro.models import lm
 from repro.serving.engine import Engine
-from repro.serving.router import TwoTierRouter
+from repro.serving.router import TierPool, TwoTierRouter
 from repro.serving.scheduler import ContinuousBatcher, Request, SchedulerConfig
 
 
@@ -72,6 +72,34 @@ def test_straggler_hedging_triggers():
     assert stats["completed"] == 4
     assert stats["hedges"] > 0
     assert stats["wasted_steps"] > 0  # hedging costs duplicated work
+
+
+# -- tier pools ----------------------------------------------------------------
+
+
+def test_tier_pool_round_robin_visits_every_replica():
+    pool = TierPool("small", replicas=["r0", "r1", "r2"])
+    # starts at replica 0 and cycles through all of them (the old
+    # increment-before-index rotation never served slot 0)
+    assert [pool.pick() for _ in range(6)] == ["r0", "r1", "r2", "r0", "r1", "r2"]
+
+
+def test_tier_pool_hedged_dispatch_reuses_one_executor():
+    pool = TierPool("large", replicas=["a", "b"])
+    assert pool.dispatch(lambda e: e, hedge=True) in ("a", "b")
+    ex = pool._executor
+    assert ex is not None
+    assert pool.dispatch(lambda e: e, hedge=True) in ("a", "b")
+    assert pool._executor is ex  # one pool per TierPool, not per call
+    pool.close()
+    assert pool._executor is None
+
+
+def test_tier_pool_unhedged_skips_executor():
+    pool = TierPool("actor", replicas=["only"])
+    assert pool.dispatch(lambda e: e, hedge=True) == "only"  # <2 replicas
+    assert pool._executor is None
+    pool.close()
 
 
 # -- two-tier router ------------------------------------------------------------
