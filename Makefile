@@ -1,7 +1,7 @@
 # Local mirror of .github/workflows/smoke.yml
 PYTHONPATH := src
 
-.PHONY: smoke test bench-fast docs-check
+.PHONY: smoke test bench-fast docs-check sim-check
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -12,4 +12,10 @@ bench-fast:
 docs-check:
 	PYTHONPATH=$(PYTHONPATH) python tools/check_docs.py
 
-smoke: test bench-fast docs-check
+# 5-seed deterministic-simulation matrix (scenarios x fault plans, guards
+# on, plus the guard-ablation oracle audit); failure seeds land in
+# sim-repro/ as replayable JSON (python -m repro.sim --replay <file>)
+sim-check:
+	PYTHONPATH=$(PYTHONPATH) python -m repro.sim --check --seeds 5 --dump-dir sim-repro
+
+smoke: test bench-fast sim-check docs-check

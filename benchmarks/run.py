@@ -24,6 +24,7 @@ from benchmarks import (
     f3_matching,
     f5_hit_miss,
     kernel_bench,
+    s1_sim,
     t1_main,
     t2_cost_breakdown,
     t3_latency,
@@ -46,6 +47,7 @@ MODULES = {
     "f5": f5_hit_miss,
     "t9": t9_sensitivity,
     "kernels": kernel_bench,
+    "s1": s1_sim,
 }
 
 

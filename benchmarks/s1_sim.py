@@ -1,0 +1,47 @@
+"""Sim throughput: how many simulated ops/second the deterministic
+harness sustains per scenario and fault plan.
+
+This row keeps the verification loop itself honest: the sim is only
+useful as a pre-merge gate if a seed matrix stays cheap, so a regression
+in ops/sec (e.g. an accidentally quadratic oracle) shows up in the same
+benchmark artifact stream as the serving-path rows.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row
+from repro.sim import SimConfig, run_sim
+
+
+def run(fast: bool = False) -> List[Row]:
+    n_ops = 30 if fast else 80
+    rows: List[Row] = []
+    cells = [
+        ("skewed_reuse", "none"),
+        ("skewed_reuse", "crash_restart"),
+        ("evict_then_hit", "mid_wave_evict"),
+        ("skewed_reuse", "hedge_timeout"),
+    ]
+    for scenario, fault in cells:
+        cfg = SimConfig(seed=0, scenario=scenario, fault=fault, n_ops=n_ops)
+        t0 = time.perf_counter()
+        report = run_sim(cfg)
+        wall = time.perf_counter() - t0
+        assert report.ok, report.violations[:3]
+        rows.append(
+            Row(
+                f"s1/{scenario}/{fault}",
+                wall * 1e6 / max(1, report.ops_applied),
+                {
+                    "ops": report.ops_applied,
+                    "steps": report.steps,
+                    "lookups": report.lookups,
+                    "ops_per_s": round(report.ops_applied / max(wall, 1e-9), 1),
+                    "trace_hash": report.trace_hash[:12],
+                },
+            )
+        )
+    return rows

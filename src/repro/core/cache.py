@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Dict, Generic, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, Generic, List, Optional, Sequence, Tuple, Union
 
 from repro.memory.pipeline import MatchPipeline, build_pipeline
 from repro.memory.policies import CacheEntry, EvictionPolicy, make_policy
@@ -51,8 +51,20 @@ class PlanCache(PlanStoreBase, Generic[V]):
         ttl_s: Optional[float] = None,
         eviction: Union[str, EvictionPolicy] = "lru",
         pipeline: Optional[Union[MatchPipeline, Sequence[Any]]] = None,
+        clock: Optional[Callable[[], float]] = None,
+        evict_during_wave: bool = False,
     ):
         self.capacity = capacity
+        # injectable time source: TTL expiry and entry timestamps read THIS,
+        # never the wall clock directly, so the deterministic simulation
+        # harness (repro.sim) and TTL tests can drive time explicitly
+        self._clock = clock if clock is not None else time.time
+        # ABLATION SEAM (repro.sim only): the documented contract is that
+        # eviction runs AFTER an admission wave lands, so a wave larger than
+        # capacity keeps its newest entries. Setting evict_during_wave=True
+        # restores the pre-protocol per-insert eviction so the sim's
+        # eviction oracle can demonstrate it catches the regression.
+        self._evict_during_wave = evict_during_wave
         self.fuzzy_threshold = fuzzy_threshold
         self.semantic_threshold = semantic_threshold
         self.index_backend = index_backend
@@ -102,7 +114,7 @@ class PlanCache(PlanStoreBase, Generic[V]):
             contexts = [None] * len(keywords)
         try:
             with self._lock:
-                now = time.time()
+                now = self._clock()
                 out: List[Optional[V]] = [None] * len(keywords)
                 pending = list(range(len(keywords)))
                 for stage in self.pipeline.stages:
@@ -167,17 +179,44 @@ class PlanCache(PlanStoreBase, Generic[V]):
         if contexts is None:
             contexts = [None] * len(items)
         with self._lock:
-            now = time.time()
+            now = self._clock()
             for kw, v in items:
                 entry = CacheEntry(v, now)
                 self._store[kw] = entry
                 self.policy.on_insert(kw, entry)
                 self.stats.inserts += 1
+                if self._evict_during_wave:
+                    while len(self._store) > self.capacity:
+                        self._delete(self.policy.victim(self._store))
+                        self.stats.evictions += 1
             if items:
                 self.pipeline.on_insert_batch(items, contexts, vectors)
             while len(self._store) > self.capacity:
                 self._delete(self.policy.victim(self._store))
                 self.stats.evictions += 1
+
+    def peek(self, keyword: str) -> Optional[V]:
+        """Value for an exact key WITHOUT hit accounting or policy touches
+        (expired entries still return None). Used by crash-recovery
+        read-repair in the distributed cache, where a repair scan must not
+        perturb recency/frequency bookkeeping."""
+        with self._lock:
+            entry = self._store.get(keyword)
+            if entry is None or self.policy.expired(keyword, entry, self._clock()):
+                return None
+            return entry.value
+
+    def snapshot_items(self) -> List[Tuple[str, V]]:
+        """Every live (keyword, value) pair under ONE lock acquisition, with
+        ``peek`` semantics (no hit/recency perturbation, expired entries
+        skipped). The repair-scan primitive: a per-key ``peek`` loop would
+        take the lock O(keys) times."""
+        with self._lock:
+            now = self._clock()
+            return [
+                (k, e.value) for k, e in self._store.items()
+                if not self.policy.expired(k, e, now)
+            ]
 
     def remove(self, keyword: str) -> bool:
         """Delete one entry, keeping stage indexes in sync. True if present."""

@@ -21,8 +21,33 @@ and ships ``(key, vector)`` pairs to every replica shard, instead of each
 shard's index re-embedding the key privately.
 
 In-process shards stand in for network nodes (the container has one host);
-the interface (lookup/insert/add_node/remove_node/mark_down) is what a
-networked implementation would expose.
+the interface (lookup/insert/add_node/remove_node/mark_down/restart_node)
+is what a networked implementation would expose.
+
+Failure semantics (exercised by the ``repro.sim`` deterministic-simulation
+harness):
+
+* Every per-shard batch call goes through an injectable ``interceptor``
+  seam. A networked deployment would put the RPC client here; the sim
+  installs a fault injector that can raise :class:`ShardUnavailable`
+  (crash-failure discovered at call time, unlike ``mark_down`` which
+  models a failure the membership layer already knows about) or defer
+  replica writes (replica lag).
+* GUARD — crash fallthrough: when a shard call fails mid-lookup, the
+  affected keywords stay pending and fall through to the next replica
+  tier instead of being dropped as misses. Ablatable via
+  ``ablate={"crash_fallthrough"}`` so the sim's durability oracle can
+  demonstrate it catches the regression.
+* GUARD — synchronous replica acks (``ack_policy="all"``, the default):
+  ``insert_batch`` returns only after every live owner applied the wave,
+  so a read that falls through to any replica observes the acked version.
+  ``ack_policy="primary"`` is the ablation: replica writes are handed to
+  ``interceptor.defer`` (applied after an injected lag), opening the
+  stale-read window the sim's linearizability oracle catches.
+* GUARD — crash-recovery read-repair: ``restart_node`` brings a node back
+  EMPTY (process restart loses in-memory state) and, with
+  ``recover=True``, re-pulls the keys it owns from peer replicas before
+  serving, restoring the replication factor.
 """
 
 from __future__ import annotations
@@ -30,11 +55,17 @@ from __future__ import annotations
 import bisect
 import hashlib
 import threading
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cache import CacheStats, PlanCache
 from repro.index.bank import embed, embed_batch
 from repro.memory.protocol import PlanStoreBase
+
+
+class ShardUnavailable(RuntimeError):
+    """A shard call failed at dispatch time (crash discovered by the RPC
+    layer, not yet by membership). Raised by interceptors, never by the
+    in-process shards themselves."""
 
 
 def _hash(s: str) -> int:
@@ -93,10 +124,23 @@ class DistributedPlanCache(PlanStoreBase):
         index_backend: str = "auto",
         eviction: str = "lru",
         ttl_s: Optional[float] = None,
+        clock: Optional[Callable[[], float]] = None,
+        interceptor: Optional[Any] = None,
+        ack_policy: str = "all",
+        ablate: Sequence[str] = (),
     ):
         if not isinstance(eviction, str):
             # a policy INSTANCE would be shared bookkeeping across shards
             raise TypeError("DistributedPlanCache takes an eviction policy name")
+        if ack_policy not in ("all", "primary"):
+            raise ValueError(f"ack_policy must be 'all' or 'primary', got {ack_policy!r}")
+        if ack_policy == "primary" and not callable(getattr(interceptor, "defer", None)):
+            # without a defer channel the 'primary' ablation would silently
+            # degrade to synchronous 'all' semantics — refuse instead
+            raise ValueError(
+                "ack_policy='primary' requires an interceptor with a "
+                "defer(node, fn) channel to carry the lagged replica writes"
+            )
         self.ring = HashRing()
         self.replication = replication
         self.capacity_per_node = capacity_per_node
@@ -107,6 +151,10 @@ class DistributedPlanCache(PlanStoreBase):
         self.index_backend = index_backend
         self.eviction = eviction
         self.ttl_s = ttl_s
+        self.clock = clock
+        self.interceptor = interceptor
+        self.ack_policy = ack_policy
+        self.ablate = frozenset(ablate)
         self.shards: Dict[str, PlanCache] = {}
         self.down: set = set()
         self.stats = CacheStats()
@@ -128,6 +176,10 @@ class DistributedPlanCache(PlanStoreBase):
                 index_backend=self.index_backend,
                 eviction=self.eviction,
                 ttl_s=self.ttl_s,
+                clock=self.clock,
+                # the evict-after-wave guard ablation reaches every shard,
+                # including ones created by later add_node/restart_node
+                evict_during_wave="evict_after_wave" in self.ablate,
             )
             self.ring.add(name)
             self._rebalance()
@@ -154,6 +206,57 @@ class DistributedPlanCache(PlanStoreBase):
         with self._lock:
             self.down.discard(name)
 
+    def restart_node(self, name: str, *, recover: bool = True) -> int:
+        """Crash-recovery hook: the node's process restarts EMPTY (a crash
+        loses in-memory cache state) and rejoins. With ``recover=True`` it
+        read-repairs the keys it owns from peer replicas before serving —
+        the guard that restores the replication factor after a crash.
+        Repair reads and the repair write go through the ``_shard_call``
+        seam like any other shard traffic: an unreachable peer simply
+        cannot donate repair data. Returns the number of repaired entries."""
+        with self._lock:
+            if name not in self.shards:
+                self.add_node(name)
+                return 0
+            shard = self.shards[name]
+            shard.clear()
+            self.down.discard(name)
+            if not recover:
+                return 0
+            repaired: List[Tuple[str, Any]] = []
+            seen: set = set()
+            for peer in sorted(self.shards):
+                if peer == name or peer in self.down:
+                    continue
+                other = self.shards[peer]
+                try:
+                    # one-lock snapshot with peek semantics: the repair scan
+                    # must not perturb the peer's recency/frequency state
+                    pairs = self._shard_call(
+                        peer, "repair_scan", other.snapshot_items
+                    )
+                except ShardUnavailable:
+                    continue
+                for k, v in pairs:
+                    if k in seen:
+                        continue
+                    if name in self.ring.nodes_for(k, self.replication):
+                        repaired.append((k, v))
+                        seen.add(k)
+            if repaired:
+                try:
+                    # fuzzy shards re-embed the repaired keys here: peers
+                    # don't expose their index vectors, and crash recovery
+                    # is rare enough that the embed-once invariant is only
+                    # enforced on the hot (insert_batch) write path
+                    self._shard_call(
+                        name, "insert_batch",
+                        lambda: shard.insert_batch(repaired),
+                    )
+                except ShardUnavailable:
+                    return 0  # the restarted node died again mid-repair
+            return len(repaired)
+
     def _rebalance(self) -> None:
         """After adding a node, re-home keys whose primary moved."""
         moves = []
@@ -170,6 +273,14 @@ class DistributedPlanCache(PlanStoreBase):
             self._insert_unlocked(k, v)
 
     # -- cache ops --------------------------------------------------------
+
+    def _shard_call(self, node: str, op: str, fn: Callable[[], Any]) -> Any:
+        """Every per-shard batch call funnels through here — the seam where
+        a networked deployment dispatches an RPC and where the sim's fault
+        injector raises :class:`ShardUnavailable` / charges latency."""
+        if self.interceptor is not None:
+            return self.interceptor.call(node, op, fn)
+        return fn()
 
     def _live(self, names: List[str]) -> List[str]:
         return [n for n in names if n not in self.down and n in self.shards]
@@ -205,6 +316,14 @@ class DistributedPlanCache(PlanStoreBase):
         per keyword is identical to the singular ``lookup`` (which IS this
         path with a batch of one), and ``contexts`` ride along to each
         shard's match pipeline.
+
+        GUARD (crash fallthrough): a shard call that raises
+        :class:`ShardUnavailable` leaves its keywords PENDING — they retry
+        on the next replica tier exactly as if the shard had answered
+        "miss", so a crashed-but-not-yet-marked-down node costs one wasted
+        probe, never a durability hole. With ``"crash_fallthrough"`` in
+        ``ablate`` the failed shard's keywords are dropped as misses (the
+        regression the sim's durability oracle catches).
         """
         if contexts is None:
             contexts = [None] * len(keywords)
@@ -212,6 +331,7 @@ class DistributedPlanCache(PlanStoreBase):
             out: List[Optional[Any]] = [None] * len(keywords)
             owners_of = [self._probe_order(k) for k in keywords]
             pending = list(range(len(keywords)))
+            dropped: set = set()
             tier = 0
             while pending:
                 by_node: Dict[str, List[int]] = {}
@@ -221,15 +341,24 @@ class DistributedPlanCache(PlanStoreBase):
                 if not by_node:
                     break
                 for node, idxs in by_node.items():
-                    vals = self.shards[node].lookup_batch(
-                        [keywords[i] for i in idxs],
-                        contexts=[contexts[i] for i in idxs],
-                    )
+                    shard = self.shards[node]
+                    kws = [keywords[i] for i in idxs]
+                    ctxs = [contexts[i] for i in idxs]
+                    try:
+                        vals = self._shard_call(
+                            node, "lookup_batch",
+                            lambda s=shard, k=kws, c=ctxs: s.lookup_batch(k, contexts=c),
+                        )
+                    except ShardUnavailable:
+                        if "crash_fallthrough" in self.ablate:
+                            dropped.update(idxs)  # served as misses (BUG)
+                        continue  # guard: keywords stay pending -> next tier
                     for i, v in zip(idxs, vals):
                         out[i] = v
                 pending = [
                     i for i in pending
-                    if out[i] is None and tier + 1 < len(owners_of[i])
+                    if out[i] is None and i not in dropped
+                    and tier + 1 < len(owners_of[i])
                 ]
                 tier += 1
             for v in out:
@@ -246,11 +375,24 @@ class DistributedPlanCache(PlanStoreBase):
         context: Optional[str] = None,
         vector: Optional[Any] = None,
     ) -> None:
+        # NOTE: this path serves control-plane re-homing only (_rebalance /
+        # remove_node) — membership moves are deliberately synchronous and
+        # outside the ack_policy contract, which governs the client write
+        # path (insert/insert_batch, where PlanStoreBase.insert delegates)
         owners = self._live(self.ring.nodes_for(keyword, self.replication))
         if self.fuzzy and vector is None and owners:
             vector = embed(keyword)  # embed once, ship to every replica
         for n in owners:
-            self.shards[n].insert(keyword, value, context=context, vector=vector)
+            shard = self.shards[n]
+            try:
+                self._shard_call(
+                    n, "insert",
+                    lambda s=shard: s.insert(
+                        keyword, value, context=context, vector=vector
+                    ),
+                )
+            except ShardUnavailable:
+                continue  # write lands on the remaining owners
 
     def insert_batch(
         self,
@@ -263,32 +405,73 @@ class DistributedPlanCache(PlanStoreBase):
         the wave in one ``insert_batch`` call (one device scatter per shard
         on the ``device`` backend). With fuzzy shards the wave is embedded
         ONCE here and the (key, vector) pairs are replicated, so an R-way
-        replicated key never embeds R times."""
+        replicated key never embeds R times.
+
+        GUARD (synchronous replica acks): with ``ack_policy="all"`` every
+        live owner applies the wave before this call returns, so a reader
+        falling through to any replica observes the acked version. The
+        ``"primary"`` ablation acks after the per-key PRIMARY write only
+        and defers replica application to the interceptor's lag queue —
+        the stale-read window the sim's linearizability oracle catches. A
+        replica that raises :class:`ShardUnavailable` is skipped (the wave
+        lands on the remaining owners)."""
         items = list(items)
         if contexts is None:
             contexts = [None] * len(items)
         with self._lock:
             if self.fuzzy and vectors is None and items:
                 vectors = embed_batch([kw for kw, _ in items])
-            by_node: Dict[str, List[int]] = {}
+            primary_by_node: Dict[str, List[int]] = {}
+            replica_by_node: Dict[str, List[int]] = {}
             for j, (kw, _) in enumerate(items):
-                for n in self._live(self.ring.nodes_for(kw, self.replication)):
-                    by_node.setdefault(n, []).append(j)
-            for n, idxs in by_node.items():
-                self.shards[n].insert_batch(
+                owners = self._live(self.ring.nodes_for(kw, self.replication))
+                for rank, n in enumerate(owners):
+                    tgt = primary_by_node if rank == 0 else replica_by_node
+                    tgt.setdefault(n, []).append(j)
+
+            def apply(node: str, idxs: List[int]) -> None:
+                shard = self.shards[node]
+                shard.insert_batch(
                     [items[j] for j in idxs],
                     contexts=[contexts[j] for j in idxs],
                     vectors=None if vectors is None else [vectors[j] for j in idxs],
                 )
+
+            for n, idxs in primary_by_node.items():
+                try:
+                    self._shard_call(n, "insert_batch",
+                                     lambda n=n, idxs=idxs: apply(n, idxs))
+                except ShardUnavailable:
+                    continue  # replicas still take the wave below
+            defer = getattr(self.interceptor, "defer", None)
+            for n, idxs in replica_by_node.items():
+                if self.ack_policy == "primary" and defer is not None:
+                    # ABLATION: ack without the replica -> lag window
+                    defer(n, lambda n=n, idxs=idxs: apply(n, idxs))
+                    continue
+                try:
+                    self._shard_call(n, "insert_batch",
+                                     lambda n=n, idxs=idxs: apply(n, idxs))
+                except ShardUnavailable:
+                    continue
             self.stats.inserts += len(items)
 
     def remove(self, keyword: str) -> bool:
         """Delete from every shard holding the key (owners may be stale
-        after membership churn). True if any replica held it."""
+        after membership churn). True if any replica held it. A shard that
+        is unreachable keeps its stale copy until its next restart wipes
+        it — the same tombstone-free semantics a networked delete has."""
         with self._lock:
             removed = False
-            for shard in self.shards.values():
-                removed = shard.remove(keyword) or removed
+            for name in sorted(self.shards):
+                shard = self.shards[name]
+                try:
+                    r = self._shard_call(
+                        name, "remove", lambda s=shard: s.remove(keyword)
+                    )
+                except ShardUnavailable:
+                    continue
+                removed = r or removed
             return removed
 
     def clear(self) -> None:

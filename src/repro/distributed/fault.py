@@ -8,7 +8,15 @@ loss — and (3) restart from the last committed step, optionally on a
 
 The manager wraps any step function; failures are injected in tests via
 ``inject``. Per-step wall-time watermarks implement straggler detection
-(p99-based deadline like the serving hedger).
+(p99-based deadline like the serving hedger). Step timing reads an
+injectable ``clock`` (default: the monotonic perf counter), so straggler
+tests drive a virtual clock instead of sleeping.
+
+:class:`FaultSchedule` is the shared inject path: both this runner and the
+``repro.sim`` deterministic-simulation harness schedule faults through it
+(``inject(step, kind, **details)`` / ``pop(step)``), so a fault plan
+written for the simulator reads identically to one written for training
+supervision.
 """
 
 from __future__ import annotations
@@ -22,6 +30,35 @@ import jax
 import numpy as np
 
 from repro.checkpoint.store import CheckpointStore
+
+
+@dataclass
+class FaultSpec:
+    """One scheduled fault: what happens and (optionally) to whom."""
+
+    kind: str  # "nan" | "stall" | "worker_lost" | sim kinds ("crash", ...)
+    details: Dict[str, Any] = field(default_factory=dict)
+
+
+class FaultSchedule:
+    """Step-indexed fault injection shared by the training runner and the
+    ``repro.sim`` harness. Multiple faults may land on one step; ``pop``
+    returns them in injection order and removes them (a fault fires once)."""
+
+    def __init__(self) -> None:
+        self._by_step: Dict[int, List[FaultSpec]] = {}
+
+    def inject(self, step: int, kind: str, **details: Any) -> None:
+        self._by_step.setdefault(step, []).append(FaultSpec(kind, details))
+
+    def pop(self, step: int) -> List[FaultSpec]:
+        return self._by_step.pop(step, [])
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self._by_step.values())
+
+    def __bool__(self) -> bool:
+        return bool(self._by_step)
 
 
 @dataclass
@@ -47,17 +84,23 @@ class FaultTolerantRunner:
         step_fn: Callable[[Any, Any], Tuple[Any, Dict[str, float]]],
         store: CheckpointStore,
         policy: FaultPolicy = FaultPolicy(),
+        *,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.step_fn = step_fn
         self.store = store
         self.policy = policy
+        # injectable time source: straggler/stall detection compares THESE
+        # readings, so tests (and repro.sim) drive a virtual clock instead
+        # of depending on wall-clock sleeps
+        self.clock = clock if clock is not None else time.perf_counter
         self.events: List[FaultEvent] = []
         self._step_times: List[float] = []
-        self._inject: Dict[int, str] = {}
+        self.schedule = FaultSchedule()
 
-    def inject(self, step: int, kind: str) -> None:
+    def inject(self, step: int, kind: str, **details: Any) -> None:
         """Test hook: fail at a given step ('nan' | 'worker_lost' | 'stall')."""
-        self._inject[step] = kind
+        self.schedule.inject(step, kind, **details)
 
     # ------------------------------------------------------------------
 
@@ -90,16 +133,18 @@ class FaultTolerantRunner:
             step = extra.get("step", committed[-1])
             last_ckpt = step
         while step < n_steps:
-            injected = self._inject.pop(step, None)
-            t0 = time.perf_counter()
+            # every fault scheduled for this step fires (pop is fire-once,
+            # so dropping any spec here would silently lose an injection)
+            injected = {spec.kind for spec in self.schedule.pop(step)}
+            t0 = self.clock()
             try:
-                if injected == "worker_lost":
+                if "worker_lost" in injected:
                     raise RuntimeError("injected worker loss")
                 new_state, metrics = self.step_fn(state, batches(step))
-                if injected == "nan":
+                if "nan" in injected:
                     metrics = dict(metrics, loss=float("nan"))
-                dt = time.perf_counter() - t0
-                if self._stalled(dt) or injected == "stall":
+                dt = self.clock() - t0
+                if self._stalled(dt) or "stall" in injected:
                     raise TimeoutError(f"step {step} exceeded deadline ({dt:.2f}s)")
                 if self._is_bad(metrics):
                     self.events.append(FaultEvent(step, "nan", "rollback"))

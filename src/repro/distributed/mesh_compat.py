@@ -1,0 +1,77 @@
+"""Mesh-API version shims: the jax>=0.6 surface on jax 0.4.37.
+
+The distributed/training code targets the modern mesh API —
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``,
+``jax.set_mesh``, ``jax.shard_map(..., check_vma=...)`` — which this
+container's jax 0.4.37 lacks. Import the surface from HERE instead of
+``jax`` and both versions work (pattern: ``kernels/_compat.py``):
+
+====================  ==========================================  =============================
+modern name           jax>=0.6                                    jax 0.4.37 mapping
+====================  ==========================================  =============================
+``make_mesh``         ``jax.make_mesh(axis_types=...)``           ``jax.make_mesh`` (axis types
+                                                                  dropped: 0.4 meshes are Auto)
+``AxisType``          ``jax.sharding.AxisType``                   enum-like placeholder
+``set_mesh``          ``jax.set_mesh`` context manager            ``Mesh.__enter__`` resource
+                                                                  env (ambient mesh)
+``shard_map``         ``jax.shard_map(check_vma=...)``            ``jax.experimental.shard_map
+                                                                  .shard_map(check_rep=...)``
+====================  ==========================================  =============================
+
+``check_vma`` (0.6 name for varying-manual-axes checking) maps onto
+``check_rep`` (its 0.4 name) — same meaning, renamed upstream.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional, Sequence
+
+import jax
+
+HAS_NEW_MESH_API = hasattr(jax.sharding, "AxisType")
+
+if HAS_NEW_MESH_API:
+    AxisType = jax.sharding.AxisType
+
+    def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+                  axis_types: Optional[Sequence[Any]] = None):
+        if axis_types is None:
+            axis_types = (AxisType.Auto,) * len(axes)
+        return jax.make_mesh(tuple(shape), tuple(axes), axis_types=tuple(axis_types))
+
+    def set_mesh(mesh):
+        return jax.set_mesh(mesh)
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:
+    class AxisType:  # minimal stand-in: 0.4 meshes are implicitly Auto
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+                  axis_types: Optional[Sequence[Any]] = None):
+        del axis_types  # 0.4 meshes carry no axis types (all Auto)
+        return jax.make_mesh(tuple(shape), tuple(axes))
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        # 0.4 equivalent of the ambient mesh: the Mesh resource-env
+        # context manager (explicit in_shardings/NamedShardings don't
+        # strictly need it, but code written against jax.set_mesh expects
+        # the mesh to be ambient inside the block)
+        with mesh:
+            yield mesh
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+__all__ = ["AxisType", "HAS_NEW_MESH_API", "make_mesh", "set_mesh", "shard_map"]

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed import mesh_compat
+
 
 def pipeline_apply(
     layer_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
@@ -97,7 +99,7 @@ def pipeline_apply(
         outs = jax.lax.psum(outs, axis)
         return outs
 
-    fn = jax.shard_map(
+    fn = mesh_compat.shard_map(
         stage_body,
         mesh=mesh,
         in_specs=(p_spec, P()),

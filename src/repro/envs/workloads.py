@@ -7,11 +7,19 @@ Each differs along the axes that matter to APC:
   * GAIA    — heterogeneous open-domain tasks: most intents are UNIQUE
     (keyword rarely recurs), reproducing the paper's finding that initial
     planning rarely hits but re-planning still benefits.
+
+This module also hosts the seeded sim-traffic generators
+(:func:`sim_traffic`): per-client op streams the ``repro.sim``
+deterministic-simulation harness interleaves against the plan store under
+injected faults. Scenarios cover the cache's adversarial corners — skewed
+reuse (zipf over recurring intents), paraphrase bursts (fuzzy-tier
+pressure), and evict-then-hit floods (admission waves racing eviction).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+import random
+from typing import Any, Dict, List
 
 from repro.envs.base import AgentEnv, IntentSpec
 
@@ -274,3 +282,103 @@ def get_env(name: str) -> AgentEnv:
 
 
 ALL_ENVS = ["financebench", "tabmwp", "qasper", "aime", "gaia"]
+
+
+# -- seeded sim traffic (repro.sim) -----------------------------------------
+
+SIM_SCENARIOS = ("skewed_reuse", "paraphrase_burst", "evict_then_hit", "uniform")
+
+
+def _zipf_pick(rng: random.Random, n: int, s: float = 1.2) -> int:
+    """Zipf-skewed index in [0, n): rank r with weight 1/(r+1)^s."""
+    weights = [1.0 / (r + 1) ** s for r in range(n)]
+    return rng.choices(range(n), weights=weights, k=1)[0]
+
+
+def sim_traffic(
+    scenario: str,
+    seed: int,
+    *,
+    n_ops: int = 60,
+    n_clients: int = 4,
+    batch: int = 4,
+    env: str = "tabmwp",
+) -> List[List[Dict[str, Any]]]:
+    """One seeded op stream per logical client for the ``repro.sim`` harness.
+
+    Every op is a plain dict the harness applies against the store under
+    test AND its sequential model, so generation must be fully determined
+    by ``(scenario, seed, sizes)``:
+
+    * ``{"op": "lookup", "kws": [...]}`` — one ``lookup_batch`` wave;
+    * ``{"op": "insert", "kws": [...]}`` — one ``insert_batch`` admission
+      wave (the harness assigns versioned payloads);
+    * ``{"op": "remove", "kw": ...}`` / ``{"op": "autotune"}`` — sprinkled
+      maintenance traffic.
+
+    Scenarios:
+
+    * ``skewed_reuse`` — zipf-skewed draws over the env's recurring
+      intents: a hot head that re-hits constantly plus a long cold tail.
+    * ``paraphrase_burst`` — inserts a canonical keyword, then bursts
+      lookups of its paraphrase variants (fuzzy/semantic tier pressure).
+    * ``evict_then_hit`` — adversarial floods of one-shot keys that force
+      eviction churn, interleaved with immediate lookups of the newest
+      wave (catches evict-during-wave and index-desync bugs).
+    * ``uniform`` — uniform reference traffic.
+    """
+    if scenario not in SIM_SCENARIOS:
+        raise ValueError(f"unknown sim scenario {scenario!r}; one of {SIM_SCENARIOS}")
+    rng = random.Random((seed, scenario).__repr__())
+    intents = get_env(env).intents()
+    kws = [it.keyword for it in intents]
+    paras = {it.keyword: list(it.paraphrase_keywords) for it in intents}
+
+    clients: List[List[Dict[str, Any]]] = [[] for _ in range(n_clients)]
+    for ci in range(n_clients):
+        ops = clients[ci]
+        fresh = 0  # per-client unique-key counter (evict_then_hit floods)
+        while len(ops) < n_ops:
+            r = rng.random()
+            if scenario == "skewed_reuse":
+                wave = [kws[_zipf_pick(rng, len(kws))] for _ in range(batch)]
+                if r < 0.30:
+                    ops.append({"op": "insert", "kws": wave})
+                elif r < 0.95:
+                    ops.append({"op": "lookup", "kws": wave})
+                elif r < 0.98:
+                    ops.append({"op": "remove", "kw": wave[0]})
+                else:
+                    ops.append({"op": "autotune"})
+            elif scenario == "paraphrase_burst":
+                canon = kws[_zipf_pick(rng, len(kws))]
+                variants = paras.get(canon) or [canon]
+                if r < 0.35:
+                    ops.append({"op": "insert", "kws": [canon]})
+                else:
+                    burst = [rng.choice([canon] + variants) for _ in range(batch)]
+                    ops.append({"op": "lookup", "kws": burst})
+            elif scenario == "evict_then_hit":
+                if r < 0.5:
+                    flood = [f"c{ci}-one-shot-{fresh + j}" for j in range(batch)]
+                    fresh += batch
+                    # re-insert a (likely resident) hot key MID-wave: the
+                    # case where evict-during-wave diverges from the
+                    # evict-after-wave contract (the hot key can be chosen
+                    # as victim before its own re-insert lands, costing an
+                    # extra eviction that kills a key the policy says
+                    # should survive)
+                    hot = kws[_zipf_pick(rng, min(8, len(kws)))]
+                    flood.insert(len(flood) // 2, hot)
+                    ops.append({"op": "insert", "kws": flood})
+                    # adversarial: immediately demand the newest wave back
+                    ops.append({"op": "lookup", "kws": list(reversed(flood))})
+                else:
+                    hot = kws[_zipf_pick(rng, min(8, len(kws)))]
+                    ops.append({"op": "insert" if r < 0.6 else "lookup",
+                                "kws": [hot]})
+            else:  # uniform
+                wave = [rng.choice(kws) for _ in range(batch)]
+                ops.append({"op": "insert" if r < 0.4 else "lookup", "kws": wave})
+        del ops[n_ops:]  # evict_then_hit appends in pairs; trim to size
+    return clients

@@ -3,11 +3,17 @@
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state — jax locks the device count on first use,
 and smoke tests must see 1 device while the dry-run sees 512.
+
+Mesh construction goes through ``repro.distributed.mesh_compat`` so the
+same code runs on jax 0.4.37 (this container) and jax>=0.6 (the
+``axis_types`` surface).
 """
 
 from __future__ import annotations
 
 import jax
+
+from repro.distributed import mesh_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,19 +21,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return mesh_compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / examples)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return mesh_compat.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_host_mesh():
     """Whatever devices exist, as a 1-D 'data' mesh (CPU smoke scale)."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    return mesh_compat.make_mesh((n,), ("data",))

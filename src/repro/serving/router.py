@@ -48,6 +48,13 @@ class TierPool:
     replicas: List[Any] = field(default_factory=list)
     _rr: int = 0
     hedge_timeout_s: float = 30.0
+    # GUARD — hedged failover: a hedged dispatch serves the first
+    # SUCCESSFUL replica and only raises when every replica failed, so one
+    # timed-out/crashed engine never surfaces to the request. False is the
+    # repro.sim ablation: the dispatch goes to a single replica and its
+    # timeout propagates (the dropped-response bug the completeness oracle
+    # catches).
+    hedge_failover: bool = True
     _executor: Optional[cf.ThreadPoolExecutor] = field(
         default=None, repr=False, compare=False
     )
@@ -66,8 +73,11 @@ class TierPool:
         """Run fn(engine); optionally hedge onto a second replica.
 
         Hedged calls share ONE executor per pool (lazily created) instead
-        of paying thread-pool construction + teardown per request."""
-        if not hedge or len(self.replicas) < 2:
+        of paying thread-pool construction + teardown per request. The
+        winner is the first replica to SUCCEED (completion order), not an
+        arbitrary member of the first-completed set — a replica that fails
+        fast must not beat one that succeeds slowly."""
+        if not hedge or len(self.replicas) < 2 or not self.hedge_failover:
             return fn(self.pick())
         if self._executor is None:
             # locked lazy init: concurrent first dispatches must not each
@@ -83,10 +93,33 @@ class TierPool:
                         thread_name_prefix=f"tier-{self.name}",
                     )
         futs = [self._executor.submit(fn, self.pick()) for _ in range(2)]
-        done, not_done = cf.wait(futs, return_when=cf.FIRST_COMPLETED)
-        for f in not_done:
-            f.cancel()
-        return next(iter(done)).result()
+        last_err: Optional[BaseException] = None
+        try:
+            for f in cf.as_completed(futs, timeout=self.hedge_timeout_s):
+                try:
+                    result = f.result()
+                except Exception as e:  # noqa: BLE001 - replica failure
+                    last_err = e
+                    continue
+                for other in futs:
+                    if other is not f:
+                        other.cancel()
+                return result
+        except cf.TimeoutError as e:
+            # reclaim what can be reclaimed: queued-but-unstarted calls are
+            # cancelled so a hung replica can't brick the pool by pinning
+            # every worker (a RUNNING call is uncancellable and holds its
+            # worker until it returns — that is why the executor is sized
+            # above 2x the hedge width)
+            for f in futs:
+                f.cancel()
+            last_err = TimeoutError(
+                f"hedged dispatch on pool {self.name!r} exceeded "
+                f"{self.hedge_timeout_s}s on every replica"
+            )
+            last_err.__cause__ = e
+        assert last_err is not None
+        raise last_err
 
     def close(self) -> None:
         with self._executor_lock:
@@ -129,12 +162,16 @@ class TwoTierRouter:
         make_template: Callable[[Any, Any], Any],
         async_cachegen: bool = True,
         cachegen_workers: int = 2,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.cache = cache
         self.extract_keyword = extract_keyword
         self.plan_large = plan_large
         self.plan_small_with_template = plan_small_with_template
         self.make_template = make_template
+        # injectable time source for latency metrics (repro.sim drives a
+        # virtual clock; production uses the monotonic perf counter)
+        self._clock = clock if clock is not None else time.perf_counter
         self.metrics = RouterMetrics()
         self._pool = (
             cf.ThreadPoolExecutor(max_workers=cachegen_workers)
@@ -148,9 +185,9 @@ class TwoTierRouter:
     def route(self, request: Any) -> Any:
         self.metrics.requests += 1
         kw = self.extract_keyword(request)
-        t0 = time.perf_counter()
+        t0 = self._clock()
         tpl = self.cache.lookup(kw)
-        self.metrics.lookup_s += time.perf_counter() - t0
+        self.metrics.lookup_s += self._clock() - t0
         return self._dispatch(request, kw, tpl)
 
     def route_batch(self, requests: List[Any]) -> List[Any]:
@@ -166,11 +203,11 @@ class TwoTierRouter:
         """
         self.metrics.requests += len(requests)
         kws = [self.extract_keyword(r) for r in requests]
-        t0 = time.perf_counter()
+        t0 = self._clock()
         # PlanStore contract: lookup_batch is the primitive — no capability
         # probing; any conformant store answers the wave in one pass
         tpls = self.cache.lookup_batch(kws)
-        self.metrics.lookup_s += time.perf_counter() - t0
+        self.metrics.lookup_s += self._clock() - t0
 
         out: List[Any] = []
         wave: List[tuple] = []  # (request, kw, large-tier result) misses

@@ -1,0 +1,46 @@
+"""``repro.sim`` — deterministic simulation of the distributed plan cache.
+
+FoundationDB-style verification for the serving/distributed layers: a
+seeded virtual clock + step scheduler drive concurrent
+``lookup_batch``/``insert_batch``/``remove``/``autotune`` (and router
+``route_batch``) traffic against ``DistributedPlanCache`` /
+``TwoTierRouter`` under injected faults — shard crash/restart, replica
+lag, hedged-dispatch timeouts, mid-wave eviction — and every run is
+checked against a sequential model-store oracle. A failing run dumps a
+replayable seed file.
+
+Entry points::
+
+    python -m repro.sim --seed 7 --scenario skewed_reuse --fault crash_restart
+    python -m repro.sim --check --seeds 5          # CI matrix (make sim-check)
+    python -m repro.sim --replay sim-repro/failure.json
+
+Library use::
+
+    from repro.sim import SimConfig, run_sim
+    report = run_sim(SimConfig(seed=7, fault="replica_lag"))
+    assert report.ok and report.trace_hash == run_sim(...).trace_hash
+"""
+
+from repro.sim.clock import VirtualClock
+from repro.sim.faults import ABLATION_OF, FAULT_PLANS, SimInterceptor
+from repro.sim.harness import SimConfig, SimReport, run_sim
+from repro.sim.oracle import ModelStore, Violation, make_value, value_torn
+from repro.sim.scheduler import StepScheduler
+from repro.sim.trace import TraceRecorder
+
+__all__ = [
+    "ABLATION_OF",
+    "FAULT_PLANS",
+    "ModelStore",
+    "SimConfig",
+    "SimInterceptor",
+    "SimReport",
+    "StepScheduler",
+    "TraceRecorder",
+    "VirtualClock",
+    "Violation",
+    "make_value",
+    "run_sim",
+    "value_torn",
+]

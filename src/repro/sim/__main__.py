@@ -1,0 +1,183 @@
+"""CLI for the deterministic simulation harness.
+
+Modes:
+
+* single run — ``python -m repro.sim --seed 7 --fault crash_restart``:
+  runs once, reruns to verify determinism, prints the trace hash and any
+  oracle violations (exit 1 on violation or hash mismatch);
+* matrix — ``python -m repro.sim --check --seeds 5``: the CI gate. Runs
+  every (seed × scenario × fault-plan) cell with guards ON (must be
+  clean + deterministic) and, with ``--ablation-audit`` (default on for
+  ``--check``), re-runs each fault plan with its guard ablated and
+  requires the matching oracle to FIRE — proving the oracles have teeth;
+* replay — ``python -m repro.sim --replay FILE``: re-executes a dumped
+  failure seed and verifies the trace hash reproduces bit-for-bit.
+
+On any red cell a replayable repro JSON is dumped under ``--dump-dir``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import List
+
+from repro.envs.workloads import SIM_SCENARIOS
+from repro.sim.faults import ABLATION_OF, FAULT_PLANS
+from repro.sim.harness import SimConfig, run_sim
+from repro.sim.trace import TraceRecorder
+
+
+def _fail_dump(report, dump_dir: str, tag: str) -> str:
+    """Write a self-contained, replayable failure seed (CI artifact)."""
+    path = os.path.join(dump_dir, f"sim-repro-{tag}.json")
+    payload = {
+        "config": dataclasses.asdict(report.config),
+        "trace_hash": report.trace_hash,
+        "violations": [dataclasses.asdict(v) for v in report.violations],
+        "store_stats": report.store_stats,
+        "router_metrics": report.router_metrics,
+        "trace_tail": report.trace_tail,  # event log for post-mortems
+        "how_to_replay": "PYTHONPATH=src python -m repro.sim --replay <this file>",
+    }
+    os.makedirs(dump_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=repr)
+        f.write("\n")
+    return path
+
+
+def _run_once(cfg: SimConfig, *, verify_determinism: bool = True):
+    report = run_sim(cfg)
+    rerun_hash = None
+    if verify_determinism:
+        rerun_hash = run_sim(cfg).trace_hash
+    return report, rerun_hash
+
+
+def cmd_single(args) -> int:
+    cfg = SimConfig(
+        seed=args.seed, scenario=args.scenario, fault=args.fault,
+        n_ops=args.ops, ablate=tuple(args.ablate.split(",")) if args.ablate else (),
+    )
+    report, rerun = _run_once(cfg)
+    print(f"seed={args.seed} scenario={report.config.scenario} "
+          f"fault={report.config.fault} ablate={report.config.ablate or '-'}")
+    print(f"steps={report.steps} ops={report.ops_applied} "
+          f"lookups={report.lookups} inserts={report.inserts}")
+    print(f"trace_hash={report.trace_hash}")
+    print(f"store_stats={json.dumps(report.store_stats, sort_keys=True)}")
+    if report.router_metrics:
+        print(f"router={json.dumps(report.router_metrics, sort_keys=True)}")
+    ok = True
+    if rerun is not None and rerun != report.trace_hash:
+        print(f"NONDETERMINISTIC: rerun hash {rerun} != {report.trace_hash}")
+        ok = False
+    for v in report.violations:
+        print(f"VIOLATION step={v.step} oracle={v.oracle}: {v.detail}")
+    if report.violations:
+        ok = False
+    if not ok:
+        path = _fail_dump(report, args.dump_dir,
+                          f"s{args.seed}-{report.config.scenario}-"
+                          f"{report.config.fault}")
+        print(f"repro dumped: {path}")
+    print("OK" if ok else "RED")
+    return 0 if ok else 1
+
+
+def cmd_check(args) -> int:
+    """CI matrix: seeds x scenarios x fault plans, guards on + ablation audit."""
+    red: List[str] = []
+    cells = 0
+    for seed in range(args.seeds):
+        for scenario in SIM_SCENARIOS:
+            for fault in FAULT_PLANS:
+                if fault == "mid_wave_evict" and scenario != "evict_then_hit":
+                    continue  # plan pins its scenario; skip duplicate cells
+                cfg = SimConfig(seed=seed, scenario=scenario, fault=fault,
+                                n_ops=args.ops)
+                cells += 1
+                report, rerun = _run_once(cfg)
+                tag = f"s{seed}-{scenario}-{fault}"
+                if report.violations:
+                    red.append(f"{tag}: {report.violations[0].oracle}: "
+                               f"{report.violations[0].detail}")
+                    _fail_dump(report, args.dump_dir, tag)
+                elif rerun != report.trace_hash:
+                    red.append(f"{tag}: nondeterministic trace")
+                    _fail_dump(report, args.dump_dir, tag)
+        if args.ablation_audit:
+            for fault, guard in sorted(ABLATION_OF.items()):
+                cfg = SimConfig(seed=seed, fault=fault, n_ops=args.ops,
+                                ablate=(guard,))
+                cells += 1
+                report = run_sim(cfg)
+                tag = f"s{seed}-ablate-{guard}"
+                if not report.violations:
+                    red.append(f"{tag}: guard ablated but NO oracle fired "
+                               "(the sim lost its teeth)")
+                    _fail_dump(report, args.dump_dir, tag)
+    print(f"sim-check: {cells} cells, {len(red)} red")
+    for r in red:
+        print(f"RED {r}")
+    return 1 if red else 0
+
+
+def cmd_replay(args) -> int:
+    payload = TraceRecorder.load_repro(args.replay)
+    cfg_d = dict(payload["config"])
+    cfg_d["ablate"] = tuple(cfg_d.get("ablate", ()))
+    cfg = SimConfig(**cfg_d)
+    report = run_sim(cfg)
+    want = payload["trace_hash"]
+    print(f"replayed {args.replay}: trace_hash={report.trace_hash} "
+          f"(recorded {want})")
+    for v in report.violations:
+        print(f"VIOLATION step={v.step} oracle={v.oracle}: {v.detail}")
+    if report.trace_hash != want:
+        print("REPLAY DIVERGED")
+        return 1
+    print("replay reproduced the recorded interleaving exactly")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.sim",
+        description="Deterministic fault-injection simulation of the "
+                    "distributed plan cache (see repro.sim docs).",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", default="skewed_reuse",
+                    choices=list(SIM_SCENARIOS))
+    ap.add_argument("--fault", default="none", choices=list(FAULT_PLANS))
+    ap.add_argument("--ops", type=int, default=60,
+                    help="ops per simulated client (4 clients)")
+    ap.add_argument("--ablate", default="",
+                    help="comma-joined guard ablations "
+                         f"({sorted(set(ABLATION_OF.values()))})")
+    ap.add_argument("--check", action="store_true",
+                    help="run the seeds x scenarios x faults CI matrix")
+    ap.add_argument("--seeds", type=int, default=5,
+                    help="seed count for --check")
+    ap.add_argument("--no-ablation-audit", dest="ablation_audit",
+                    action="store_false",
+                    help="skip the guard-ablation oracle audit in --check")
+    ap.add_argument("--replay", default="",
+                    help="replay a dumped sim-repro JSON file")
+    ap.add_argument("--dump-dir", default="sim-repro",
+                    help="where failure repro seeds are written")
+    args = ap.parse_args(argv)
+    if args.replay:
+        return cmd_replay(args)
+    if args.check:
+        return cmd_check(args)
+    return cmd_single(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

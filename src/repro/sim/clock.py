@@ -1,0 +1,39 @@
+"""Virtual time for deterministic simulation.
+
+Every time-dependent seam in the serving/distributed layers (PlanCache TTL
+expiry, FaultTolerantRunner straggler deadlines, router latency metrics)
+accepts a ``clock`` callable. In production that is ``time.time`` /
+``time.perf_counter``; under simulation it is a :class:`VirtualClock`
+advanced explicitly by the step scheduler — no BEHAVIOR-affecting
+wall-clock read reaches the system under test, so a run's observable
+behavior (and its trace hash) is a pure function of ``(seed, config)``.
+Pure wall-latency metrics (``CacheStats.lookup_time_s``) still read the
+perf counter; they feed no decision and are excluded from the trace.
+"""
+
+from __future__ import annotations
+
+
+class VirtualClock:
+    """Monotonic virtual seconds; advanced explicitly, never by the OS."""
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def time(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"virtual time cannot go backwards (dt={dt})")
+        self.t += dt
+        return self.t
+
+    def __repr__(self) -> str:
+        return f"VirtualClock(t={self.t:.6f})"
+
+
+__all__ = ["VirtualClock"]

@@ -1,0 +1,164 @@
+"""Fault plans + the shard-call fault interceptor.
+
+Faults are scheduled through :class:`repro.distributed.fault.FaultSchedule`
+— the same ``inject(step, kind, **details)`` path the training-side
+``FaultTolerantRunner`` uses — and fire at their step inside the scheduler
+loop. The four built-in plans each target one guard in the serving /
+distributed layers; ablating that guard (``SimConfig.ablate``) must make
+an oracle fire, which is how the sim proves its oracles have teeth:
+
+========================  ==========================================  ===========================
+plan                      guard under test                            ablation key
+========================  ==========================================  ===========================
+``crash_restart``         lookup fallthrough past an unreachable      ``crash_fallthrough``
+                          shard + ``restart_node`` read-repair
+``replica_lag``           synchronous replica acks                    ``replica_ack``
+                          (``ack_policy="all"``)
+``hedge_timeout``         hedged-dispatch failover in ``TierPool``    ``hedge_failover``
+``mid_wave_evict``        evict-AFTER-admission-wave in ``PlanCache``  ``evict_after_wave``
+========================  ==========================================  ===========================
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Set
+
+from repro.core.distributed_cache import ShardUnavailable
+from repro.distributed.fault import FaultSchedule
+from repro.sim.clock import VirtualClock
+from repro.sim.scheduler import StepScheduler
+
+FAULT_PLANS = ("none", "crash_restart", "replica_lag", "hedge_timeout",
+               "mid_wave_evict")
+
+# guard-ablation keys, by the plan whose oracle they trip
+ABLATION_OF = {
+    "crash_restart": "crash_fallthrough",
+    "replica_lag": "replica_ack",
+    "hedge_timeout": "hedge_failover",
+    "mid_wave_evict": "evict_after_wave",
+}
+
+
+class SimInterceptor:
+    """Installed as ``DistributedPlanCache.interceptor``: the RPC layer of
+    the simulated cluster. Crashed nodes raise :class:`ShardUnavailable`
+    at call time (the facade has NOT been told via ``mark_down`` — crash
+    discovery happens exactly where it would in production, at dispatch).
+    ``defer`` models replica lag: the write applies ``lag_steps`` scheduler
+    steps later, unless the node crashes first."""
+
+    def __init__(
+        self,
+        scheduler: StepScheduler,
+        clock: VirtualClock,
+        *,
+        call_latency_s: float = 2e-4,
+        on_deferred: Optional[Callable[[str], None]] = None,
+    ):
+        self.scheduler = scheduler
+        self.clock = clock
+        self.call_latency_s = call_latency_s
+        self.on_deferred = on_deferred
+        self.crashed: Set[str] = set()
+        self.lag_steps = 0
+        self.calls = 0
+        self.failed_calls = 0
+        self.deferred_writes = 0
+
+    # -- DistributedPlanCache seam ------------------------------------------
+
+    def call(self, node: str, op: str, fn: Callable[[], object]) -> object:
+        self.calls += 1
+        self.clock.advance(self.call_latency_s)
+        if node in self.crashed:
+            self.failed_calls += 1
+            raise ShardUnavailable(f"{node} unreachable ({op})")
+        return fn()
+
+    def defer(self, node: str, fn: Callable[[], None]) -> None:
+        """Replica-lag channel (used only under the ``replica_ack``
+        ablation): apply the write after ``lag_steps`` steps."""
+        self.deferred_writes += 1
+
+        def apply() -> None:
+            if node in self.crashed:
+                return  # the lagged write dies with the crashed node
+            fn()
+            if self.on_deferred is not None:
+                self.on_deferred(node)
+
+        self.scheduler.defer(max(1, self.lag_steps), apply)
+
+    # -- fault-plan state ----------------------------------------------------
+
+    def crash(self, node: str) -> None:
+        self.crashed.add(node)
+
+    def restore(self, node: str) -> None:
+        self.crashed.discard(node)
+
+
+class EngineFaultState:
+    """Hedge-timeout fault state shared with the sim's fake tier engines:
+    while ``budget > 0``, the named engine raises ``TimeoutError`` (one
+    budget unit per raised call)."""
+
+    def __init__(self) -> None:
+        self.timeout_engine: Optional[str] = None
+        self.budget = 0
+
+    def arm(self, engine: str, calls: int) -> None:
+        self.timeout_engine = engine
+        self.budget = calls
+
+    def should_timeout(self, engine: str) -> bool:
+        if self.budget > 0 and engine == self.timeout_engine:
+            self.budget -= 1
+            return True
+        return False
+
+
+def build_fault_schedule(plan: str, n_steps: int, *, node: str = "cache-1",
+                         lag_steps: int = 6) -> FaultSchedule:
+    """Materialize a named plan into step-indexed fault events.
+
+    Events (consumed by the harness's ``on_fault``):
+      * ``crash``/``restart``  — node lifecycle (two cycles per run);
+      * ``lag``                — set the interceptor's replica lag;
+      * ``hedge_timeout``      — arm the large-tier engine timeout;
+      * ``evict_pressure``     — marker only: the mid-wave plan does its
+        damage through config (tiny capacity + flood waves), not events.
+    """
+    if plan not in FAULT_PLANS:
+        raise ValueError(f"unknown fault plan {plan!r}; one of {FAULT_PLANS}")
+    sched = FaultSchedule()
+    if plan == "none":
+        return sched
+    q = max(8, n_steps // 4)
+    if plan == "crash_restart":
+        sched.inject(q, "crash", node=node)
+        sched.inject(2 * q, "restart", node=node, recover=True)
+        sched.inject(2 * q + q // 2, "crash", node=node)
+        sched.inject(3 * q + q // 2, "restart", node=node, recover=True)
+    elif plan == "replica_lag":
+        sched.inject(2, "lag", steps=lag_steps)
+        # crash a node mid-lag: readers must fall through to replicas that
+        # (under the sync-ack guard) already hold the acked versions
+        sched.inject(q, "crash", node=node)
+        sched.inject(3 * q, "restart", node=node, recover=True)
+    elif plan == "hedge_timeout":
+        sched.inject(q, "hedge_timeout", engine="large-0", calls=8)
+        sched.inject(3 * q, "hedge_timeout", engine="large-0", calls=8)
+    elif plan == "mid_wave_evict":
+        sched.inject(q, "evict_pressure")
+    return sched
+
+
+__all__ = [
+    "ABLATION_OF",
+    "EngineFaultState",
+    "FAULT_PLANS",
+    "SimInterceptor",
+    "build_fault_schedule",
+]

@@ -1,0 +1,370 @@
+"""The simulation harness: wire workload + store + router + faults + oracles.
+
+One :func:`run_sim` call is one deterministic universe: a seeded virtual
+clock and step scheduler drive concurrent ``lookup_batch`` /
+``insert_batch`` / ``remove`` / ``autotune`` traffic (and, for router
+scenarios, whole ``route_batch`` admission waves through a
+``TwoTierRouter`` over hedged ``TierPool``\\ s) against a
+``DistributedPlanCache`` while a fault plan crashes/restarts shards,
+injects replica lag, or times out tier engines. Every applied operation is
+simultaneously replayed on the sequential :class:`~repro.sim.oracle.
+ModelStore`; divergence is a :class:`~repro.sim.oracle.Violation`.
+
+Determinism contract: ``run_sim(cfg)`` twice returns the identical
+``trace_hash``. On violations the report carries a replayable repro file
+(see ``repro.sim.trace``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.distributed_cache import DistributedPlanCache
+from repro.envs.workloads import SIM_SCENARIOS, sim_traffic
+from repro.serving.router import TierPool, TwoTierRouter
+from repro.sim.clock import VirtualClock
+from repro.sim.faults import (
+    ABLATION_OF,
+    FAULT_PLANS,
+    EngineFaultState,
+    SimInterceptor,
+    build_fault_schedule,
+)
+from repro.sim.oracle import ModelStore, Violation, make_value, value_torn
+from repro.sim.scheduler import StepScheduler
+from repro.sim.trace import TraceRecorder
+
+
+@dataclass
+class SimConfig:
+    seed: int = 0
+    scenario: str = "skewed_reuse"  # see envs.workloads.SIM_SCENARIOS
+    fault: str = "none"  # see faults.FAULT_PLANS
+    n_ops: int = 60  # ops per client
+    n_clients: int = 4
+    batch: int = 4
+    n_nodes: int = 4
+    replication: int = 2
+    capacity_per_node: int = 512
+    eviction: str = "lru"
+    fuzzy: bool = False
+    router: bool = False  # drive route_batch through TwoTierRouter
+    lag_steps: int = 6
+    ablate: Tuple[str, ...] = ()  # guard ablations (faults.ABLATION_OF values)
+
+    def normalized(self) -> "SimConfig":
+        """Fill in plan-specific defaults (documented per fault plan)."""
+        cfg = self
+        if cfg.fault == "hedge_timeout" and not cfg.router:
+            cfg = replace(cfg, router=True)
+        if cfg.fault == "mid_wave_evict":
+            # single-shard store under real eviction pressure: waves are
+            # larger than capacity so evict-after-wave vs. during-wave
+            # produce different survivor sets
+            cfg = replace(
+                cfg,
+                scenario="evict_then_hit",
+                n_nodes=1,
+                replication=1,
+                capacity_per_node=min(cfg.capacity_per_node, 8),
+                batch=max(cfg.batch, 12),
+            )
+        if cfg.scenario == "paraphrase_burst":
+            cfg = replace(cfg, fuzzy=True)
+        return cfg
+
+
+@dataclass
+class SimReport:
+    config: SimConfig
+    trace_hash: str
+    steps: int
+    ops_applied: int
+    lookups: int
+    inserts: int
+    violations: List[Violation]
+    store_stats: Dict[str, Any]
+    router_metrics: Optional[Dict[str, Any]] = None
+    interceptor: Dict[str, int] = field(default_factory=dict)
+    trace_tail: List[Dict[str, Any]] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+class _FakeEngine:
+    """A tier engine for router scenarios: instant plans, fault-armable."""
+
+    def __init__(self, name: str, state: EngineFaultState):
+        self.name = name
+        self.state = state
+
+    def plan(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        if self.state.should_timeout(self.name):
+            raise TimeoutError(f"{self.name}: injected engine timeout")
+        return {"plan": f"{self.name}:{req['kw']}"}
+
+
+def run_sim(config: SimConfig) -> SimReport:
+    cfg = config.normalized()
+    if cfg.scenario not in SIM_SCENARIOS:
+        raise ValueError(f"unknown scenario {cfg.scenario!r}")
+    if cfg.fault not in FAULT_PLANS:
+        raise ValueError(f"unknown fault plan {cfg.fault!r}")
+
+    clock = VirtualClock()
+    scheduler = StepScheduler(cfg.seed, clock)
+    trace = TraceRecorder()
+    violations: List[Violation] = []
+    engine_faults = EngineFaultState()
+
+    known = set(ABLATION_OF.values())
+    unknown = set(cfg.ablate) - known
+    if unknown:
+        raise ValueError(
+            f"unknown ablation key(s) {sorted(unknown)}; valid: {sorted(known)}"
+        )
+
+    interceptor = SimInterceptor(scheduler, clock)
+    store = DistributedPlanCache(
+        cfg.n_nodes,
+        replication=cfg.replication,
+        capacity_per_node=cfg.capacity_per_node,
+        fuzzy=cfg.fuzzy,
+        eviction=cfg.eviction,
+        clock=clock,
+        interceptor=interceptor,
+        ack_policy="primary" if "replica_ack" in cfg.ablate else "all",
+        ablate=[a for a in cfg.ablate
+                if a in ("crash_fallthrough", "evict_after_wave")],
+    )
+    interceptor.lag_steps = cfg.lag_steps
+
+    model = ModelStore(
+        replication=cfg.replication,
+        capacity_per_node=cfg.capacity_per_node,
+        eviction=cfg.eviction,
+        exact_only=not cfg.fuzzy,
+    )
+    for name in sorted(store.shards):
+        model.add_node(name)
+
+    router: Optional[TwoTierRouter] = None
+    if cfg.router:
+        large = TierPool(
+            "large",
+            replicas=[_FakeEngine("large-0", engine_faults),
+                      _FakeEngine("large-1", engine_faults)],
+            hedge_timeout_s=5.0,
+            hedge_failover="hedge_failover" not in cfg.ablate,
+        )
+        small = TierPool(
+            "small", replicas=[_FakeEngine("small-0", engine_faults)]
+        )
+        router = TwoTierRouter(
+            store,
+            extract_keyword=lambda r: r["kw"],
+            plan_large=lambda r: large.dispatch(
+                lambda eng: eng.plan(r), hedge=True
+            ),
+            plan_small_with_template=lambda r, tpl: {
+                "plan": f"small:{r['kw']}", "tpl": tpl
+            },
+            make_template=lambda r, res: make_value(r["kw"], 0),
+            async_cachegen=False,  # sync: sim owns the interleaving
+            clock=clock,
+        )
+
+    versions: Dict[str, int] = {}
+    counters = {"ops": 0, "lookups": 0, "inserts": 0}
+
+    # ---- op application ----------------------------------------------------
+
+    def check_lookup(step: int, kws: List[str], got: List[Optional[Any]]) -> None:
+        for kw, real in zip(kws, got):
+            expected, strict = model.lookup(kw)
+            if real is not None and value_torn(real):
+                violations.append(Violation(step, "torn_entry",
+                                            f"{kw!r} -> corrupt value {real!r}"))
+                continue
+            if expected is not None and real is None:
+                violations.append(Violation(
+                    step, "durability",
+                    f"{kw!r} acked v{expected['v']} but came back MISS"))
+            elif expected is not None and real is not None:
+                if real.get("k") == kw and real.get("v") != expected["v"]:
+                    violations.append(Violation(
+                        step, "linearizability",
+                        f"{kw!r} stale read: got v{real.get('v')}, "
+                        f"acked v{expected['v']}"))
+            elif expected is None and strict and real is not None:
+                violations.append(Violation(
+                    step, "phantom",
+                    f"{kw!r} returned {real!r} but model says absent "
+                    "(eviction/removal not honored)"))
+
+    def apply_store_op(step: int, client: str, op: Dict[str, Any]) -> None:
+        kind = op["op"]
+        if kind == "lookup":
+            got = store.lookup_batch(op["kws"])
+            counters["lookups"] += len(op["kws"])
+            check_lookup(step, op["kws"], got)
+            trace.record(step, client, "lookup", op["kws"],
+                         [None if v is None else v.get("v") for v in got])
+        elif kind == "insert":
+            items = []
+            for kw in op["kws"]:
+                versions[kw] = versions.get(kw, 0) + 1
+                items.append((kw, make_value(kw, versions[kw])))
+            store.insert_batch(items)
+            model.insert_wave(items)
+            counters["inserts"] += len(items)
+            trace.record(step, client, "insert",
+                         [(kw, v["v"]) for kw, v in items])
+        elif kind == "remove":
+            removed = store.remove(op["kw"])
+            model.remove(op["kw"])
+            trace.record(step, client, "remove", op["kw"], removed)
+        elif kind == "autotune":
+            actions = store.autotune()
+            trace.record(step, client, "autotune", None, actions)
+        else:
+            raise ValueError(f"unknown sim op {kind!r}")
+
+    def apply_router_op(step: int, client: str, op: Dict[str, Any]) -> None:
+        kws = op["kws"] if "kws" in op else [op.get("kw", "")]
+        reqs = [{"kw": kw} for kw in kws]
+        counters["lookups"] += len(reqs)
+        try:
+            out = router.route_batch(reqs)
+        except Exception as e:  # dropped wave: completeness oracle fires
+            violations.append(Violation(
+                step, "completeness",
+                f"route_batch dropped {len(reqs)} request(s): {e!r}"))
+            trace.record(step, client, "route", kws, f"ERROR:{type(e).__name__}")
+            return
+        for kw, res in zip(kws, out):
+            if res is None:
+                violations.append(Violation(
+                    step, "completeness", f"request {kw!r} got no response"))
+        # mirror the router's distillation: misses insert a v0 template at
+        # the model's owners (make_template above emits version 0)
+        miss_items = []
+        for kw, res in zip(kws, out):
+            if res is not None and res["plan"].startswith("large"):
+                versions.setdefault(kw, 0)
+                miss_items.append((kw, make_value(kw, 0)))
+        if miss_items:
+            model.insert_wave(miss_items)
+            counters["inserts"] += len(miss_items)
+        # record the TIER only: which hedged replica won a two-success race
+        # is real concurrency the sim tolerates; the tier (and everything
+        # downstream of it) must be deterministic
+        trace.record(step, client, "route", kws,
+                     [None if r is None
+                      else ("small" if r["plan"].startswith("small") else "large")
+                      for r in out])
+
+    def on_op(step: int, client: str, op: Dict[str, Any]) -> None:
+        counters["ops"] += 1
+        if router is not None and op["op"] in ("lookup", "insert"):
+            apply_router_op(step, client, op)
+        else:
+            apply_store_op(step, client, op)
+
+    # ---- fault firing ------------------------------------------------------
+
+    def on_fault(step: int, spec) -> None:
+        d = spec.details
+        if spec.kind == "crash":
+            interceptor.crash(d["node"])
+            model.crash(d["node"])
+        elif spec.kind == "restart":
+            interceptor.restore(d["node"])
+            repaired = store.restart_node(d["node"], recover=d.get("recover", True))
+            model.restart(d["node"], recover=d.get("recover", True))
+            trace.record(step, "fault", "restart",
+                         d["node"], {"repaired": repaired})
+            return
+        elif spec.kind == "lag":
+            interceptor.lag_steps = d["steps"]
+        elif spec.kind == "hedge_timeout":
+            engine_faults.arm(d["engine"], d["calls"])
+        trace.record(step, "fault", spec.kind, d)
+
+    # ---- run ---------------------------------------------------------------
+
+    for ci, ops in enumerate(
+        sim_traffic(cfg.scenario, cfg.seed, n_ops=cfg.n_ops,
+                    n_clients=cfg.n_clients, batch=cfg.batch)
+    ):
+        scheduler.add_client(f"client-{ci}", ops)
+
+    faults = build_fault_schedule(
+        cfg.fault, cfg.n_ops * cfg.n_clients, lag_steps=cfg.lag_steps
+    )
+    steps = scheduler.run(on_op, faults=faults, on_fault=on_fault)
+
+    # ---- terminal oracles --------------------------------------------------
+
+    if router is not None:
+        router.drain()
+        m = router.metrics
+        dropped = any(v.oracle == "completeness" for v in violations)
+        if m.hits + m.misses != m.requests and not dropped:
+            violations.append(Violation(
+                steps, "stats_conservation",
+                f"router hits+misses={m.hits + m.misses} != requests={m.requests}"))
+    s = store.stats
+    if s.hits + s.misses != counters["lookups"]:
+        violations.append(Violation(
+            steps, "stats_conservation",
+            f"store hits+misses={s.hits + s.misses} != "
+            f"lookups issued={counters['lookups']}"))
+    for name, shard in sorted(store.shards.items()):
+        if len(shard) > cfg.capacity_per_node:
+            violations.append(Violation(
+                steps, "capacity",
+                f"{name} holds {len(shard)} > capacity {cfg.capacity_per_node}"))
+    if not cfg.fuzzy and cfg.fault in ("none", "mid_wave_evict"):
+        # eviction conservation: the store must evict exactly the victims
+        # the sequential policy replay evicts (a shard restart would reset
+        # shard counters, so crash plans skip this check)
+        shard_evictions = sum(sh.stats.evictions for sh in store.shards.values())
+        if shard_evictions != model.evictions:
+            violations.append(Violation(
+                steps, "eviction_order",
+                f"store evicted {shard_evictions} entries, policy replay "
+                f"says {model.evictions}"))
+    if not cfg.fuzzy and cfg.fault == "none" and not cfg.ablate:
+        if store.keys() != model.keys():
+            violations.append(Violation(
+                steps, "linearizability",
+                "final key set diverges from the sequential model"))
+
+    if router is not None:
+        router.close()
+
+    return SimReport(
+        config=cfg,
+        trace_hash=trace.trace_hash,
+        steps=steps,
+        ops_applied=counters["ops"],
+        lookups=counters["lookups"],
+        inserts=counters["inserts"],
+        violations=violations,
+        store_stats=s.snapshot(),
+        router_metrics=(router.metrics.snapshot() if router is not None else None),
+        interceptor={
+            "calls": interceptor.calls,
+            "failed_calls": interceptor.failed_calls,
+            "deferred_writes": interceptor.deferred_writes,
+        },
+        trace_tail=trace.tail,
+    )
+
+
+# re-export for CLI/tests convenience
+__all__ = ["ABLATION_OF", "FAULT_PLANS", "SimConfig", "SimReport", "run_sim"]

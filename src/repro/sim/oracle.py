@@ -1,0 +1,216 @@
+"""Sequential model-store oracle + invariant checks.
+
+The model is the FoundationDB-style "obviously correct" twin: plain dicts
+and lists, single-threaded, no locks, no batching, no indexes. The step
+scheduler serializes every operation, so the linearization order is known;
+the optimized store must agree with the model applied in that order, up to
+the documented divergences (a fuzzy pipeline may resolve keys the model
+treats as misses — those results are checked for integrity, not equality).
+
+Checked invariants:
+
+* **durability / linearizability** — a key the model says is resolvable
+  (inserted, acked, replicated, not evicted/removed) must come back, at
+  the acked version;
+* **phantom** — in exact mode, a key the model says is absent must miss;
+* **no torn entries** — every returned value's embedded checksum must
+  verify (a torn/partially-applied write cannot masquerade as a hit);
+* **stats conservation** — ``hits + misses == lookups`` and
+  ``inserts == items offered`` on the facade's own counters;
+* **capacity / eviction order** — no shard exceeds capacity, and the
+  model replays the eviction policy (LRU / cost) so a wrong victim shows
+  up as durability (evicted survivor) or phantom (surviving victim).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.distributed_cache import HashRing
+
+
+@dataclass
+class Violation:
+    step: int
+    oracle: str  # "durability" | "linearizability" | "phantom" | ...
+    detail: str
+
+
+def checksum(kw: str, version: int) -> str:
+    return hashlib.blake2b(f"{kw}#{version}".encode(), digest_size=8).hexdigest()
+
+
+def make_value(kw: str, version: int) -> Dict[str, Any]:
+    """A sim cache value carrying its own integrity proof."""
+    return {"k": kw, "v": version, "ck": checksum(kw, version)}
+
+
+def value_torn(value: Any) -> bool:
+    """True when a returned value fails its integrity check."""
+    if not isinstance(value, dict) or "ck" not in value:
+        return True
+    return value.get("ck") != checksum(value.get("k", ""), value.get("v", -1))
+
+
+class ModelStore:
+    """Sequential mirror of DistributedPlanCache's documented semantics."""
+
+    def __init__(
+        self,
+        *,
+        replication: int = 2,
+        capacity_per_node: int = 256,
+        eviction: str = "lru",
+        vnodes: int = 64,
+        exact_only: bool = True,
+    ):
+        if eviction not in ("lru", "cost"):
+            raise ValueError("model replays eviction for 'lru' and 'cost' only")
+        self.replication = replication
+        self.capacity = capacity_per_node
+        self.eviction = eviction
+        self.exact_only = exact_only
+        self.ring = HashRing(vnodes)
+        self.nodes: Dict[str, Dict[str, Any]] = {}
+        self.hits: Dict[str, Dict[str, int]] = {}
+        self.order: Dict[str, List[str]] = {}  # LRU recency, oldest first
+        self.seq: Dict[str, Dict[str, int]] = {}  # stable dict-order mirror
+        self._next_seq = 0
+        self.crashed: set = set()
+        self.evictions = 0
+
+    # -- membership ----------------------------------------------------------
+
+    def add_node(self, name: str) -> None:
+        if name in self.nodes:
+            return
+        self.nodes[name] = {}
+        self.hits[name] = {}
+        self.order[name] = []
+        self.seq[name] = {}
+        self.ring.add(name)
+
+    def crash(self, name: str) -> None:
+        self.crashed.add(name)
+
+    def restore(self, name: str) -> None:
+        self.crashed.discard(name)
+
+    def restart(self, name: str, *, recover: bool = True) -> None:
+        """Mirror of ``restart_node``: data gone; read-repair from peers."""
+        self.crashed.discard(name)
+        self.nodes[name] = {}
+        self.hits[name] = {}
+        self.order[name] = []
+        self.seq[name] = {}
+        if not recover:
+            return
+        for peer in sorted(self.nodes):
+            # an unreachable peer cannot donate repair data (the facade's
+            # repair scan goes through the interceptor seam and fails)
+            if peer == name or peer in self.crashed:
+                continue
+            for kw, v in self.nodes[peer].items():
+                if kw in self.nodes[name]:
+                    continue
+                if name in self.ring.nodes_for(kw, self.replication):
+                    self._apply(name, kw, v)
+        self._evict(name)
+
+    # -- write path ----------------------------------------------------------
+
+    def _apply(self, node: str, kw: str, value: Any) -> None:
+        store = self.nodes[node]
+        if kw not in self.seq[node]:
+            self._next_seq += 1
+            self.seq[node][kw] = self._next_seq
+        store[kw] = value
+        self.hits[node][kw] = 0  # re-insert resets live-hit accounting
+        if kw in self.order[node]:
+            self.order[node].remove(kw)
+        self.order[node].append(kw)
+
+    def _victim(self, node: str) -> str:
+        if self.eviction == "lru":
+            return self.order[node][0]
+        # cost: min (1 + hits) * tokens_saved(=1 for dict values), ties by
+        # dict order (mirrors CacheEntry.inserted_at ties within a wave)
+        return min(
+            self.nodes[node],
+            key=lambda k: (1 + self.hits[node][k], self.seq[node][k]),
+        )
+
+    def _evict(self, node: str) -> None:
+        while len(self.nodes[node]) > self.capacity:
+            victim = self._victim(node)
+            del self.nodes[node][victim]
+            del self.hits[node][victim]
+            self.order[node].remove(victim)
+            self.evictions += 1
+
+    def _live_owners(self, kw: str) -> List[str]:
+        # NOTE: the sim injects failures at the RPC layer (crashed), never
+        # via mark_down — a membership-churn fault plan would add that
+        # mirror here (see ROADMAP)
+        return [
+            n for n in self.ring.nodes_for(kw, self.replication)
+            if n in self.nodes
+        ]
+
+    def insert_wave(self, items: Sequence[Tuple[str, Any]]) -> None:
+        """Spec semantics: the wave lands on every live owner (crashed
+        owners drop their copy — the RPC fails), grouped per node with
+        eviction AFTER each node's sub-wave (primary groups first, then
+        replica groups, mirroring the facade's ack structure)."""
+        for rank0 in (True, False):
+            groups: Dict[str, List[Tuple[str, Any]]] = {}
+            for kw, v in items:
+                owners = self._live_owners(kw)
+                for rank, n in enumerate(owners):
+                    if (rank == 0) == rank0:
+                        groups.setdefault(n, []).append((kw, v))
+            for n, sub in groups.items():
+                if n in self.crashed:
+                    continue  # write RPC failed; remaining owners hold it
+                for kw, v in sub:
+                    self._apply(n, kw, v)
+                self._evict(n)
+
+    def remove(self, kw: str) -> None:
+        for n in self.nodes:
+            if n in self.crashed:
+                continue  # unreachable; its stale copy dies at restart
+            if kw in self.nodes[n]:
+                del self.nodes[n][kw]
+                del self.hits[n][kw]
+                self.order[n].remove(kw)
+
+    # -- read path -----------------------------------------------------------
+
+    def lookup(self, kw: str) -> Tuple[Optional[Any], bool]:
+        """(expected value or None, strict) — strict=False means the real
+        store may legitimately answer differently (fuzzy resolution of a
+        key the model cannot predict); the result is then only
+        integrity-checked."""
+        for n in self._live_owners(kw):
+            if n in self.crashed:
+                continue  # guard spec: reader falls through to next tier
+            v = self.nodes[n].get(kw)
+            if v is not None:
+                self.hits[n][kw] += 1
+                if kw in self.order[n]:
+                    self.order[n].remove(kw)
+                    self.order[n].append(kw)
+                return v, True
+        return None, self.exact_only
+
+    def keys(self) -> List[str]:
+        seen: set = set()
+        for store in self.nodes.values():
+            seen.update(store)
+        return sorted(seen)
+
+
+__all__ = ["ModelStore", "Violation", "checksum", "make_value", "value_torn"]

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import fuzzy
+from repro.sim.clock import VirtualClock
 from repro.core.cache import PlanCache
 from repro.core.distributed_cache import DistributedPlanCache, HashRing
 from repro.core.speculative import KeywordPredictor, SpeculativePrefetcher
@@ -55,9 +56,14 @@ def test_cache_serialization_roundtrip():
 
 
 def test_ttl_expiry():
-    c = PlanCache(capacity=5, ttl_s=0.0)
+    # injectable clock: expiry is driven explicitly, not by hoping the
+    # wall clock ticked between insert and lookup
+    clock = VirtualClock()
+    c = PlanCache(capacity=5, ttl_s=10.0, clock=clock)
     c.insert("k", 1)
-    assert c.lookup("k") is None  # instantly stale
+    assert c.lookup("k") == 1  # fresh
+    clock.advance(10.1)
+    assert c.lookup("k") is None  # stale after the TTL elapses
 
 
 # -- templates ---------------------------------------------------------------

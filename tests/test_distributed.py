@@ -85,22 +85,19 @@ def test_big_matrices_are_sharded():
     assert any("data" in str(s) for s in leaves.values())  # FSDP present
 
 
-NEEDS_NEW_MESH_API = pytest.mark.skipif(
-    not hasattr(jax.sharding, "AxisType"),
-    reason="subprocess uses the jax>=0.6 mesh API (AxisType/set_mesh/"
-           "shard_map); unavailable on this jax",
-)
-
-
 # -- multi-device subprocess tests ----------------------------------------------
+#
+# These target the jax>=0.6 mesh surface through repro.distributed.mesh_compat
+# (AxisType / set_mesh / shard_map(check_vma=) mapped onto their jax 0.4.37
+# equivalents), so they run on both the pinned 0.4.37 container and newer jax.
 
 
-@NEEDS_NEW_MESH_API
 def test_ep_moe_matches_oracle_on_mesh():
     run_sub(
         """
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs.base import ModelConfig, MoEConfig
+        from repro.distributed.mesh_compat import make_mesh, set_mesh
         from repro.models import moe
         cfg = ModelConfig(name='t', family='moe', num_layers=1, d_model=64,
                           num_heads=4, num_kv_heads=2, head_dim=16, d_ff=32,
@@ -112,9 +109,8 @@ def test_ep_moe_matches_oracle_on_mesh():
         p = moe.moe_init(cfg, jax.random.PRNGKey(0))
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 64), jnp.float32)
         y_ref, _ = moe.moe_forward_grouped(cfg, p, x)
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
-        with jax.set_mesh(mesh):
+        mesh = make_mesh((2, 4), ('data', 'model'))
+        with set_mesh(mesh):
             y, _ = jax.jit(lambda p, x: moe.moe_forward_ep(
                 cfg, p, x, mesh=mesh, ep_axis='model', dp_axes=('data',)))(p, x)
         err = float(jnp.abs(y - y_ref).max())
@@ -124,19 +120,18 @@ def test_ep_moe_matches_oracle_on_mesh():
     )
 
 
-@NEEDS_NEW_MESH_API
 def test_pipeline_parallel_fwd_bwd():
     run_sub(
         """
         import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.mesh_compat import make_mesh, set_mesh
         from repro.distributed.pipeline import pipeline_apply, sequential_reference
-        mesh = jax.make_mesh((4,), ('pipe',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ('pipe',))
         L, D, B = 8, 16, 8
         ws = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.1
         layer_fn = lambda w, h: jnp.tanh(h @ w) + h
         x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             y = jax.jit(lambda ws, x: pipeline_apply(
                 layer_fn, ws, x, mesh=mesh, axis='pipe', n_microbatches=4))(ws, x)
             g = jax.jit(jax.grad(lambda ws: jnp.sum(pipeline_apply(
@@ -153,7 +148,6 @@ def test_pipeline_parallel_fwd_bwd():
     )
 
 
-@NEEDS_NEW_MESH_API
 def test_sharded_train_step_runs_and_matches_single():
     """Tiny model: sharded (2x4 mesh) train step == single-device step."""
     run_sub(
@@ -161,6 +155,7 @@ def test_sharded_train_step_runs_and_matches_single():
         import jax, jax.numpy as jnp, numpy as np, dataclasses
         from repro.configs import registry
         from repro.distributed import sharding as shd
+        from repro.distributed.mesh_compat import make_mesh, set_mesh
         from repro.models import lm
         from repro.training.optimizer import AdamWConfig, adamw_init
         from repro.training.train_step import make_train_step
@@ -177,14 +172,13 @@ def test_sharded_train_step_runs_and_matches_single():
         # single device reference
         p1, o1, m1 = jax.jit(make_train_step(cfg, opt_cfg))(params, opt, batch)
         # sharded
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ('data', 'model'))
         ctx = lm.ParallelCtx(mesh=mesh, dp_axes=('data',))
         psh = shd.to_shardings(shd.param_pspecs(params, profile, mesh), mesh)
         bsh = shd.to_shardings(shd.batch_pspecs(batch, mesh), mesh)
         osh = {'m': psh, 'v': psh,
                'step': shd.to_shardings(jax.sharding.PartitionSpec(), mesh)}
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             step = jax.jit(make_train_step(cfg, opt_cfg, ctx),
                            in_shardings=(psh, osh, bsh))
             p2, o2, m2 = step(params, opt, batch)
@@ -198,21 +192,19 @@ def test_sharded_train_step_runs_and_matches_single():
     )
 
 
-@NEEDS_NEW_MESH_API
 def test_elastic_reshard_preserves_values():
     run_sub(
         """
         import jax, jax.numpy as jnp
         from repro.configs import registry
         from repro.distributed.elastic import reshard_tree
+        from repro.distributed.mesh_compat import make_mesh
         from repro.models import lm
         cfg = registry.get_smoke('qwen2.5-3b')
         profile = registry.get_sharding('qwen2.5-3b')
         params = lm.init_params(cfg, jax.random.PRNGKey(0))
-        mesh8 = jax.make_mesh((2, 4), ('data', 'model'),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
-        mesh4 = jax.make_mesh((1, 4), ('data', 'model'),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh8 = make_mesh((2, 4), ('data', 'model'))
+        mesh4 = make_mesh((1, 4), ('data', 'model'))
         p8 = reshard_tree(params, mesh8, profile)
         p4 = reshard_tree(p8, mesh4, profile)  # "node loss": shrink mesh
         for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p4)):
@@ -223,22 +215,21 @@ def test_elastic_reshard_preserves_values():
     )
 
 
-@NEEDS_NEW_MESH_API
 def test_compressed_allreduce_on_mesh():
     run_sub(
         """
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.distributed.mesh_compat import make_mesh, set_mesh, shard_map
         from repro.training.grad_compress import compressed_allreduce, ef_state_init
-        mesh = jax.make_mesh((8,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ('data',))
         grads = {'w': jnp.arange(8*512, dtype=jnp.float32).reshape(8, 512) / 100}
         ef = ef_state_init({'w': grads['w'][0]})
         def f(g, ef):
             return compressed_allreduce({'w': g}, ef, 'data')
-        fn = jax.shard_map(f, mesh=mesh, in_specs=(P('data', None), P()),
-                           out_specs=(P(), P()), check_vma=False)
-        with jax.set_mesh(mesh):
+        fn = shard_map(f, mesh=mesh, in_specs=(P('data', None), P()),
+                       out_specs=(P(), P()), check_vma=False)
+        with set_mesh(mesh):
             out, new_ef = fn(grads['w'], ef)
         ref = np.asarray(grads['w']).mean(0)
         err = float(np.abs(np.asarray(out['w']) - ref).max())

@@ -208,8 +208,15 @@ def test_fuzzy_matcher_compat_keys_argument():
 
 
 def test_plan_cache_ttl_expiry_keeps_index_in_sync():
-    c = PlanCache(capacity=10, fuzzy=True, fuzzy_threshold=0.7, ttl_s=1e-9)
+    from repro.sim.clock import VirtualClock
+
+    clock = VirtualClock()
+    c = PlanCache(capacity=10, fuzzy=True, fuzzy_threshold=0.7, ttl_s=2.0,
+                  clock=clock)
     c.insert("net profit margin analysis", 1)
+    assert c.lookup("net profit margin analysis") == 1
+    assert len(c._matcher.index) == 1
+    clock.advance(2.1)
     assert c.lookup("net profit margin analysis") is None  # expired
     # the expired key must be gone from the fuzzy index too, not just _store
     assert len(c._matcher.index) == 0

@@ -90,9 +90,14 @@ def test_capacity_bound_under_every_policy(policy):
 
 @pytest.mark.parametrize("policy", POLICIES)
 def test_ttl_composes_with_any_policy(policy):
-    c = PlanCache(capacity=8, eviction=policy, ttl_s=0.0)
+    from repro.sim.clock import VirtualClock
+
+    clock = VirtualClock()
+    c = PlanCache(capacity=8, eviction=policy, ttl_s=5.0, clock=clock)
     c.insert("k", 1)
-    assert c.lookup("k") is None  # instantly stale, regardless of policy
+    assert c.lookup("k") == 1
+    clock.advance(5.1)
+    assert c.lookup("k") is None  # stale once the TTL passes, any policy
 
 
 # -- policy behavior ----------------------------------------------------------

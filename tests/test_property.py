@@ -113,6 +113,81 @@ def test_env_generation_deterministic(seed):
         assert math.isfinite(a.gt_answer)
 
 
+# -- repro.sim: property tests over random op sequences + fault plans ---------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=2**16),
+       st.sampled_from(["skewed_reuse", "paraphrase_burst", "evict_then_hit",
+                        "uniform"]),
+       st.sampled_from(["none", "crash_restart", "replica_lag",
+                        "hedge_timeout", "mid_wave_evict"]))
+def test_sim_random_config_oracle_agreement_and_determinism(seed, scenario,
+                                                            fault):
+    """Any (seed, scenario, fault-plan) with guards ON must agree with the
+    sequential model oracle, and rerun to the identical trace hash."""
+    from repro.sim import SimConfig, run_sim
+
+    cfg = SimConfig(seed=seed, scenario=scenario, fault=fault, n_ops=16)
+    r = run_sim(cfg)
+    assert not r.violations, (cfg, r.violations[:3])
+    assert run_sim(cfg).trace_hash == r.trace_hash
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=2**16))
+def test_sim_failing_seed_replays_to_identical_trace(seed):
+    """A run that DOES violate (guard ablated) must still be a pure
+    function of its config: rerunning the failing seed reproduces the
+    identical trace hash and the identical violation list."""
+    from repro.sim import SimConfig, run_sim
+
+    cfg = SimConfig(seed=seed, fault="crash_restart",
+                    ablate=("crash_fallthrough",), n_ops=24)
+    a, b = run_sim(cfg), run_sim(cfg)
+    assert a.trace_hash == b.trace_hash
+    assert [(v.step, v.oracle) for v in a.violations] == \
+           [(v.step, v.oracle) for v in b.violations]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["insert", "lookup", "remove"]),
+                          KW, st.integers()),
+                min_size=1, max_size=80),
+       st.integers(min_value=1, max_value=8))
+def test_plan_cache_random_ops_agree_with_dict_model(ops, cap):
+    """PlanCache vs the simplest possible sequential model: a dict plus an
+    LRU recency list (the single-store analogue of repro.sim's ModelStore)."""
+    c = PlanCache(capacity=cap)
+    model, recency = {}, []
+
+    def touch(k):
+        if k in recency:
+            recency.remove(k)
+        recency.append(k)
+
+    for op, k, v in ops:
+        if op == "insert":
+            c.insert(k, v)
+            model[k] = v
+            touch(k)
+            while len(model) > cap:
+                victim = recency.pop(0)
+                del model[victim]
+        elif op == "lookup":
+            got = c.lookup(k)
+            want = model.get(k)
+            assert got == want, (op, k, got, want)
+            if want is not None:
+                touch(k)
+        else:
+            assert c.remove(k) == (k in model)
+            if k in model:
+                del model[k]
+                recency.remove(k)
+    assert sorted(c.keys()) == sorted(model)
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.dictionaries(st.sampled_from(["company", "year", "student"]),
                        st.text(alphabet="ABCdef123", min_size=2, max_size=8),

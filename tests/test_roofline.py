@@ -3,7 +3,6 @@ FLOPs/collectives that cost_analysis() undercounts."""
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch.roofline import HloCostModel, shape_bytes, shape_dims
 
@@ -87,12 +86,9 @@ def test_unrolled_matches_scan_accounting():
     assert abs(a - b) / a < 0.05
 
 
-@pytest.mark.skipif(
-    not hasattr(jax.sharding, "AxisType"),
-    reason="subprocess uses the jax>=0.6 mesh API (AxisType); unavailable "
-           "on this jax",
-)
 def test_collective_bytes_from_sharded_fn():
+    # subprocess builds its mesh through repro.distributed.mesh_compat, so
+    # it runs on jax 0.4.37 as well as the jax>=0.6 AxisType surface
     import os
     import subprocess
     import sys
@@ -105,9 +101,9 @@ def test_collective_bytes_from_sharded_fn():
         """
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed.mesh_compat import make_mesh
         from repro.launch.roofline import HloCostModel
-        mesh = jax.make_mesh((8,), ('d',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ('d',))
         sh = NamedSharding(mesh, P('d', None))
         rep = NamedSharding(mesh, P())
         x = jax.ShapeDtypeStruct((1024, 64), jnp.float32)

@@ -1,6 +1,6 @@
 """Serving runtime: engine, continuous batching + hedging, two-tier router."""
 
-import time
+import threading
 
 import jax
 import numpy as np
@@ -95,6 +95,38 @@ def test_tier_pool_hedged_dispatch_reuses_one_executor():
     assert pool._executor is None
 
 
+def test_tier_pool_hedged_failover_serves_surviving_replica():
+    """A replica that times out must not surface: the hedge's success wins.
+    With the failover guard ablated (the repro.sim seam) the single
+    dispatch propagates the timeout."""
+    def flaky(eng):
+        if eng == "bad":
+            raise TimeoutError("engine timed out")
+        return f"served-by-{eng}"
+
+    pool = TierPool("large", replicas=["bad", "good"])
+    for _ in range(4):  # every rotation parity: failover always saves it
+        assert pool.dispatch(flaky, hedge=True) == "served-by-good"
+    pool.close()
+
+    ablated = TierPool("large", replicas=["bad", "good"], hedge_failover=False)
+    import pytest
+    with pytest.raises(TimeoutError):
+        ablated.dispatch(flaky, hedge=True)  # picks replica 0 ("bad")
+    ablated.close()
+
+
+def test_tier_pool_hedged_raises_only_when_all_replicas_fail():
+    def always_bad(eng):
+        raise RuntimeError(f"{eng} down")
+
+    pool = TierPool("large", replicas=["a", "b"])
+    import pytest
+    with pytest.raises(RuntimeError):
+        pool.dispatch(always_bad, hedge=True)
+    pool.close()
+
+
 def test_tier_pool_unhedged_skips_executor():
     pool = TierPool("actor", replicas=["only"])
     assert pool.dispatch(lambda e: e, hedge=True) == "only"  # <2 replicas
@@ -162,11 +194,15 @@ def test_router_route_batch_single_lookup_pass():
 
 
 def test_router_async_does_not_block():
+    # event-gated instead of sleep-timed: route() must RETURN while the
+    # cache generation is still provably blocked on the event (no
+    # wall-clock margins, so no flakiness on a loaded CI box)
     cache = PlanCache(capacity=10)
+    release = threading.Event()
     slow = {"done": False}
 
     def make_template(req, res):
-        time.sleep(0.3)
+        assert release.wait(timeout=30)
         slow["done"] = True
         return {"t": 1}
 
@@ -178,9 +214,8 @@ def test_router_async_does_not_block():
         make_template=make_template,
         async_cachegen=True,
     )
-    t0 = time.perf_counter()
-    router.route({})
-    elapsed = time.perf_counter() - t0
-    assert elapsed < 0.25  # response returned before cachegen finished
-    router.close()
+    assert router.route({}) == "res"
+    assert not slow["done"]  # response returned; cachegen still gated
+    release.set()
+    router.close()  # drains the pending cachegen
     assert slow["done"]

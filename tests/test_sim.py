@@ -1,0 +1,290 @@
+"""repro.sim deterministic-simulation harness: determinism, fault plans
+under guards, oracle teeth (guard ablations), replayable failure seeds,
+and the sim building blocks (clock / scheduler / trace / model store)."""
+
+import random
+
+import pytest
+
+from repro.core.distributed_cache import DistributedPlanCache, ShardUnavailable
+from repro.envs.workloads import SIM_SCENARIOS, sim_traffic
+from repro.sim import (
+    ABLATION_OF,
+    FAULT_PLANS,
+    ModelStore,
+    SimConfig,
+    StepScheduler,
+    TraceRecorder,
+    VirtualClock,
+    make_value,
+    run_sim,
+    value_torn,
+)
+
+
+def _cfg(**kw):
+    kw.setdefault("n_ops", 30)  # keep tier-1 fast; CI matrix runs bigger
+    return SimConfig(**kw)
+
+
+# -- determinism ---------------------------------------------------------------
+
+
+def test_same_seed_identical_trace():
+    a = run_sim(_cfg(seed=11))
+    b = run_sim(_cfg(seed=11))
+    assert a.ok and b.ok
+    assert a.trace_hash == b.trace_hash
+    assert a.steps == b.steps and a.ops_applied == b.ops_applied
+
+
+def test_different_seeds_diverge():
+    a = run_sim(_cfg(seed=1))
+    b = run_sim(_cfg(seed=2))
+    assert a.trace_hash != b.trace_hash
+
+
+@pytest.mark.parametrize("scenario", SIM_SCENARIOS)
+def test_every_scenario_clean_and_deterministic(scenario):
+    cfg = _cfg(seed=5, scenario=scenario)
+    a = run_sim(cfg)
+    assert a.ok, a.violations[:3]
+    assert run_sim(cfg).trace_hash == a.trace_hash
+
+
+def test_sim_traffic_seeded_and_scenario_shaped():
+    t1 = sim_traffic("skewed_reuse", 9, n_ops=20, n_clients=3)
+    t2 = sim_traffic("skewed_reuse", 9, n_ops=20, n_clients=3)
+    assert t1 == t2  # fully determined by (scenario, seed, sizes)
+    assert len(t1) == 3 and all(len(ops) == 20 for ops in t1)
+    assert t1 != sim_traffic("skewed_reuse", 10, n_ops=20, n_clients=3)
+    with pytest.raises(ValueError):
+        sim_traffic("nope", 0)
+
+
+# -- fault plans under guards --------------------------------------------------
+
+
+@pytest.mark.parametrize("fault", [f for f in FAULT_PLANS if f != "none"])
+def test_fault_plans_clean_under_guards(fault):
+    r = run_sim(_cfg(seed=3, fault=fault))
+    assert r.ok, r.violations[:3]
+    if fault in ("crash_restart", "replica_lag"):
+        assert r.interceptor["failed_calls"] > 0  # the fault actually bit
+    if fault == "hedge_timeout":
+        assert r.router_metrics is not None
+        assert r.router_metrics["requests"] > 0
+
+
+def test_replica_lag_guard_blocks_stale_reads():
+    """Under the sync-ack guard the lag fault plan charges latency but can
+    never surface a stale version; the deferred-write channel stays unused."""
+    r = run_sim(_cfg(seed=3, fault="replica_lag"))
+    assert r.ok
+    assert r.interceptor["deferred_writes"] == 0  # guard: no async replicas
+    ablated = run_sim(_cfg(seed=3, fault="replica_lag", ablate=("replica_ack",)))
+    assert ablated.interceptor["deferred_writes"] > 0
+
+
+# -- oracle teeth: every guard ablation must be CAUGHT -------------------------
+
+EXPECTED_ORACLES = {
+    "crash_restart": {"durability"},
+    "replica_lag": {"linearizability", "durability"},
+    "hedge_timeout": {"completeness"},
+    "mid_wave_evict": {"eviction_order", "durability", "phantom"},
+}
+
+
+@pytest.mark.parametrize("fault,guard", sorted(ABLATION_OF.items()))
+def test_guard_ablation_is_caught_by_matching_oracle(fault, guard):
+    r = run_sim(_cfg(seed=3, fault=fault, ablate=(guard,)))
+    assert r.violations, (
+        f"{fault} with {guard} ablated produced no violations — "
+        "the oracle lost its teeth"
+    )
+    fired = {v.oracle for v in r.violations}
+    assert fired & EXPECTED_ORACLES[fault], (fault, guard, fired)
+
+
+# -- replayable failure seeds --------------------------------------------------
+
+
+def test_failing_seed_dumps_and_replays_identically(tmp_path, capsys):
+    from repro.sim.__main__ import main
+
+    rc = main(["--seed", "3", "--fault", "crash_restart",
+               "--ablate", "crash_fallthrough", "--ops", "30",
+               "--dump-dir", str(tmp_path)])
+    assert rc == 1  # violations -> red
+    dumps = list(tmp_path.glob("sim-repro-*.json"))
+    assert len(dumps) == 1
+    rc = main(["--replay", str(dumps[0]), "--dump-dir", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 0  # trace hash reproduced bit-for-bit
+    assert "replay reproduced the recorded interleaving exactly" in out
+    assert "VIOLATION" in out  # and the violations fire again
+
+
+# -- seeded-random property sweep (hypothesis-free tier-1 analogue) ------------
+
+
+def test_random_configs_agree_with_model_and_replay():
+    """Mini-fuzzer: random (scenario, fault) under guards must stay clean
+    and deterministic. The hypothesis twin of this test lives in
+    test_property.py (runs where hypothesis is installed)."""
+    for trial in range(5):
+        seed = 1000 + trial
+        rng = random.Random(seed)
+        cfg = SimConfig(
+            seed=seed,
+            scenario=rng.choice(SIM_SCENARIOS),
+            fault=rng.choice(FAULT_PLANS),
+            n_ops=22,
+        )
+        r = run_sim(cfg)
+        assert r.ok, (cfg, r.violations[:3])
+        assert run_sim(cfg).trace_hash == r.trace_hash, cfg
+
+
+# -- building blocks -----------------------------------------------------------
+
+
+def test_virtual_clock_monotone():
+    c = VirtualClock()
+    assert c() == 0.0
+    c.advance(1.5)
+    assert c.time() == 1.5
+    with pytest.raises(ValueError):
+        c.advance(-1)
+
+
+def test_step_scheduler_seeded_interleaving():
+    def order_for(seed):
+        sched = StepScheduler(seed, VirtualClock())
+        sched.add_client("a", [{"op": i} for i in range(6)])
+        sched.add_client("b", [{"op": i} for i in range(6)])
+        seen = []
+        sched.run(lambda step, client, op: seen.append((client, op["op"])))
+        return seen
+
+    o1, o2 = order_for(7), order_for(7)
+    assert o1 == o2 and len(o1) == 12
+    assert order_for(8) != o1  # different seed, different interleaving
+    # both clients' ops preserve per-client order
+    assert [x for c, x in o1 if c == "a"] == list(range(6))
+
+
+def test_step_scheduler_deferred_actions_fire_in_order():
+    clock = VirtualClock()
+    sched = StepScheduler(0, clock)
+    sched.add_client("a", [{"op": i} for i in range(8)])
+    fired = []
+    sched.defer(3, lambda: fired.append("x"))
+    sched.defer(3, lambda: fired.append("y"))
+    sched.run(lambda *_: None)
+    assert fired == ["x", "y"]  # same due step keeps submission order
+
+
+def test_trace_recorder_hash_order_sensitive():
+    a, b = TraceRecorder(), TraceRecorder()
+    a.record(0, "c", "x", 1)
+    a.record(1, "c", "y", 2)
+    b.record(1, "c", "y", 2)
+    b.record(0, "c", "x", 1)
+    assert a.trace_hash != b.trace_hash
+    assert a.n_events == 2
+
+
+def test_value_checksum_detects_torn_entry():
+    v = make_value("kw", 3)
+    assert not value_torn(v)
+    assert value_torn({**v, "v": 4})  # version flipped without checksum
+    assert value_torn({"k": "kw"})  # structurally torn
+
+
+def test_model_store_mirrors_replicated_crash_semantics():
+    m = ModelStore(replication=2, capacity_per_node=8)
+    for i in range(3):
+        m.add_node(f"cache-{i}")
+    m.insert_wave([("alpha", make_value("alpha", 1))])
+    owners = m.ring.nodes_for("alpha", 2)
+    m.crash(owners[0])
+    got, strict = m.lookup("alpha")
+    assert strict and got["v"] == 1  # replica serves through the crash
+    m.restart(owners[0], recover=False)  # data loss, no repair
+    m.crash(owners[1])
+    got, _ = m.lookup("alpha")
+    assert got is None  # both copies gone: the model says so too
+
+
+# -- the new distributed-cache seams directly ---------------------------------
+
+
+class _CrashingInterceptor:
+    def __init__(self):
+        self.crashed = set()
+
+    def call(self, node, op, fn):
+        if node in self.crashed:
+            raise ShardUnavailable(node)
+        return fn()
+
+
+def test_distributed_cache_crash_fallthrough_guard():
+    ic = _CrashingInterceptor()
+    dc = DistributedPlanCache(4, replication=2, capacity_per_node=64,
+                              interceptor=ic)
+    for i in range(20):
+        dc.insert(f"kw-{i}", i)
+    ic.crashed.add("cache-1")  # facade NOT told (no mark_down)
+    assert all(dc.lookup(f"kw-{i}") == i for i in range(20))
+
+
+def test_distributed_cache_crash_fallthrough_ablation_drops_keys():
+    ic = _CrashingInterceptor()
+    dc = DistributedPlanCache(4, replication=2, capacity_per_node=64,
+                              interceptor=ic, ablate=("crash_fallthrough",))
+    for i in range(20):
+        dc.insert(f"kw-{i}", i)
+    ic.crashed.add("cache-1")
+    hits = sum(dc.lookup(f"kw-{i}") is not None for i in range(20))
+    assert hits < 20  # the ablated facade drops the crashed shard's keys
+
+
+def test_ack_policy_primary_requires_defer_channel():
+    """Without a defer-capable interceptor the 'primary' ablation would
+    silently degrade to synchronous 'all' semantics — the constructor
+    refuses instead."""
+    with pytest.raises(ValueError, match="defer"):
+        DistributedPlanCache(2, ack_policy="primary")
+    with pytest.raises(ValueError, match="defer"):
+        DistributedPlanCache(2, ack_policy="primary",
+                             interceptor=_CrashingInterceptor())  # no .defer
+    with pytest.raises(ValueError):
+        DistributedPlanCache(2, ack_policy="quorum")
+
+
+def test_restart_node_read_repair_restores_replication():
+    dc = DistributedPlanCache(4, replication=2, capacity_per_node=64)
+    for i in range(30):
+        dc.insert(f"kw-{i}", i)
+    # crash-restart cache-2 WITH repair: its owned keys come back from peers
+    repaired = dc.restart_node("cache-2", recover=True)
+    assert repaired == len(dc.shards["cache-2"])
+    assert all(dc.lookup(f"kw-{i}") == i for i in range(30))
+    # and losing ANOTHER node afterwards still serves everything (R=2 held)
+    dc.mark_down("cache-0")
+    assert all(dc.lookup(f"kw-{i}") == i for i in range(30))
+
+
+def test_restart_node_without_repair_loses_replication():
+    dc = DistributedPlanCache(4, replication=1, capacity_per_node=64)
+    for i in range(30):
+        dc.insert(f"kw-{i}", i)
+    held = len(dc.shards["cache-2"])
+    dc.restart_node("cache-2", recover=False)
+    assert len(dc.shards["cache-2"]) == 0
+    if held:
+        hits = sum(dc.lookup(f"kw-{i}") is not None for i in range(30))
+        assert hits == 30 - held  # R=1: the restarted node's keys are gone

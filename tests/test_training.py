@@ -192,3 +192,61 @@ def test_fault_runner_resumes_from_existing_checkpoint(tmp_path):
                              FaultPolicy(checkpoint_every=5))
     state, completed, _ = r2.run(0, lambda s: None, 12)
     assert completed == 12
+
+
+def test_fault_runner_straggler_detected_on_virtual_clock(tmp_path):
+    """Straggler detection without wall-clock flakiness: the runner reads
+    an injected VirtualClock, and the stepper makes exactly one step take
+    100x the median — that step (and only that step) must roll back."""
+    from repro.sim.clock import VirtualClock
+
+    clock = VirtualClock()
+    seen = {"straggled": False}
+
+    def stepper(state, batch):
+        if state == 15 and not seen["straggled"]:
+            seen["straggled"] = True
+            clock.advance(10.0)  # one pathological step
+        else:
+            clock.advance(0.1)  # healthy cadence
+        return state + 1, {"loss": 1.0 / (state + 1)}
+
+    store = CheckpointStore(tmp_path, keep_last=3)
+    policy = FaultPolicy(checkpoint_every=5, min_steps_for_deadline=5,
+                         step_deadline_factor=5.0, min_deadline_s=0.5)
+    r = FaultTolerantRunner(stepper, store, policy, clock=clock)
+    state, completed, events = r.run(0, lambda s: None, 25)
+    assert completed == 25
+    stalls = [e for e in events if e.kind == "stall"]
+    assert len(stalls) == 1 and stalls[0].action == "rollback"
+
+
+def test_fault_runner_healthy_virtual_cadence_never_stalls(tmp_path):
+    from repro.sim.clock import VirtualClock
+
+    clock = VirtualClock()
+
+    def stepper(state, batch):
+        clock.advance(0.1)
+        return state + 1, {"loss": 1.0}
+
+    store = CheckpointStore(tmp_path, keep_last=3)
+    r = FaultTolerantRunner(stepper, store,
+                            FaultPolicy(checkpoint_every=10), clock=clock)
+    _, completed, events = r.run(0, lambda s: None, 30)
+    assert completed == 30 and events == []
+
+
+def test_fault_schedule_shared_inject_path():
+    """FaultSchedule is the shared inject surface for the runner AND the
+    repro.sim harness: multiple faults per step, fire-once semantics."""
+    from repro.distributed.fault import FaultSchedule
+
+    fs = FaultSchedule()
+    fs.inject(3, "crash", node="cache-1")
+    fs.inject(3, "lag", steps=5)
+    assert fs.pending() == 2 and bool(fs)
+    specs = fs.pop(3)
+    assert [s.kind for s in specs] == ["crash", "lag"]
+    assert specs[0].details == {"node": "cache-1"}
+    assert fs.pop(3) == [] and not fs
