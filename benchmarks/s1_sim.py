@@ -4,7 +4,12 @@ harness sustains per scenario and fault plan.
 This row keeps the verification loop itself honest: the sim is only
 useful as a pre-merge gate if a seed matrix stays cheap, so a regression
 in ops/sec (e.g. an accidentally quadratic oracle) shows up in the same
-benchmark artifact stream as the serving-path rows.
+benchmark artifact stream as the serving-path rows. The
+``membership_churn`` and ``async_cachegen`` rows additionally carry
+``interceptor_calls`` — the per-shard RPCs the run charged, now including
+the control-plane ops (``keys``/``len``/``autotune``/membership scans) —
+so control-plane overhead is tracked per commit via
+``benchmarks/run.py --json-dir`` (``BENCH_s1.json``).
 """
 
 from __future__ import annotations
@@ -24,6 +29,13 @@ def run(fast: bool = False) -> List[Row]:
         ("skewed_reuse", "crash_restart"),
         ("evict_then_hit", "mid_wave_evict"),
         ("skewed_reuse", "hedge_timeout"),
+        # control plane under elastic churn: joins/drains/rebalances all
+        # pay the interceptor seam, as do the keys/len scans in the mix
+        ("skewed_reuse", "membership_churn"),
+        ("paraphrase_burst", "membership_churn"),
+        # async cache-generation: worker clients add scheduler steps and
+        # the admission race costs extra model mirroring per wave
+        ("skewed_reuse", "async_cachegen"),
     ]
     for scenario, fault in cells:
         cfg = SimConfig(seed=0, scenario=scenario, fault=fault, n_ops=n_ops)
@@ -31,17 +43,21 @@ def run(fast: bool = False) -> List[Row]:
         report = run_sim(cfg)
         wall = time.perf_counter() - t0
         assert report.ok, report.violations[:3]
+        derived = {
+            "ops": report.ops_applied,
+            "steps": report.steps,
+            "lookups": report.lookups,
+            "ops_per_s": round(report.ops_applied / max(wall, 1e-9), 1),
+            "interceptor_calls": report.interceptor["calls"],
+            "trace_hash": report.trace_hash[:12],
+        }
+        if report.cachegen is not None:
+            derived["cachegen_submitted"] = report.cachegen["submitted"]
         rows.append(
             Row(
                 f"s1/{scenario}/{fault}",
                 wall * 1e6 / max(1, report.ops_applied),
-                {
-                    "ops": report.ops_applied,
-                    "steps": report.steps,
-                    "lookups": report.lookups,
-                    "ops_per_s": round(report.ops_applied / max(wall, 1e-9), 1),
-                    "trace_hash": report.trace_hash[:12],
-                },
+                derived,
             )
         )
     return rows

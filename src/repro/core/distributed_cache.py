@@ -48,6 +48,28 @@ harness):
   EMPTY (process restart loses in-memory state) and, with
   ``recover=True``, re-pulls the keys it owns from peer replicas before
   serving, restoring the replication factor.
+* GUARD — churn re-homing: every ring change moves data with it.
+  ``add_node`` re-homes keys whose owner set changed (``_rebalance``) and
+  ``remove_node`` drains a leaving node's keys back to their new owners
+  before dropping it. Ablatable via ``ablate={"churn_rehome"}`` (joins
+  don't rebalance, drains drop their data) so the sim's
+  ``membership_churn`` durability oracle can demonstrate it catches the
+  regression.
+* GUARD — fuzzy scatter: with fuzzy shards, a lookup probes the ring
+  owners *and then every remaining live shard*, because a similar key
+  hashes to its own owners, not the query's. Ablatable via
+  ``ablate={"fuzzy_scatter"}`` (probe the query's owners only) so the
+  sim's similarity-aware paraphrase oracle can catch the lost-resolution
+  regression.
+
+Control-plane ops (``keys``/``__len__``/``autotune``/``clear`` and the
+membership scans behind ``_rebalance``/``remove_node``/``restart_node``)
+go through the same per-shard interceptor seam as the data plane: in a
+networked deployment they pay RPCs and can fail them, and the sim charges
+and crashes them accordingly. An unreachable shard is skipped — its keys
+are invisible to ``keys()``/``len()``, it keeps stale data across
+``clear()`` until its next restart wipes it, and it can neither donate
+nor receive re-homed keys during membership changes.
 """
 
 from __future__ import annotations
@@ -182,20 +204,37 @@ class DistributedPlanCache(PlanStoreBase):
                 evict_during_wave="evict_after_wave" in self.ablate,
             )
             self.ring.add(name)
-            self._rebalance()
+            if "churn_rehome" not in self.ablate:
+                # GUARD (churn re-homing): a join immediately re-homes the
+                # keys whose owner set the ring change moved
+                self._rebalance()
 
     def remove_node(self, name: str) -> None:
-        """Graceful removal: re-home this node's keys before dropping it."""
+        """Graceful removal: re-home this node's keys before dropping it.
+
+        The drain scan goes through the ``_shard_call`` seam; a node that
+        turns out to be unreachable cannot donate its keys, so it is
+        dropped crash-style (its data is lost — replicas still hold the
+        replicated copies). With ``"churn_rehome"`` in ``ablate`` the
+        re-home is skipped entirely (the data-loss regression the sim's
+        ``membership_churn`` durability oracle catches)."""
         with self._lock:
             if name not in self.shards:
                 return
-            old = self.shards.pop(name)
+            shard = self.shards[name]
+            pairs: Optional[List[Tuple[str, Any]]] = None
+            if "churn_rehome" not in self.ablate:
+                try:
+                    pairs = self._shard_call(
+                        name, "drain_scan", shard.snapshot_items
+                    )
+                except ShardUnavailable:
+                    pairs = None  # unreachable: crash-style removal
+            self.shards.pop(name)
             self.ring.remove(name)
             self.down.discard(name)
-            for k in old.keys():
-                v = old.lookup(k)
-                if v is not None:
-                    self._insert_unlocked(k, v)
+            for k, v in pairs or ():
+                self._insert_unlocked(k, v)
 
     def mark_down(self, name: str) -> None:
         """Crash-failure: node unreachable, data NOT migrated (replicas serve)."""
@@ -258,18 +297,41 @@ class DistributedPlanCache(PlanStoreBase):
             return len(repaired)
 
     def _rebalance(self) -> None:
-        """After adding a node, re-home keys whose primary moved."""
+        """After a ring change, re-home keys whose owner set moved.
+
+        Scans every shard through the ``_shard_call`` seam with ``peek``
+        semantics (``snapshot_items``: no hit/recency perturbation); an
+        unreachable shard keeps its keys where they are — they stay
+        invisible to the new owners until the node restarts and
+        read-repairs, exactly like a networked rebalance that cannot
+        reach a peer."""
         moves = []
-        for node, shard in self.shards.items():
-            for k in shard.keys():
-                owners = self.ring.nodes_for(k, self.replication)
-                if node not in owners:
-                    v = shard.lookup(k)
+        for node in list(self.shards):
+            shard = self.shards[node]
+            try:
+                pairs = self._shard_call(
+                    node, "rebalance_scan", shard.snapshot_items
+                )
+            except ShardUnavailable:
+                continue
+            for k, v in pairs:
+                if node not in self.ring.nodes_for(k, self.replication):
                     moves.append((node, k, v))
         for node, k, v in moves:
             # remove from stale owner (keeps its fuzzy index in sync),
-            # reinsert at the right owners
-            self.shards[node].remove(k)
+            # reinsert at the right owners. The re-home must happen even
+            # when the retire RPC fails — the value is already in hand,
+            # and skipping the insert would orphan the key on a node its
+            # new owners never probe; the unretired stale copy dies at
+            # that node's next restart (remove()'s tombstone-free
+            # semantics)
+            try:
+                self._shard_call(
+                    node, "remove",
+                    lambda s=self.shards[node], k=k: s.remove(k),
+                )
+            except ShardUnavailable:
+                pass
             self._insert_unlocked(k, v)
 
     # -- cache ops --------------------------------------------------------
@@ -292,7 +354,10 @@ class DistributedPlanCache(PlanStoreBase):
         shard still scans only its local keys; in a networked deployment
         this fan-out runs in parallel)."""
         owners = self._live(self.ring.nodes_for(keyword, self.replication))
-        if self.fuzzy:
+        if self.fuzzy and "fuzzy_scatter" not in self.ablate:
+            # GUARD (fuzzy scatter); the ablation probes the query's own
+            # ring owners only — the lost-paraphrase-resolution regression
+            # the sim's similarity-aware oracle catches
             owners += [
                 n for n in sorted(self.shards)
                 if n not in self.down and n not in owners
@@ -475,17 +540,34 @@ class DistributedPlanCache(PlanStoreBase):
             return removed
 
     def clear(self) -> None:
+        """Wipe every *reachable* shard. Clears go through the interceptor
+        seam like any other shard call: an unreachable node keeps its stale
+        data until its next restart wipes it (the same tombstone-free
+        semantics ``remove`` has)."""
         with self._lock:
-            for shard in self.shards.values():
-                shard.clear()
+            for name in list(self.shards):
+                shard = self.shards[name]
+                try:
+                    self._shard_call(name, "clear", shard.clear)
+                except ShardUnavailable:
+                    continue
             self.stats = CacheStats()
 
     def autotune(self, **thresholds) -> List[str]:
-        """Run one index auto-tune step on every shard; see PlanCache."""
+        """Run one index auto-tune step on every reachable shard (see
+        PlanCache). Per-shard calls pay the interceptor seam; an
+        unreachable shard simply skips this tuning round."""
         with self._lock:
             actions: List[str] = []
             for name, shard in sorted(self.shards.items()):
-                for act in shard.autotune(**thresholds):
+                try:
+                    acts = self._shard_call(
+                        name, "autotune",
+                        lambda s=shard: s.autotune(**thresholds),
+                    )
+                except ShardUnavailable:
+                    continue
+                for act in acts:
                     actions.append(f"{name}/{act}")
             return actions
 
@@ -497,19 +579,25 @@ class DistributedPlanCache(PlanStoreBase):
             return any(keyword in self.shards[n] for n in owners)
 
     def __len__(self) -> int:
-        with self._lock:
-            seen = set()
-            for n, s in self.shards.items():
-                if n not in self.down:
-                    seen.update(s.keys())
-            return len(seen)
+        """Distinct reachable keys; pays one seam call per live shard."""
+        return len(self.keys())
 
     def keys(self) -> List[str]:
+        """Union of every reachable shard's live keys. The per-shard
+        enumeration goes through the interceptor seam — a crashed-but-not-
+        marked-down shard contributes nothing (its keys are unreachable,
+        exactly what a networked key scan would observe)."""
         with self._lock:
             seen = set()
-            for n, s in self.shards.items():
-                if n not in self.down:
-                    seen.update(s.keys())
+            for n in list(self.shards):
+                if n in self.down:
+                    continue
+                shard = self.shards[n]
+                try:
+                    ks = self._shard_call(n, "keys", shard.keys)
+                except ShardUnavailable:
+                    continue
+                seen.update(ks)
             return sorted(seen)
 
     def load_by_node(self) -> Dict[str, int]:

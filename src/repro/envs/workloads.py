@@ -314,7 +314,11 @@ def sim_traffic(
     * ``{"op": "insert", "kws": [...]}`` — one ``insert_batch`` admission
       wave (the harness assigns versioned payloads);
     * ``{"op": "remove", "kw": ...}`` / ``{"op": "autotune"}`` — sprinkled
-      maintenance traffic.
+      maintenance traffic;
+    * ``{"op": "keys"}`` / ``{"op": "len"}`` — control-plane scans
+      (``skewed_reuse`` only): they pay one interceptor RPC per shard and
+      are checked against the model's reachable-key union, so a crashed or
+      churned shard's visibility is oracle-verified too.
 
     Scenarios:
 
@@ -344,12 +348,16 @@ def sim_traffic(
                 wave = [kws[_zipf_pick(rng, len(kws))] for _ in range(batch)]
                 if r < 0.30:
                     ops.append({"op": "insert", "kws": wave})
-                elif r < 0.95:
+                elif r < 0.93:
                     ops.append({"op": "lookup", "kws": wave})
-                elif r < 0.98:
+                elif r < 0.955:
                     ops.append({"op": "remove", "kw": wave[0]})
-                else:
+                elif r < 0.97:
                     ops.append({"op": "autotune"})
+                elif r < 0.985:
+                    ops.append({"op": "keys"})
+                else:
+                    ops.append({"op": "len"})
             elif scenario == "paraphrase_burst":
                 canon = kws[_zipf_pick(rng, len(kws))]
                 variants = paras.get(canon) or [canon]

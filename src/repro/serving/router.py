@@ -136,6 +136,8 @@ class RouterMetrics:
     large_tier_calls: int = 0
     small_tier_calls: int = 0
     async_cachegens: int = 0
+    sync_cachegen_fallbacks: int = 0
+    cachegen_dropped: int = 0
     lookup_s: float = 0.0
 
     def snapshot(self) -> Dict[str, Any]:
@@ -145,6 +147,8 @@ class RouterMetrics:
             "large_tier_calls": self.large_tier_calls,
             "small_tier_calls": self.small_tier_calls,
             "async_cachegens": self.async_cachegens,
+            "sync_cachegen_fallbacks": self.sync_cachegen_fallbacks,
+            "cachegen_dropped": self.cachegen_dropped,
             "lookup_s": round(self.lookup_s, 6),
         }
 
@@ -162,6 +166,8 @@ class TwoTierRouter:
         make_template: Callable[[Any, Any], Any],
         async_cachegen: bool = True,
         cachegen_workers: int = 2,
+        cachegen_pool: Optional[Any] = None,
+        cachegen_fallback: bool = True,
         clock: Optional[Callable[[], float]] = None,
     ):
         self.cache = cache
@@ -173,11 +179,28 @@ class TwoTierRouter:
         # virtual clock; production uses the monotonic perf counter)
         self._clock = clock if clock is not None else time.perf_counter
         self.metrics = RouterMetrics()
-        self._pool = (
-            cf.ThreadPoolExecutor(max_workers=cachegen_workers)
-            if async_cachegen
-            else None
-        )
+        # GUARD — saturated-pool fallback: when an async cachegen
+        # submission is REJECTED (pool saturated / shut down), the wave is
+        # generated synchronously on the request thread instead — slower,
+        # never lost. False is the repro.sim ablation: the rejected wave is
+        # dropped, the silent distillation-loss bug the sim's
+        # ``cachegen_loss`` oracle catches.
+        self.cachegen_fallback = cachegen_fallback
+        # ``cachegen_pool`` is the worker-pool seam: production uses a
+        # private ThreadPoolExecutor; repro.sim injects a pool whose
+        # workers are scheduler-driven sim clients, so the seeded scheduler
+        # owns the admission-race interleavings. An injected pool is not
+        # shut down by close() — its lifecycle belongs to the injector.
+        if cachegen_pool is not None:
+            self._pool: Optional[Any] = cachegen_pool
+            self._owns_pool = False
+        else:
+            self._pool = (
+                cf.ThreadPoolExecutor(max_workers=cachegen_workers)
+                if async_cachegen
+                else None
+            )
+            self._owns_pool = True
         self._pending: List[cf.Future] = []
         self._sync_cachegen_errors: List[BaseException] = []
         self._lock = threading.Lock()
@@ -240,16 +263,15 @@ class TwoTierRouter:
                     raise first_err
                 return items
 
-            if self._pool is not None:
-                with self._lock:
-                    self._pending.append(self._pool.submit(gen_and_insert_wave))
-                self.metrics.async_cachegens += len(wave)
-            else:
-                # sync mode: the batch's plans are already computed and paid
-                # for — defer the wave error to drain()/close() rather than
-                # discarding every served result by raising here. Warn so a
-                # caller that never drains still sees the failure; keep the
-                # stash bounded (first error is what drain re-raises).
+            if self._pool is None or not self._submit_cachegen(
+                gen_and_insert_wave, len(wave)
+            ):
+                # sync mode (or the guarded saturated-pool fallback): the
+                # batch's plans are already computed and paid for — defer
+                # the wave error to drain()/close() rather than discarding
+                # every served result by raising here. Warn so a caller
+                # that never drains still sees the failure; keep the stash
+                # bounded (first error is what drain re-raises).
                 try:
                     gen_and_insert_wave()
                 except Exception as e:
@@ -261,6 +283,30 @@ class TwoTierRouter:
                         if len(self._sync_cachegen_errors) < 16:
                             self._sync_cachegen_errors.append(e)
         return out
+
+    def _submit_cachegen(self, gen: Callable[[], Any], n: int) -> bool:
+        """Hand one cache-generation task to the async pool.
+
+        Returns True when the task was submitted (or, with the
+        ``cachegen_fallback`` guard ablated, dropped); False when the
+        caller must run it synchronously — the GUARD path for a rejected
+        submission (pool saturated or shut down): slower, never lost.
+        """
+        try:
+            fut = self._pool.submit(gen)
+        except Exception:
+            if not self.cachegen_fallback:
+                # ABLATION (repro.sim): the rejected wave is silently
+                # dropped — the distillation loss the cachegen_loss
+                # oracle catches
+                self.metrics.cachegen_dropped += n
+                return True
+            self.metrics.sync_cachegen_fallbacks += n
+            return False
+        with self._lock:
+            self._pending.append(fut)
+        self.metrics.async_cachegens += n
+        return True
 
     def _serve_hit(self, request: Any, tpl: Any) -> Any:
         """Cache hit: cheap tier adapts the cached template (shared by the
@@ -287,11 +333,7 @@ class TwoTierRouter:
                 self.cache.insert(kw, template)
             return template
 
-        if self._pool is not None:
-            with self._lock:
-                self._pending.append(self._pool.submit(gen_and_insert))
-            self.metrics.async_cachegens += 1
-        else:
+        if self._pool is None or not self._submit_cachegen(gen_and_insert, 1):
             gen_and_insert()
         return result
 
@@ -313,5 +355,5 @@ class TwoTierRouter:
 
     def close(self) -> None:
         self.drain()
-        if self._pool is not None:
+        if self._pool is not None and self._owns_pool:
             self._pool.shutdown(wait=True)

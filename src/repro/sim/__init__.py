@@ -2,12 +2,15 @@
 
 FoundationDB-style verification for the serving/distributed layers: a
 seeded virtual clock + step scheduler drive concurrent
-``lookup_batch``/``insert_batch``/``remove``/``autotune`` (and router
-``route_batch``) traffic against ``DistributedPlanCache`` /
-``TwoTierRouter`` under injected faults — shard crash/restart, replica
-lag, hedged-dispatch timeouts, mid-wave eviction — and every run is
-checked against a sequential model-store oracle. A failing run dumps a
-replayable seed file.
+``lookup_batch``/``insert_batch``/``remove``/``autotune`` and
+control-plane ``keys``/``len`` traffic (and router ``route_batch``, with
+async cache-generation workers modeled as scheduler clients) against
+``DistributedPlanCache`` / ``TwoTierRouter`` under injected faults —
+shard crash/restart, elastic membership churn (join/drain), replica lag,
+hedged-dispatch timeouts, rejected cachegen submissions, mid-wave
+eviction — and every run is checked against a sequential model-store
+oracle (similarity-aware in fuzzy mode, so paraphrase resolution is
+verified strictly). A failing run dumps a replayable seed file.
 
 Entry points::
 
@@ -18,12 +21,22 @@ Entry points::
 Library use::
 
     from repro.sim import SimConfig, run_sim
-    report = run_sim(SimConfig(seed=7, fault="replica_lag"))
+    report = run_sim(SimConfig(seed=7, fault="membership_churn"))
     assert report.ok and report.trace_hash == run_sim(...).trace_hash
+
+The operator's handbook (seed/replay workflow, fault-plan catalog, oracle
+guarantees, reading a red run) lives in ``docs/simulation.md``.
 """
 
 from repro.sim.clock import VirtualClock
-from repro.sim.faults import ABLATION_OF, FAULT_PLANS, SimInterceptor
+from repro.sim.faults import (
+    ABLATION_OF,
+    ALL_ABLATIONS,
+    FAULT_PLANS,
+    SCENARIO_ABLATION_OF,
+    SimCachegenPool,
+    SimInterceptor,
+)
 from repro.sim.harness import SimConfig, SimReport, run_sim
 from repro.sim.oracle import ModelStore, Violation, make_value, value_torn
 from repro.sim.scheduler import StepScheduler
@@ -31,8 +44,11 @@ from repro.sim.trace import TraceRecorder
 
 __all__ = [
     "ABLATION_OF",
+    "ALL_ABLATIONS",
     "FAULT_PLANS",
     "ModelStore",
+    "SCENARIO_ABLATION_OF",
+    "SimCachegenPool",
     "SimConfig",
     "SimInterceptor",
     "SimReport",

@@ -26,7 +26,12 @@ import sys
 from typing import List
 
 from repro.envs.workloads import SIM_SCENARIOS
-from repro.sim.faults import ABLATION_OF, FAULT_PLANS
+from repro.sim.faults import (
+    ABLATION_OF,
+    ALL_ABLATIONS,
+    FAULT_PLANS,
+    SCENARIO_ABLATION_OF,
+)
 from repro.sim.harness import SimConfig, run_sim
 from repro.sim.trace import TraceRecorder
 
@@ -111,12 +116,25 @@ def cmd_check(args) -> int:
                     red.append(f"{tag}: nondeterministic trace")
                     _fail_dump(report, args.dump_dir, tag)
         if args.ablation_audit:
-            for fault, guard in sorted(ABLATION_OF.items()):
-                cfg = SimConfig(seed=seed, fault=fault, n_ops=args.ops,
-                                ablate=(guard,))
+            # fault-plan guards, plus the scenario-tied guards (e.g. the
+            # fuzzy scatter, audited under paraphrase traffic with no
+            # fault plan): every ablated guard must trip its oracle
+            audit_cells = [
+                SimConfig(seed=seed, fault=fault, n_ops=args.ops,
+                          ablate=(guard,))
+                for fault, guard in sorted(ABLATION_OF.items())
+            ] + [
+                # replication=1: scenario guards (fuzzy scatter) are
+                # load-bearing exactly when a key has no replica tier to
+                # hide behind, so that is where their loss must show
+                SimConfig(seed=seed, scenario=scenario, n_ops=args.ops,
+                          replication=1, ablate=(guard,))
+                for scenario, guard in sorted(SCENARIO_ABLATION_OF.items())
+            ]
+            for cfg in audit_cells:
                 cells += 1
                 report = run_sim(cfg)
-                tag = f"s{seed}-ablate-{guard}"
+                tag = f"s{seed}-ablate-{cfg.ablate[0]}"
                 if not report.violations:
                     red.append(f"{tag}: guard ablated but NO oracle fired "
                                "(the sim lost its teeth)")
@@ -159,7 +177,7 @@ def main(argv=None) -> int:
                     help="ops per simulated client (4 clients)")
     ap.add_argument("--ablate", default="",
                     help="comma-joined guard ablations "
-                         f"({sorted(set(ABLATION_OF.values()))})")
+                         f"({list(ALL_ABLATIONS)})")
     ap.add_argument("--check", action="store_true",
                     help="run the seeds x scenarios x faults CI matrix")
     ap.add_argument("--seeds", type=int, default=5,

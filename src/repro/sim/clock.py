@@ -7,7 +7,10 @@ accepts a ``clock`` callable. In production that is ``time.time`` /
 advanced explicitly by the step scheduler — no BEHAVIOR-affecting
 wall-clock read reaches the system under test, so a run's observable
 behavior (and its trace hash) is a pure function of ``(seed, config)``.
-Pure wall-latency metrics (``CacheStats.lookup_time_s``) still read the
+Every simulated cost charges this clock: the fault interceptor's
+per-shard RPC latency (data-plane AND control-plane ops), the cachegen
+pool's submit latency, and the scheduler's per-step tick. Pure
+wall-latency metrics (``CacheStats.lookup_time_s``) still read the
 perf counter; they feed no decision and are excluded from the trace.
 """
 

@@ -1,9 +1,9 @@
-"""Fault plans + the shard-call fault interceptor.
+"""Fault plans + the shard-call fault interceptor + the sim cachegen pool.
 
 Faults are scheduled through :class:`repro.distributed.fault.FaultSchedule`
 — the same ``inject(step, kind, **details)`` path the training-side
 ``FaultTolerantRunner`` uses — and fire at their step inside the scheduler
-loop. The four built-in plans each target one guard in the serving /
+loop. The built-in plans each target one guard in the serving /
 distributed layers; ablating that guard (``SimConfig.ablate``) must make
 an oracle fire, which is how the sim proves its oracles have teeth:
 
@@ -16,12 +16,22 @@ plan                      guard under test                            ablation k
                           (``ack_policy="all"``)
 ``hedge_timeout``         hedged-dispatch failover in ``TierPool``    ``hedge_failover``
 ``mid_wave_evict``        evict-AFTER-admission-wave in ``PlanCache``  ``evict_after_wave``
+``membership_churn``      ring changes re-home data (``add_node``     ``churn_rehome``
+                          rebalances, ``remove_node`` drains)
+``async_cachegen``        rejected-submission sync fallback in        ``cachegen_fallback``
+                          ``TwoTierRouter`` (no dropped waves)
 ========================  ==========================================  ===========================
+
+One guard is tied to a *scenario* rather than a fault plan: the fuzzy
+scatter in ``DistributedPlanCache._probe_order`` (a similar key hashes to
+its own owners, so fuzzy reads must reach every shard). Its ablation key
+is ``fuzzy_scatter`` and the ``paraphrase_burst`` scenario's
+similarity-aware oracle catches it (``SCENARIO_ABLATION_OF``).
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Set
+from typing import Any, Callable, Dict, List, Optional, Set
 
 from repro.core.distributed_cache import ShardUnavailable
 from repro.distributed.fault import FaultSchedule
@@ -29,7 +39,7 @@ from repro.sim.clock import VirtualClock
 from repro.sim.scheduler import StepScheduler
 
 FAULT_PLANS = ("none", "crash_restart", "replica_lag", "hedge_timeout",
-               "mid_wave_evict")
+               "mid_wave_evict", "membership_churn", "async_cachegen")
 
 # guard-ablation keys, by the plan whose oracle they trip
 ABLATION_OF = {
@@ -37,7 +47,18 @@ ABLATION_OF = {
     "replica_lag": "replica_ack",
     "hedge_timeout": "hedge_failover",
     "mid_wave_evict": "evict_after_wave",
+    "membership_churn": "churn_rehome",
+    "async_cachegen": "cachegen_fallback",
 }
+
+# guard-ablation keys tripped by a traffic scenario instead of a fault plan
+SCENARIO_ABLATION_OF = {
+    "paraphrase_burst": "fuzzy_scatter",
+}
+
+ALL_ABLATIONS = tuple(sorted(
+    set(ABLATION_OF.values()) | set(SCENARIO_ABLATION_OF.values())
+))
 
 
 class SimInterceptor:
@@ -99,6 +120,85 @@ class SimInterceptor:
         self.crashed.discard(node)
 
 
+class SimCachegenFuture:
+    """Future-compatible handle for a scheduler-driven cachegen task."""
+
+    def __init__(self) -> None:
+        self._done = False
+        self._result: Any = None
+
+    def set_result(self, value: Any) -> None:
+        self._done = True
+        self._result = value
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._done:
+            # the scheduler runs every queued worker op before quiescence,
+            # so an unresolved future at drain() time is a harness bug
+            raise RuntimeError("sim cachegen task never ran")
+        return self._result
+
+    def cancel(self) -> bool:
+        return False
+
+
+class SimCachegenPool:
+    """The router's async cache-generation worker pool, as sim clients.
+
+    Injected as ``TwoTierRouter(cachegen_pool=...)``: instead of a
+    ThreadPoolExecutor, ``submit`` appends a ``{"op": "cachegen"}`` task to
+    one of N pre-registered worker clients (round-robin) on the step
+    scheduler — so the seeded scheduler, not a thread race, decides when a
+    distilled admission wave lands relative to concurrent lookups, inserts
+    and removals. That is exactly the §4.3 admission race the paper defers.
+
+    ``arm_saturation(calls)`` makes the next ``calls`` submissions raise
+    (an injected "pool saturated" rejection): the router's guarded response
+    is the synchronous fallback; with ``cachegen_fallback`` ablated the
+    wave is dropped, which the harness's ``cachegen_loss`` oracle catches.
+    """
+
+    def __init__(
+        self,
+        scheduler: StepScheduler,
+        clock: VirtualClock,
+        *,
+        workers: int = 2,
+        submit_latency_s: float = 1e-4,
+    ):
+        self.scheduler = scheduler
+        self.clock = clock
+        self.submit_latency_s = submit_latency_s
+        self.worker_names = [f"cachegen-{i}" for i in range(workers)]
+        for name in self.worker_names:
+            scheduler.add_client(name, [])
+        self._rr = 0
+        self.saturate_budget = 0
+        self.submitted = 0
+        self.rejected = 0
+
+    def arm_saturation(self, calls: int) -> None:
+        self.saturate_budget = calls
+
+    def submit(self, fn: Callable[[], Any]) -> SimCachegenFuture:
+        self.clock.advance(self.submit_latency_s)
+        if self.saturate_budget > 0:
+            self.saturate_budget -= 1
+            self.rejected += 1
+            raise RuntimeError("cachegen pool saturated (injected fault)")
+        fut = SimCachegenFuture()
+        worker = self.worker_names[self._rr % len(self.worker_names)]
+        self._rr += 1
+        self.scheduler.extend_client(
+            worker, [{"op": "cachegen", "fn": fn, "future": fut}]
+        )
+        self.submitted += 1
+        return fut
+
+
 class EngineFaultState:
     """Hedge-timeout fault state shared with the sim's fake tier engines:
     while ``budget > 0``, the named engine raises ``TimeoutError`` (one
@@ -128,7 +228,12 @@ def build_fault_schedule(plan: str, n_steps: int, *, node: str = "cache-1",
       * ``lag``                — set the interceptor's replica lag;
       * ``hedge_timeout``      — arm the large-tier engine timeout;
       * ``evict_pressure``     — marker only: the mid-wave plan does its
-        damage through config (tiny capacity + flood waves), not events.
+        damage through config (tiny capacity + flood waves), not events;
+      * ``join``/``drain``     — elastic membership: ``add_node`` a fresh
+        node mid-wave / gracefully ``remove_node`` one, racing the client
+        traffic (``membership_churn``);
+      * ``pool_saturate``      — arm N rejected cachegen submissions on
+        the sim worker pool (``async_cachegen``).
     """
     if plan not in FAULT_PLANS:
         raise ValueError(f"unknown fault plan {plan!r}; one of {FAULT_PLANS}")
@@ -152,13 +257,34 @@ def build_fault_schedule(plan: str, n_steps: int, *, node: str = "cache-1",
         sched.inject(3 * q, "hedge_timeout", engine="large-0", calls=8)
     elif plan == "mid_wave_evict":
         sched.inject(q, "evict_pressure")
+    elif plan == "membership_churn":
+        # join mid-wave, graceful drain racing lookups, a crash held open
+        # across a join (rebalance with an unreachable shard), a restart
+        # whose read-repair runs against the post-churn ring, and a drain
+        # of the earlier joiner — every ring change mirrored by the model
+        sched.inject(q // 2, "join", node="cache-join-0")
+        sched.inject(q, "drain", node=node)
+        sched.inject(2 * q, "crash", node="cache-2")
+        sched.inject(2 * q + 2, "join", node="cache-join-1")
+        sched.inject(3 * q, "restart", node="cache-2", recover=True)
+        sched.inject(3 * q + q // 2, "drain", node="cache-join-0")
+    elif plan == "async_cachegen":
+        # two bursts of rejected cachegen submissions: the guarded router
+        # falls back to synchronous generation; the ablated router drops
+        # the distilled waves (cachegen_loss oracle)
+        sched.inject(q, "pool_saturate", calls=6)
+        sched.inject(3 * q, "pool_saturate", calls=6)
     return sched
 
 
 __all__ = [
     "ABLATION_OF",
+    "ALL_ABLATIONS",
     "EngineFaultState",
     "FAULT_PLANS",
+    "SCENARIO_ABLATION_OF",
+    "SimCachegenFuture",
+    "SimCachegenPool",
     "SimInterceptor",
     "build_fault_schedule",
 ]

@@ -2,11 +2,13 @@
 
 One :func:`run_sim` call is one deterministic universe: a seeded virtual
 clock and step scheduler drive concurrent ``lookup_batch`` /
-``insert_batch`` / ``remove`` / ``autotune`` traffic (and, for router
-scenarios, whole ``route_batch`` admission waves through a
-``TwoTierRouter`` over hedged ``TierPool``\\ s) against a
+``insert_batch`` / ``remove`` / ``autotune`` / ``keys`` / ``len`` traffic
+(and, for router scenarios, whole ``route_batch`` admission waves through
+a ``TwoTierRouter`` over hedged ``TierPool``\\ s, with async
+cache-generation workers modeled as scheduler clients) against a
 ``DistributedPlanCache`` while a fault plan crashes/restarts shards,
-injects replica lag, or times out tier engines. Every applied operation is
+joins/drains membership, injects replica lag, rejects cachegen
+submissions, or times out tier engines. Every applied operation is
 simultaneously replayed on the sequential :class:`~repro.sim.oracle.
 ModelStore`; divergence is a :class:`~repro.sim.oracle.Violation`.
 
@@ -26,14 +28,22 @@ from repro.serving.router import TierPool, TwoTierRouter
 from repro.sim.clock import VirtualClock
 from repro.sim.faults import (
     ABLATION_OF,
+    ALL_ABLATIONS,
     FAULT_PLANS,
+    SCENARIO_ABLATION_OF,
     EngineFaultState,
+    SimCachegenPool,
     SimInterceptor,
     build_fault_schedule,
 )
 from repro.sim.oracle import ModelStore, Violation, make_value, value_torn
 from repro.sim.scheduler import StepScheduler
 from repro.sim.trace import TraceRecorder
+
+# ablation keys consumed by DistributedPlanCache's own seams (the rest are
+# consumed by the harness/router wiring below)
+_STORE_ABLATIONS = ("crash_fallthrough", "evict_after_wave", "churn_rehome",
+                    "fuzzy_scatter")
 
 
 @dataclass
@@ -49,14 +59,21 @@ class SimConfig:
     capacity_per_node: int = 512
     eviction: str = "lru"
     fuzzy: bool = False
+    fuzzy_threshold: float = 0.8
     router: bool = False  # drive route_batch through TwoTierRouter
+    async_cachegen: bool = False  # model the cachegen pool as sim clients
+    cachegen_workers: int = 2
     lag_steps: int = 6
-    ablate: Tuple[str, ...] = ()  # guard ablations (faults.ABLATION_OF values)
+    ablate: Tuple[str, ...] = ()  # guard ablations (faults.ALL_ABLATIONS)
 
     def normalized(self) -> "SimConfig":
         """Fill in plan-specific defaults (documented per fault plan)."""
         cfg = self
         if cfg.fault == "hedge_timeout" and not cfg.router:
+            cfg = replace(cfg, router=True)
+        if cfg.fault == "async_cachegen":
+            cfg = replace(cfg, router=True, async_cachegen=True)
+        if cfg.async_cachegen and not cfg.router:
             cfg = replace(cfg, router=True)
         if cfg.fault == "mid_wave_evict":
             # single-shard store under real eviction pressure: waves are
@@ -87,6 +104,7 @@ class SimReport:
     store_stats: Dict[str, Any]
     router_metrics: Optional[Dict[str, Any]] = None
     interceptor: Dict[str, int] = field(default_factory=dict)
+    cachegen: Optional[Dict[str, int]] = None
     trace_tail: List[Dict[str, Any]] = field(default_factory=list)
 
     @property
@@ -107,6 +125,30 @@ class _FakeEngine:
         return {"plan": f"{self.name}:{req['kw']}"}
 
 
+class _RecordingStore:
+    """Forwarding proxy over the store under test that records every
+    ``insert_batch`` wave. The router (sync OR async cachegen) distills
+    misses through this seam, so the harness can mirror each admission
+    wave into the sequential model at the exact step it actually lands —
+    which is precisely what makes the async admission race checkable."""
+
+    def __init__(self, store: DistributedPlanCache):
+        self._store = store
+        self._waves: List[List[Tuple[str, Any]]] = []
+
+    def insert_batch(self, items, **kw):
+        items = list(items)
+        self._waves.append(items)
+        return self._store.insert_batch(items, **kw)
+
+    def drain_waves(self) -> List[List[Tuple[str, Any]]]:
+        waves, self._waves = self._waves, []
+        return waves
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self._store, name)
+
+
 def run_sim(config: SimConfig) -> SimReport:
     cfg = config.normalized()
     if cfg.scenario not in SIM_SCENARIOS:
@@ -120,11 +162,11 @@ def run_sim(config: SimConfig) -> SimReport:
     violations: List[Violation] = []
     engine_faults = EngineFaultState()
 
-    known = set(ABLATION_OF.values())
-    unknown = set(cfg.ablate) - known
+    unknown = set(cfg.ablate) - set(ALL_ABLATIONS)
     if unknown:
         raise ValueError(
-            f"unknown ablation key(s) {sorted(unknown)}; valid: {sorted(known)}"
+            f"unknown ablation key(s) {sorted(unknown)}; "
+            f"valid: {list(ALL_ABLATIONS)}"
         )
 
     interceptor = SimInterceptor(scheduler, clock)
@@ -133,12 +175,12 @@ def run_sim(config: SimConfig) -> SimReport:
         replication=cfg.replication,
         capacity_per_node=cfg.capacity_per_node,
         fuzzy=cfg.fuzzy,
+        fuzzy_threshold=cfg.fuzzy_threshold,
         eviction=cfg.eviction,
         clock=clock,
         interceptor=interceptor,
         ack_policy="primary" if "replica_ack" in cfg.ablate else "all",
-        ablate=[a for a in cfg.ablate
-                if a in ("crash_fallthrough", "evict_after_wave")],
+        ablate=[a for a in cfg.ablate if a in _STORE_ABLATIONS],
     )
     interceptor.lag_steps = cfg.lag_steps
 
@@ -147,12 +189,24 @@ def run_sim(config: SimConfig) -> SimReport:
         capacity_per_node=cfg.capacity_per_node,
         eviction=cfg.eviction,
         exact_only=not cfg.fuzzy,
+        fuzzy=cfg.fuzzy,
+        fuzzy_threshold=cfg.fuzzy_threshold,
     )
-    for name in sorted(store.shards):
+    for name in list(store.shards):
         model.add_node(name)
 
+    # the worker clients must exist before client traffic is added so the
+    # scheduler's seeded choice set is stable in both router modes
+    cachegen_pool: Optional[SimCachegenPool] = None
+    if cfg.router and cfg.async_cachegen:
+        cachegen_pool = SimCachegenPool(
+            scheduler, clock, workers=cfg.cachegen_workers
+        )
+
     router: Optional[TwoTierRouter] = None
+    rec: Optional[_RecordingStore] = None
     if cfg.router:
+        rec = _RecordingStore(store)
         large = TierPool(
             "large",
             replicas=[_FakeEngine("large-0", engine_faults),
@@ -164,7 +218,7 @@ def run_sim(config: SimConfig) -> SimReport:
             "small", replicas=[_FakeEngine("small-0", engine_faults)]
         )
         router = TwoTierRouter(
-            store,
+            rec,
             extract_keyword=lambda r: r["kw"],
             plan_large=lambda r: large.dispatch(
                 lambda eng: eng.plan(r), hedge=True
@@ -173,12 +227,29 @@ def run_sim(config: SimConfig) -> SimReport:
                 "plan": f"small:{r['kw']}", "tpl": tpl
             },
             make_template=lambda r, res: make_value(r["kw"], 0),
-            async_cachegen=False,  # sync: sim owns the interleaving
+            # async: the sim pool's workers are scheduler clients, so the
+            # seeded scheduler owns the admission-race interleavings; sync:
+            # the wave lands inside the route op itself
+            async_cachegen=cfg.async_cachegen,
+            cachegen_pool=cachegen_pool,
+            cachegen_fallback="cachegen_fallback" not in cfg.ablate,
             clock=clock,
         )
 
     versions: Dict[str, int] = {}
     counters = {"ops": 0, "lookups": 0, "inserts": 0}
+    distill = {"expected": 0, "landed": 0}
+
+    def mirror_recorded_waves() -> None:
+        """Replay the router's recorded admission waves on the model at
+        the step they landed (sync: inside the route op; async: inside the
+        cachegen worker op the scheduler chose to run)."""
+        for wave in rec.drain_waves():
+            for kw, _ in wave:
+                versions.setdefault(kw, 0)
+            model.insert_wave(wave)
+            counters["inserts"] += len(wave)
+            distill["landed"] += len(wave)
 
     # ---- op application ----------------------------------------------------
 
@@ -192,9 +263,15 @@ def run_sim(config: SimConfig) -> SimReport:
             if expected is not None and real is None:
                 violations.append(Violation(
                     step, "durability",
-                    f"{kw!r} acked v{expected['v']} but came back MISS"))
+                    f"{kw!r} acked as {expected['k']!r} v{expected['v']} "
+                    "but came back MISS"))
             elif expected is not None and real is not None:
-                if real.get("k") == kw and real.get("v") != expected["v"]:
+                if real.get("k") != expected["k"]:
+                    violations.append(Violation(
+                        step, "resolution",
+                        f"{kw!r} resolved to {real.get('k')!r}, model "
+                        f"resolves to {expected['k']!r}"))
+                elif real.get("v") != expected["v"]:
                     violations.append(Violation(
                         step, "linearizability",
                         f"{kw!r} stale read: got v{real.get('v')}, "
@@ -230,6 +307,25 @@ def run_sim(config: SimConfig) -> SimReport:
         elif kind == "autotune":
             actions = store.autotune()
             trace.record(step, client, "autotune", None, actions)
+        elif kind == "keys":
+            # control-plane scan: pays one seam RPC per reachable shard
+            got = store.keys()
+            want = model.visible_keys()
+            if got != want:
+                diff = sorted(set(got) ^ set(want))
+                violations.append(Violation(
+                    step, "control_plane",
+                    f"keys() saw {len(got)} keys, model says {len(want)} "
+                    f"(diff {diff[:4]}...)"))
+            trace.record(step, client, "keys", None, len(got))
+        elif kind == "len":
+            got = len(store)
+            want = len(model.visible_keys())
+            if got != want:
+                violations.append(Violation(
+                    step, "control_plane",
+                    f"len() == {got}, model says {want}"))
+            trace.record(step, client, "len", None, got)
         else:
             raise ValueError(f"unknown sim op {kind!r}")
 
@@ -249,16 +345,16 @@ def run_sim(config: SimConfig) -> SimReport:
             if res is None:
                 violations.append(Violation(
                     step, "completeness", f"request {kw!r} got no response"))
-        # mirror the router's distillation: misses insert a v0 template at
-        # the model's owners (make_template above emits version 0)
-        miss_items = []
-        for kw, res in zip(kws, out):
-            if res is not None and res["plan"].startswith("large"):
-                versions.setdefault(kw, 0)
-                miss_items.append((kw, make_value(kw, 0)))
-        if miss_items:
-            model.insert_wave(miss_items)
-            counters["inserts"] += len(miss_items)
+        # every large-tier miss owes the cache exactly one distilled
+        # template (make_template above never returns None); the
+        # cachegen_loss oracle settles the account at quiescence
+        distill["expected"] += sum(
+            1 for res in out
+            if res is not None and res["plan"].startswith("large")
+        )
+        # sync mode (and the guarded saturated-pool fallback) lands the
+        # wave inside this op; async waves land in a cachegen worker op
+        mirror_recorded_waves()
         # record the TIER only: which hedged replica won a two-success race
         # is real concurrency the sim tolerates; the tier (and everything
         # downstream of it) must be deterministic
@@ -267,9 +363,27 @@ def run_sim(config: SimConfig) -> SimReport:
                       else ("small" if r["plan"].startswith("small") else "large")
                       for r in out])
 
+    def apply_cachegen_op(step: int, client: str, op: Dict[str, Any]) -> None:
+        try:
+            items = op["fn"]()
+        except Exception as e:
+            op["future"].set_result(None)
+            violations.append(Violation(
+                step, "cachegen_error",
+                f"async cache generation raised {e!r}"))
+            trace.record(step, client, "cachegen", None,
+                         f"ERROR:{type(e).__name__}")
+            return
+        op["future"].set_result(items)
+        mirror_recorded_waves()
+        trace.record(step, client, "cachegen",
+                     [kw for kw, _ in (items or [])], len(items or []))
+
     def on_op(step: int, client: str, op: Dict[str, Any]) -> None:
         counters["ops"] += 1
-        if router is not None and op["op"] in ("lookup", "insert"):
+        if op["op"] == "cachegen":
+            apply_cachegen_op(step, client, op)
+        elif router is not None and op["op"] in ("lookup", "insert"):
             apply_router_op(step, client, op)
         else:
             apply_store_op(step, client, op)
@@ -292,6 +406,18 @@ def run_sim(config: SimConfig) -> SimReport:
             interceptor.lag_steps = d["steps"]
         elif spec.kind == "hedge_timeout":
             engine_faults.arm(d["engine"], d["calls"])
+        elif spec.kind == "join":
+            # elastic scale-out: the facade rebalances (unless the
+            # churn_rehome guard is ablated); the model mirrors the ring
+            # change with the CORRECT re-home semantics
+            store.add_node(d["node"])
+            model.join(d["node"])
+        elif spec.kind == "drain":
+            store.remove_node(d["node"])
+            model.drain(d["node"])
+        elif spec.kind == "pool_saturate":
+            if cachegen_pool is not None:
+                cachegen_pool.arm_saturation(d["calls"])
         trace.record(step, "fault", spec.kind, d)
 
     # ---- run ---------------------------------------------------------------
@@ -317,6 +443,12 @@ def run_sim(config: SimConfig) -> SimReport:
             violations.append(Violation(
                 steps, "stats_conservation",
                 f"router hits+misses={m.hits + m.misses} != requests={m.requests}"))
+        if distill["landed"] != distill["expected"]:
+            violations.append(Violation(
+                steps, "cachegen_loss",
+                f"{distill['expected']} miss distillation(s) owed, "
+                f"{distill['landed']} landed — admission waves were "
+                "dropped"))
     s = store.stats
     if s.hits + s.misses != counters["lookups"]:
         violations.append(Violation(
@@ -331,14 +463,15 @@ def run_sim(config: SimConfig) -> SimReport:
     if not cfg.fuzzy and cfg.fault in ("none", "mid_wave_evict"):
         # eviction conservation: the store must evict exactly the victims
         # the sequential policy replay evicts (a shard restart would reset
-        # shard counters, so crash plans skip this check)
+        # shard counters, so crash plans skip this check; fuzzy cells skip
+        # it because intra-wave touch ORDER is not modeled — see oracle.py)
         shard_evictions = sum(sh.stats.evictions for sh in store.shards.values())
         if shard_evictions != model.evictions:
             violations.append(Violation(
                 steps, "eviction_order",
                 f"store evicted {shard_evictions} entries, policy replay "
                 f"says {model.evictions}"))
-    if not cfg.fuzzy and cfg.fault == "none" and not cfg.ablate:
+    if cfg.fault == "none" and not cfg.ablate:
         if store.keys() != model.keys():
             violations.append(Violation(
                 steps, "linearizability",
@@ -362,9 +495,16 @@ def run_sim(config: SimConfig) -> SimReport:
             "failed_calls": interceptor.failed_calls,
             "deferred_writes": interceptor.deferred_writes,
         },
+        cachegen=(
+            None if cachegen_pool is None else {
+                "submitted": cachegen_pool.submitted,
+                "rejected": cachegen_pool.rejected,
+            }
+        ),
         trace_tail=trace.tail,
     )
 
 
 # re-export for CLI/tests convenience
-__all__ = ["ABLATION_OF", "FAULT_PLANS", "SimConfig", "SimReport", "run_sim"]
+__all__ = ["ABLATION_OF", "ALL_ABLATIONS", "FAULT_PLANS",
+           "SCENARIO_ABLATION_OF", "SimConfig", "SimReport", "run_sim"]

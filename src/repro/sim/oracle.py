@@ -1,31 +1,54 @@
 """Sequential model-store oracle + invariant checks.
 
 The model is the FoundationDB-style "obviously correct" twin: plain dicts
-and lists, single-threaded, no locks, no batching, no indexes. The step
-scheduler serializes every operation, so the linearization order is known;
-the optimized store must agree with the model applied in that order, up to
-the documented divergences (a fuzzy pipeline may resolve keys the model
-treats as misses — those results are checked for integrity, not equality).
+and lists, single-threaded, no locks, no batching. The step scheduler
+serializes every operation, so the linearization order is known; the
+optimized store must agree with the model applied in that order.
 
-Checked invariants:
+With ``fuzzy=True`` the model is *similarity-aware*: each node carries a
+twin ``repro.index.SimilarityIndex`` over its local keys (the shared
+embedding fixture — the same hashed-ngram ``embed`` the real shards use),
+mirrored call-for-call, so the model predicts exactly which stored key a
+paraphrase lookup resolves to. Paraphrase scenarios are therefore STRICT:
+a fuzzy miss the model would have resolved is a durability violation and a
+fuzzy hit the model says cannot happen is a phantom, where the pre-churn
+model could only integrity-check them.
+
+Membership is mirrored too: ``join`` replays ``add_node`` + ``_rebalance``
+(ring change, per-shard scan skipping unreachable nodes, stale-owner
+removal, re-home with per-node eviction) and ``drain`` replays the
+graceful ``remove_node`` re-home — so elastic churn keeps the model exact.
+
+Checked invariants (consumed by ``repro.sim.harness``):
 
 * **durability / linearizability** — a key the model says is resolvable
   (inserted, acked, replicated, not evicted/removed) must come back, at
   the acked version;
-* **phantom** — in exact mode, a key the model says is absent must miss;
+* **resolution / phantom** — a lookup must resolve to exactly the key the
+  model resolves it to (exact or fuzzy); a key the model says is absent
+  must miss;
 * **no torn entries** — every returned value's embedded checksum must
   verify (a torn/partially-applied write cannot masquerade as a hit);
 * **stats conservation** — ``hits + misses == lookups`` and
   ``inserts == items offered`` on the facade's own counters;
 * **capacity / eviction order** — no shard exceeds capacity, and the
   model replays the eviction policy (LRU / cost) so a wrong victim shows
-  up as durability (evicted survivor) or phantom (surviving victim).
+  up as durability (evicted survivor) or phantom (surviving victim);
+* **control plane** — ``keys()``/``len()`` must equal the union of the
+  model's reachable nodes.
+
+Known modeling limit: within ONE batched lookup wave the real store
+touches recency grouped per shard per tier while the model touches in
+wave order, so LRU tie order *inside a single wave* is not mirrored. The
+eviction-order oracle therefore runs on exact-mode cells (where waves are
+the admission kind the contract pins), not fuzzy cells — see the
+harness's gating and ``docs/simulation.md``.
 """
 
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.distributed_cache import HashRing
@@ -65,6 +88,9 @@ class ModelStore:
         eviction: str = "lru",
         vnodes: int = 64,
         exact_only: bool = True,
+        fuzzy: bool = False,
+        fuzzy_threshold: float = 0.8,
+        index_backend: str = "auto",
     ):
         if eviction not in ("lru", "cost"):
             raise ValueError("model replays eviction for 'lru' and 'cost' only")
@@ -72,11 +98,15 @@ class ModelStore:
         self.capacity = capacity_per_node
         self.eviction = eviction
         self.exact_only = exact_only
+        self.fuzzy = fuzzy
+        self.fuzzy_threshold = fuzzy_threshold
+        self.index_backend = index_backend
         self.ring = HashRing(vnodes)
         self.nodes: Dict[str, Dict[str, Any]] = {}
         self.hits: Dict[str, Dict[str, int]] = {}
         self.order: Dict[str, List[str]] = {}  # LRU recency, oldest first
         self.seq: Dict[str, Dict[str, int]] = {}  # stable dict-order mirror
+        self.sim: Dict[str, Any] = {}  # per-node SimilarityIndex twins
         self._next_seq = 0
         self.crashed: set = set()
         self.evictions = 0
@@ -90,7 +120,61 @@ class ModelStore:
         self.hits[name] = {}
         self.order[name] = []
         self.seq[name] = {}
+        if self.fuzzy:
+            from repro.index import SimilarityIndex
+
+            # the twin index: same backend, mirrored call-for-call, so
+            # scores/slots/tie-breaks are bit-identical to the shard's
+            self.sim[name] = SimilarityIndex(backend=self.index_backend)
         self.ring.add(name)
+
+    def join(self, name: str) -> None:
+        """Mirror of ``add_node`` on a live cluster: ring change + the
+        ``_rebalance`` re-home (the churn-rehoming guard's CORRECT
+        semantics — an ablated store diverges from this and the durability
+        oracle catches it)."""
+        if name in self.nodes:
+            return
+        self.add_node(name)
+        self._rebalance()
+
+    def drain(self, name: str) -> None:
+        """Mirror of graceful ``remove_node``: the drain scan re-homes the
+        node's keys to their new owners — unless the node is unreachable,
+        in which case its copies are lost with it (crash-style removal)."""
+        if name not in self.nodes:
+            return
+        pairs = (
+            [] if name in self.crashed else list(self.nodes[name].items())
+        )
+        self._drop_node(name)
+        for kw, v in pairs:
+            self._insert_single(kw, v)
+
+    def _drop_node(self, name: str) -> None:
+        del self.nodes[name]
+        del self.hits[name]
+        del self.order[name]
+        del self.seq[name]
+        self.sim.pop(name, None)
+        self.ring.remove(name)
+        self.crashed.discard(name)
+
+    def _rebalance(self) -> None:
+        """Mirror of ``DistributedPlanCache._rebalance``: scan shards in
+        membership order (an unreachable shard keeps its keys), collect
+        keys whose owner set no longer includes their holder, then remove
+        from the stale owner and re-home with per-node eviction."""
+        moves: List[Tuple[str, str, Any]] = []
+        for node in list(self.nodes):
+            if node in self.crashed:
+                continue  # scan RPC fails: its keys stay put
+            for kw, v in list(self.nodes[node].items()):
+                if node not in self.ring.nodes_for(kw, self.replication):
+                    moves.append((node, kw, v))
+        for node, kw, v in moves:
+            self._remove_from(node, kw)
+            self._insert_single(kw, v)
 
     def crash(self, name: str) -> None:
         self.crashed.add(name)
@@ -105,6 +189,8 @@ class ModelStore:
         self.hits[name] = {}
         self.order[name] = []
         self.seq[name] = {}
+        if self.fuzzy:
+            self.sim[name].clear()
         if not recover:
             return
         for peer in sorted(self.nodes):
@@ -117,6 +203,10 @@ class ModelStore:
                     continue
                 if name in self.ring.nodes_for(kw, self.replication):
                     self._apply(name, kw, v)
+        if self.fuzzy and self.nodes[name]:
+            # the repaired entries land as ONE insert_batch on the real
+            # restarted shard, so the twin ingests them as one batch too
+            self.sim[name].add_batch(list(self.nodes[name]))
         self._evict(name)
 
     # -- write path ----------------------------------------------------------
@@ -132,6 +222,16 @@ class ModelStore:
             self.order[node].remove(kw)
         self.order[node].append(kw)
 
+    def _remove_from(self, node: str, kw: str) -> None:
+        del self.nodes[node][kw]
+        del self.hits[node][kw]
+        self.order[node].remove(kw)
+        # dict-order fidelity: a removed key re-inserts at the END of the
+        # real shard's store dict, so its order stamp must not survive
+        self.seq[node].pop(kw, None)
+        if self.fuzzy:
+            self.sim[node].remove(kw)
+
     def _victim(self, node: str) -> str:
         if self.eviction == "lru":
             return self.order[node][0]
@@ -145,19 +245,26 @@ class ModelStore:
     def _evict(self, node: str) -> None:
         while len(self.nodes[node]) > self.capacity:
             victim = self._victim(node)
-            del self.nodes[node][victim]
-            del self.hits[node][victim]
-            self.order[node].remove(victim)
+            self._remove_from(node, victim)
             self.evictions += 1
 
     def _live_owners(self, kw: str) -> List[str]:
-        # NOTE: the sim injects failures at the RPC layer (crashed), never
-        # via mark_down — a membership-churn fault plan would add that
-        # mirror here (see ROADMAP)
         return [
             n for n in self.ring.nodes_for(kw, self.replication)
             if n in self.nodes
         ]
+
+    def _insert_single(self, kw: str, value: Any) -> None:
+        """Mirror of ``_insert_unlocked`` (the membership re-home path):
+        one key to every reachable owner, evicting after each owner's
+        single-item wave."""
+        for n in self._live_owners(kw):
+            if n in self.crashed:
+                continue  # write RPC failed; remaining owners hold it
+            self._apply(n, kw, value)
+            if self.fuzzy:
+                self.sim[n].add(kw)
+            self._evict(n)
 
     def insert_wave(self, items: Sequence[Tuple[str, Any]]) -> None:
         """Spec semantics: the wave lands on every live owner (crashed
@@ -176,40 +283,66 @@ class ModelStore:
                     continue  # write RPC failed; remaining owners hold it
                 for kw, v in sub:
                     self._apply(n, kw, v)
+                if self.fuzzy:
+                    self.sim[n].add_batch([kw for kw, _ in sub])
                 self._evict(n)
 
     def remove(self, kw: str) -> None:
-        for n in self.nodes:
+        for n in sorted(self.nodes):
             if n in self.crashed:
                 continue  # unreachable; its stale copy dies at restart
             if kw in self.nodes[n]:
-                del self.nodes[n][kw]
-                del self.hits[n][kw]
-                self.order[n].remove(kw)
+                self._remove_from(n, kw)
 
     # -- read path -----------------------------------------------------------
 
+    def _probe_order(self, kw: str) -> List[str]:
+        owners = [n for n in self._live_owners(kw)]
+        if self.fuzzy:
+            owners += [n for n in sorted(self.nodes) if n not in owners]
+        return owners
+
     def lookup(self, kw: str) -> Tuple[Optional[Any], bool]:
-        """(expected value or None, strict) — strict=False means the real
-        store may legitimately answer differently (fuzzy resolution of a
-        key the model cannot predict); the result is then only
-        integrity-checked."""
-        for n in self._live_owners(kw):
+        """(expected value or None, strict).
+
+        Walks the same tiered probe order as the facade — ring owners,
+        then (fuzzy) the remaining shards — resolving per node exactly as
+        the shard's match pipeline does: exact dict membership first, then
+        the twin similarity index at the shard's threshold. With the twin
+        index mirrored call-for-call the prediction is exact, so fuzzy
+        cells are STRICT; ``strict=False`` survives only for the legacy
+        ``exact_only=False`` mode (no similarity model installed)."""
+        for n in self._probe_order(kw):
             if n in self.crashed:
                 continue  # guard spec: reader falls through to next tier
-            v = self.nodes[n].get(kw)
-            if v is not None:
-                self.hits[n][kw] += 1
-                if kw in self.order[n]:
-                    self.order[n].remove(kw)
-                    self.order[n].append(kw)
+            served = kw if kw in self.nodes[n] else None
+            if served is None and self.fuzzy:
+                served = self.sim[n].best_match_batch(
+                    [kw], self.fuzzy_threshold
+                )[0]
+            if served is not None:
+                v = self.nodes[n][served]
+                self.hits[n][served] += 1
+                if served in self.order[n]:
+                    self.order[n].remove(served)
+                    self.order[n].append(served)
                 return v, True
-        return None, self.exact_only
+        return None, True if self.fuzzy else self.exact_only
 
     def keys(self) -> List[str]:
         seen: set = set()
         for store in self.nodes.values():
             seen.update(store)
+        return sorted(seen)
+
+    def visible_keys(self) -> List[str]:
+        """What a control-plane ``keys()`` scan can observe right now:
+        the union of every *reachable* node's keys (a crashed node's seam
+        call fails, so its keys are invisible until it restarts)."""
+        seen: set = set()
+        for n, store in self.nodes.items():
+            if n not in self.crashed:
+                seen.update(store)
         return sorted(seen)
 
 

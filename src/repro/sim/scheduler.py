@@ -40,13 +40,29 @@ class StepScheduler:
         self.tick_s = tick_s
         self.step = 0
         self._clients: List[Tuple[str, List[Dict[str, Any]]]] = []
+        self._queues: Dict[str, List[Dict[str, Any]]] = {}
         self._cursor: Dict[str, int] = {}
         self._deferred: List[Tuple[int, int, Callable[[], None]]] = []
         self._seq = 0  # tie-break so same-step deferred actions keep order
 
     def add_client(self, name: str, ops: List[Dict[str, Any]]) -> None:
         self._clients.append((name, ops))
+        self._queues[name] = ops
         self._cursor[name] = 0
+
+    def extend_client(self, name: str, ops: List[Dict[str, Any]]) -> None:
+        """Append ops to an existing client's queue mid-run.
+
+        This is how dynamically-spawned work enters the interleaving: the
+        sim's async cache-generation pool registers idle worker clients up
+        front and feeds them tasks as the router submits waves, so a
+        worker's op competes for scheduling like any client op (the seeded
+        RNG owns the admission race). A client with new ops becomes
+        runnable again on the next step — quiescence is only declared when
+        every queue (static and dynamically extended) is drained."""
+        if name not in self._queues:
+            raise KeyError(f"unknown scheduler client {name!r}")
+        self._queues[name].extend(ops)
 
     def defer(self, delay_steps: int, fn: Callable[[], None]) -> None:
         """Schedule fn to run at the START of step ``now + delay_steps``

@@ -1,9 +1,13 @@
 """Trace recording + replayable failure seeds.
 
-Every applied operation (client ops, fault firings, deferred lag writes)
-is folded into a running blake2b hash and kept in an in-memory ring. Two
-runs of the same ``(seed, config)`` must produce the identical hash — that
-IS the determinism contract ``python -m repro.sim --seed N`` verifies.
+Every applied operation (client ops, control-plane ``keys``/``len``
+scans, fault firings — including membership ``join``/``drain`` — async
+cachegen worker ops, deferred lag writes) is folded into a running
+blake2b hash and kept in an in-memory ring. Two runs of the same
+``(seed, config)`` must produce the identical hash — that IS the
+determinism contract ``python -m repro.sim --seed N`` verifies. Real
+concurrency the sim tolerates stays OUT of the fold: a hedged dispatch
+records the winning TIER, never which replica won the race.
 
 On an oracle violation the CLI dumps a **repro file** (see
 ``repro.sim.__main__._fail_dump``): the full simulation config plus the

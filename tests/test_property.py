@@ -188,6 +188,103 @@ def test_plan_cache_random_ops_agree_with_dict_model(ops, cap):
     assert sorted(c.keys()) == sorted(model)
 
 
+_CHURN_EVENTS = st.lists(
+    st.tuples(
+        st.sampled_from(["join", "drain", "crash", "restart", "insert",
+                         "lookup"]),
+        st.integers(min_value=0, max_value=9),
+    ),
+    min_size=3, max_size=16,
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(_CHURN_EVENTS, st.integers(min_value=0, max_value=2**16))
+def test_ring_change_sequences_agree_with_model(events, seed):
+    """Churn-vs-oracle property: ANY interleaving of joins, graceful
+    drains, crashes, restarts and data waves must keep DistributedPlanCache
+    in agreement with the ring-change-mirroring ModelStore — every lookup
+    matches the model's prediction, and once every node is reachable again
+    the visible key set matches exactly."""
+    import random as _random
+
+    from repro.core.distributed_cache import DistributedPlanCache, ShardUnavailable
+    from repro.sim.oracle import ModelStore, make_value
+
+    class _Interceptor:
+        def __init__(self):
+            self.crashed = set()
+
+        def call(self, node, op, fn):
+            if node in self.crashed:
+                raise ShardUnavailable(node)
+            return fn()
+
+    rng = _random.Random(seed)
+    ic = _Interceptor()
+    dc = DistributedPlanCache(3, replication=2, capacity_per_node=256,
+                              interceptor=ic)
+    model = ModelStore(replication=2, capacity_per_node=256)
+    for name in list(dc.shards):
+        model.add_node(name)
+
+    kws = [f"kw-{i}" for i in range(24)]
+    versions = {}
+    joined = 0
+
+    def check_lookups(sample):
+        for kw in sample:
+            want, strict = model.lookup(kw)
+            got = dc.lookup(kw)
+            assert not strict or got == want, (kw, got, want)
+
+    for kind, pick in events:
+        members = list(dc.shards)
+        if kind == "join" and len(members) < 8:
+            name = f"cache-join-{joined}"
+            joined += 1
+            dc.add_node(name)
+            model.join(name)
+        elif kind == "drain" and len(members) > 2:
+            name = members[pick % len(members)]
+            dc.remove_node(name)
+            model.drain(name)
+            ic.crashed.discard(name)
+        elif kind == "crash":
+            live = [n for n in members if n not in ic.crashed]
+            if live:
+                name = live[pick % len(live)]
+                ic.crashed.add(name)
+                model.crash(name)
+        elif kind == "restart":
+            down = sorted(ic.crashed)
+            if down:
+                name = down[pick % len(down)]
+                ic.crashed.discard(name)
+                dc.restart_node(name, recover=True)
+                model.restart(name, recover=True)
+        elif kind == "insert":
+            wave = rng.sample(kws, 4)
+            items = []
+            for kw in wave:
+                versions[kw] = versions.get(kw, 0) + 1
+                items.append((kw, make_value(kw, versions[kw])))
+            dc.insert_batch(items)
+            model.insert_wave(items)
+        else:  # lookup
+            check_lookups(rng.sample(kws, 6))
+        check_lookups(rng.sample(kws, 2))
+
+    # quiesce: restart everything still crashed, then the full state and
+    # the control-plane view must agree exactly
+    for name in sorted(ic.crashed):
+        ic.crashed.discard(name)
+        dc.restart_node(name, recover=True)
+        model.restart(name, recover=True)
+    check_lookups(kws)
+    assert dc.keys() == model.visible_keys() == model.keys()
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.dictionaries(st.sampled_from(["company", "year", "student"]),
                        st.text(alphabet="ABCdef123", min_size=2, max_size=8),

@@ -11,6 +11,7 @@ from repro.envs.workloads import SIM_SCENARIOS, sim_traffic
 from repro.sim import (
     ABLATION_OF,
     FAULT_PLANS,
+    SCENARIO_ABLATION_OF,
     ModelStore,
     SimConfig,
     StepScheduler,
@@ -69,11 +70,19 @@ def test_sim_traffic_seeded_and_scenario_shaped():
 def test_fault_plans_clean_under_guards(fault):
     r = run_sim(_cfg(seed=3, fault=fault))
     assert r.ok, r.violations[:3]
-    if fault in ("crash_restart", "replica_lag"):
+    if fault in ("crash_restart", "replica_lag", "membership_churn"):
         assert r.interceptor["failed_calls"] > 0  # the fault actually bit
     if fault == "hedge_timeout":
         assert r.router_metrics is not None
         assert r.router_metrics["requests"] > 0
+    if fault == "async_cachegen":
+        # the pool was exercised AND the saturation bursts forced the
+        # guarded synchronous fallback — with zero dropped waves
+        assert r.cachegen is not None and r.cachegen["submitted"] > 0
+        assert r.cachegen["rejected"] > 0
+        assert r.router_metrics["async_cachegens"] > 0
+        assert r.router_metrics["sync_cachegen_fallbacks"] > 0
+        assert r.router_metrics["cachegen_dropped"] == 0
 
 
 def test_replica_lag_guard_blocks_stale_reads():
@@ -90,9 +99,11 @@ def test_replica_lag_guard_blocks_stale_reads():
 
 EXPECTED_ORACLES = {
     "crash_restart": {"durability"},
-    "replica_lag": {"linearizability", "durability"},
+    "replica_lag": {"linearizability", "durability", "control_plane"},
     "hedge_timeout": {"completeness"},
     "mid_wave_evict": {"eviction_order", "durability", "phantom"},
+    "membership_churn": {"durability", "linearizability", "control_plane"},
+    "async_cachegen": {"cachegen_loss"},
 }
 
 
@@ -105,6 +116,18 @@ def test_guard_ablation_is_caught_by_matching_oracle(fault, guard):
     )
     fired = {v.oracle for v in r.violations}
     assert fired & EXPECTED_ORACLES[fault], (fault, guard, fired)
+
+
+@pytest.mark.parametrize("scenario,guard", sorted(SCENARIO_ABLATION_OF.items()))
+def test_scenario_guard_ablation_is_caught(scenario, guard):
+    """Scenario-tied guards (the fuzzy scatter) are audited at
+    replication=1, where a lost scatter has no replica tier to hide
+    behind: the similarity-aware model still resolves the paraphrase, the
+    ablated store cannot — a durability violation."""
+    r = run_sim(_cfg(seed=3, scenario=scenario, replication=1,
+                     ablate=(guard,)))
+    assert r.violations, f"{scenario} with {guard} ablated stayed green"
+    assert {v.oracle for v in r.violations} & {"durability"}
 
 
 # -- replayable failure seeds --------------------------------------------------
@@ -288,3 +311,158 @@ def test_restart_node_without_repair_loses_replication():
     if held:
         hits = sum(dc.lookup(f"kw-{i}") is not None for i in range(30))
         assert hits == 30 - held  # R=1: the restarted node's keys are gone
+
+
+# -- control-plane ops through the interceptor seam ----------------------------
+
+
+def test_control_plane_ops_pay_and_fail_rpcs():
+    """keys/len/autotune/clear go through the same per-shard seam as the
+    data plane: they charge interceptor calls, and an unreachable shard is
+    skipped — invisible to scans, untouched by clear."""
+    ic = _CrashingInterceptor()
+    dc = DistributedPlanCache(4, replication=1, capacity_per_node=64,
+                              interceptor=ic)
+    for i in range(24):
+        dc.insert(f"kw-{i}", i)
+    held = len(dc.shards["cache-1"])
+    assert held > 0  # 24 keys over 4 shards: cache-1 owns some
+
+    ic.crashed.add("cache-1")
+    visible = dc.keys()
+    assert len(visible) == 24 - held  # unreachable keys are invisible
+    assert len(dc) == len(visible)
+    assert dc.autotune() == []  # runs, skipping the crashed shard
+
+    # clear wipes only reachable shards: the crashed one keeps stale data
+    dc.clear()
+    assert len(dc.shards["cache-1"]) == held
+    ic.crashed.discard("cache-1")
+    assert len(dc) == held  # ...which becomes visible again on recovery
+    dc.restart_node("cache-1", recover=False)  # restart wipes the staleness
+    assert len(dc) == 0
+
+
+def test_graceful_drain_of_unreachable_node_is_crash_style():
+    """remove_node's drain scan goes through the seam: an unreachable
+    node cannot donate its keys, so they are lost with it (replicas
+    permitting), never silently re-homed from data we could not read."""
+    ic = _CrashingInterceptor()
+    dc = DistributedPlanCache(4, replication=1, capacity_per_node=64,
+                              interceptor=ic)
+    for i in range(24):
+        dc.insert(f"kw-{i}", i)
+    held = len(dc.shards["cache-1"])
+    ic.crashed.add("cache-1")
+    dc.remove_node("cache-1")
+    assert "cache-1" not in dc.shards
+    ic.crashed.discard("cache-1")
+    hits = sum(dc.lookup(f"kw-{i}") is not None for i in range(24))
+    assert hits == 24 - held
+
+
+def test_churn_rehome_ablation_loses_moved_keys():
+    """With the churn-rehoming guard ablated, a join does not rebalance
+    and a drain drops its data — at R=1 that is directly observable."""
+    dc = DistributedPlanCache(4, replication=1, capacity_per_node=64,
+                              ablate=("churn_rehome",))
+    for i in range(30):
+        dc.insert(f"kw-{i}", i)
+    dc.add_node("cache-9")  # no rebalance: keys whose owner moved are lost
+    hits = sum(dc.lookup(f"kw-{i}") is not None for i in range(30))
+    assert hits < 30
+
+    ok = DistributedPlanCache(4, replication=1, capacity_per_node=64)
+    for i in range(30):
+        ok.insert(f"kw-{i}", i)
+    ok.add_node("cache-9")  # the guarded store re-homes
+    assert all(ok.lookup(f"kw-{i}") is not None for i in range(30))
+
+
+# -- membership churn vs the ring-change-mirroring model -----------------------
+
+
+def test_membership_churn_plan_clean_and_deterministic():
+    for scenario in ("skewed_reuse", "paraphrase_burst"):
+        cfg = _cfg(seed=7, scenario=scenario, fault="membership_churn")
+        r = run_sim(cfg)
+        assert r.ok, (scenario, r.violations[:3])
+        assert run_sim(cfg).trace_hash == r.trace_hash
+
+
+def test_model_store_join_and_drain_mirror_ring_changes():
+    m = ModelStore(replication=2, capacity_per_node=64)
+    for i in range(3):
+        m.add_node(f"cache-{i}")
+    m.insert_wave([(f"kw-{i}", make_value(f"kw-{i}", 1)) for i in range(20)])
+    m.join("cache-3")  # rebalance: every key still resolvable
+    assert all(m.lookup(f"kw-{i}")[0] is not None for i in range(20))
+    m.drain("cache-0")  # graceful: keys re-homed before the node drops
+    assert "cache-0" not in m.nodes
+    assert all(m.lookup(f"kw-{i}")[0] is not None for i in range(20))
+    # a crashed node drains crash-style: its copies are lost with it
+    m.crash("cache-1")
+    m.drain("cache-1")
+    assert "cache-1" not in m.nodes
+
+
+# -- async cache-generation under the scheduler --------------------------------
+
+
+def test_async_cachegen_plan_clean_and_race_actually_interleaved():
+    """The admission race is real: distilled waves land at scheduler-chosen
+    later steps (worker clients), interleaved with lookups/removals, and
+    the model mirrored every wave at its landing step."""
+    cfg = _cfg(seed=5, fault="async_cachegen")
+    r = run_sim(cfg)
+    assert r.ok, r.violations[:3]
+    assert run_sim(cfg).trace_hash == r.trace_hash
+    assert r.cachegen["submitted"] > 0
+    # async mode really deferred work: more scheduler steps than the pure
+    # client-op count (each submitted wave is one extra worker op)
+    assert r.ops_applied > cfg.n_ops * cfg.n_clients
+
+
+def test_async_admission_race_regression_pinned_seed(tmp_path, capsys):
+    """Regression pin for the async admission race: the ablated router
+    drops saturated waves, the cachegen_loss oracle fires, and the dumped
+    seed replays bit-for-bit (the repro workflow operators rely on)."""
+    from repro.sim.__main__ import main
+
+    rc = main(["--seed", "3", "--fault", "async_cachegen",
+               "--ablate", "cachegen_fallback", "--ops", "30",
+               "--dump-dir", str(tmp_path)])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "cachegen_loss" in out
+    dumps = list(tmp_path.glob("sim-repro-*.json"))
+    assert len(dumps) == 1
+    rc = main(["--replay", str(dumps[0]), "--dump-dir", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "replay reproduced the recorded interleaving exactly" in out
+    assert "cachegen_loss" in out
+
+
+# -- strict paraphrase scenarios (similarity-aware model) ----------------------
+
+
+def test_paraphrase_scenario_is_strict_and_fuzzy_hits_happen():
+    cfg = _cfg(seed=2, scenario="paraphrase_burst")
+    r = run_sim(cfg)
+    assert r.ok, r.violations[:3]
+    assert r.config.fuzzy  # normalized() arms the fuzzy pipeline
+    assert r.store_stats["hits"] > 0  # paraphrases resolved, strictly checked
+
+
+def test_similarity_model_predicts_fuzzy_resolution():
+    m = ModelStore(replication=1, capacity_per_node=64, fuzzy=True)
+    for i in range(2):
+        m.add_node(f"cache-{i}")
+    v = make_value("average of two rows", 1)
+    m.insert_wave([("average of two rows", v)])
+    got, strict = m.lookup("average of two rows from table")
+    assert strict  # similarity-aware: paraphrase predictions are exact
+    assert got == v  # resolves to the canonical entry (cosine >= 0.8)
+    got, strict = m.lookup("entirely unrelated query zz")
+    assert got is None and strict  # and sub-threshold misses are strict too

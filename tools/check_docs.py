@@ -1,6 +1,6 @@
 """Docs hygiene gate (run by the CI docs job and ``make docs-check``).
 
-Three checks, all against the working tree:
+Four checks, all against the working tree:
 
 1. ``README.md`` exists at the repo root.
 2. Every *internal* markdown link in ``README.md`` and ``docs/*.md``
@@ -11,12 +11,18 @@ Three checks, all against the working tree:
    exit 0 (argparse wiring intact, imports clean) and ``make -n
    <target>`` must exit 0 (target exists). This keeps the docs from
    drifting into quoting commands that no longer run.
+4. The operational surface is documented: every fault plan registered in
+   ``repro.sim.faults`` (``FAULT_PLANS``, minus ``none``), every guard
+   ablation key, and every public ``DistributedPlanCache`` method must
+   appear in a code span/fence somewhere in the docs corpus — adding a
+   fault plan or a control-plane method without documenting it fails CI.
 
 Usage:  PYTHONPATH=src python tools/check_docs.py
 """
 
 from __future__ import annotations
 
+import ast
 import os
 import pathlib
 import re
@@ -97,17 +103,72 @@ def check_commands(errors: list) -> int:
     return len(py_mods) + len(make_targets)
 
 
+def public_store_methods() -> list:
+    """Public method names of DistributedPlanCache, from the AST (no
+    import needed, so this works even when runtime deps are missing)."""
+    src = (ROOT / "src/repro/core/distributed_cache.py").read_text()
+    for node in ast.parse(src).body:
+        if isinstance(node, ast.ClassDef) and node.name == "DistributedPlanCache":
+            return sorted(
+                n.name for n in node.body
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and not n.name.startswith("_")
+            )
+    raise SystemExit("FAIL: DistributedPlanCache not found in distributed_cache.py")
+
+
+def _module_literal(path: pathlib.Path, name: str):
+    """Value of a module-level literal assignment, via the AST (like
+    public_store_methods, no import — the docs gate must not require the
+    runtime deps)."""
+    for node in ast.parse(path.read_text()).body:
+        if isinstance(node, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == name for t in node.targets
+        ):
+            return ast.literal_eval(node.value)
+    raise SystemExit(f"FAIL: literal {name} not found in {path}")
+
+
+def check_coverage(errors: list) -> int:
+    """Fault-plan + control-plane documentation coverage (check 4)."""
+    faults_py = ROOT / "src/repro/sim/faults.py"
+    fault_plans = _module_literal(faults_py, "FAULT_PLANS")
+    ablations = sorted(
+        set(_module_literal(faults_py, "ABLATION_OF").values())
+        | set(_module_literal(faults_py, "SCENARIO_ABLATION_OF").values())
+    )
+
+    corpus = "\n".join(code_regions(d.read_text()) for d in doc_files())
+    required = {
+        "fault plan": [p for p in fault_plans if p != "none"],
+        "guard-ablation key": ablations,
+        "DistributedPlanCache method": public_store_methods(),
+    }
+    n = 0
+    for kind, names in required.items():
+        for name in names:
+            n += 1
+            if not re.search(rf"\b{re.escape(name)}\b", corpus):
+                errors.append(
+                    f"{kind} `{name}` is not documented in README.md/docs/*.md "
+                    "(mention it in a code span or fenced block)"
+                )
+    return n
+
+
 def main() -> None:
     errors: list = []
     if not (ROOT / "README.md").exists():
         fail(["README.md does not exist at the repo root"])
     n_links = check_links(errors)
     n_cmds = check_commands(errors)
+    n_names = check_coverage(errors)
     if errors:
         fail(errors)
     print(
         f"docs OK: {len(doc_files())} documents, {n_links} internal links "
-        f"resolve, {n_cmds} quoted commands parse"
+        f"resolve, {n_cmds} quoted commands parse, {n_names} operational "
+        "names covered"
     )
 
 
