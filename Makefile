@@ -1,7 +1,7 @@
 # Local mirror of .github/workflows/smoke.yml
 PYTHONPATH := src
 
-.PHONY: smoke test bench-fast docs-check sim-check
+.PHONY: smoke test bench-fast docs-check sim-check trace-check
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -18,4 +18,12 @@ docs-check:
 sim-check:
 	PYTHONPATH=$(PYTHONPATH) python -m repro.sim --check --seeds 5 --dump-dir sim-repro
 
-smoke: test bench-fast sim-check docs-check
+# traced quickstart (python -m repro.obs) + artifact schema validation:
+# trace.jsonl must be canonical span JSONL with a complete route_batch ->
+# lookup -> match-stage chain and tokens_saved attribution on hits;
+# trace_chrome.json must load in chrome://tracing / perfetto
+trace-check:
+	PYTHONPATH=$(PYTHONPATH) python -m repro.obs --out-dir trace-out
+	PYTHONPATH=$(PYTHONPATH) python tools/check_trace.py --dir trace-out
+
+smoke: test bench-fast sim-check docs-check trace-check

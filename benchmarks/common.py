@@ -1,7 +1,12 @@
-"""Shared benchmark helpers: timing + CSV emission.
+"""Shared benchmark helpers: timing + CSV emission + latency histograms.
 
 Every benchmark exposes ``run(fast: bool) -> list[Row]``; run.py aggregates.
 CSV schema (required by the harness): name,us_per_call,derived
+
+``latency_summary`` folds per-request samples through the same bucketed
+histogram the serving path exports at runtime (``repro.obs``), so the
+p50/p90/p99 in BENCH_*.json use one percentile implementation everywhere —
+tails instead of means.
 """
 
 from __future__ import annotations
@@ -9,7 +14,9 @@ from __future__ import annotations
 import json
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List
+from typing import Any, Callable, Dict, Iterable, List
+
+from repro.obs import Histogram, latency_buckets
 
 
 @dataclass
@@ -21,6 +28,30 @@ class Row:
     def csv(self) -> str:
         d = json.dumps(self.derived, sort_keys=True).replace(",", ";")
         return f"{self.name},{self.us_per_call:.3f},{d}"
+
+
+def latency_summary(samples_s: Iterable[float], *, unit: str = "s",
+                    digits: int = 4) -> Dict[str, Any]:
+    """Histogram summary of per-request latencies (seconds in, ``unit`` out).
+
+    Returns {count, mean, p50, p90, p99, max} — percentiles come from the
+    shared obs bucketed histogram (interpolated, clamped to observed
+    min/max), matching the runtime ``*_latency`` metric exports.
+    """
+    scale = {"s": 1.0, "ms": 1e3, "us": 1e6}[unit]
+    h = Histogram("bench.latency", bounds=latency_buckets())
+    n = 0
+    for s in samples_s:
+        h.observe(float(s))
+        n += 1
+    if n == 0:
+        return {"count": 0}
+    snap = h.snapshot()
+    out: Dict[str, Any] = {"count": n}
+    for k in ("mean", "p50", "p90", "p99", "max"):
+        out[k] = round(snap[k] * scale, digits)
+    out["unit"] = unit
+    return out
 
 
 def timeit(fn: Callable[[], Any], *, repeats: int = 3, number: int = 1) -> float:

@@ -50,9 +50,21 @@ def run(fast: bool = False) -> List[Row]:
             "ops_per_s": round(report.ops_applied / max(wall, 1e-9), 1),
             "interceptor_calls": report.interceptor["calls"],
             "trace_hash": report.trace_hash[:12],
+            # the traced serving path: span census + stream digest prove
+            # tracing stays on (and deterministic) inside the sim
+            "spans": report.n_spans,
+            "span_digest": report.span_digest[:12],
         }
         if report.cachegen is not None:
             derived["cachegen_submitted"] = report.cachegen["submitted"]
+        if report.router_metrics is not None:
+            lat = report.router_metrics.get("lookup_latency") or {}
+            if lat.get("count"):
+                derived["lookup_latency"] = {
+                    "count": lat["count"],
+                    "p50_us": round((lat["p50"] or 0.0) * 1e6, 1),
+                    "p99_us": round((lat["p99"] or 0.0) * 1e6, 1),
+                }
         rows.append(
             Row(
                 f"s1/{scenario}/{fault}",

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import Row
+from benchmarks.common import Row, latency_summary
 from repro.core.agent_loop import AgentConfig
 from repro.core.harness import run_workload
 
@@ -26,6 +26,12 @@ def _components(res) -> dict:
         "lookup_s": round(lookup, 4),
         "cachegen_s": round(gen, 1),
         "total_s": round(res.latency_s, 1),
+        # per-request tails, not just sums: same histogram math as the
+        # runtime router.lookup_latency export
+        "request_latency": latency_summary(
+            (r.latency_s for r in res.records), unit="s", digits=2),
+        "lookup_latency": latency_summary(
+            (r.cache_lookup_s for r in res.records), unit="us", digits=1),
     }
 
 

@@ -31,6 +31,8 @@ from typing import Any, Callable, Dict, Generic, List, Optional, Sequence, Tuple
 from repro.memory.pipeline import MatchPipeline, build_pipeline
 from repro.memory.policies import CacheEntry, EvictionPolicy, make_policy
 from repro.memory.protocol import CacheStats, PlanStoreBase, V
+from repro.obs import MetricsRegistry, deposit, trace_span
+from repro.obs.names import SPAN_CACHE_INSERT, SPAN_CACHE_LOOKUP, SPAN_MATCH_STAGE
 
 
 class PlanCache(PlanStoreBase, Generic[V]):
@@ -53,6 +55,8 @@ class PlanCache(PlanStoreBase, Generic[V]):
         pipeline: Optional[Union[MatchPipeline, Sequence[Any]]] = None,
         clock: Optional[Callable[[], float]] = None,
         evict_during_wave: bool = False,
+        obs: Optional[MetricsRegistry] = None,
+        obs_labels: Optional[Dict[str, str]] = None,
     ):
         self.capacity = capacity
         # injectable time source: TTL expiry and entry timestamps read THIS,
@@ -70,6 +74,11 @@ class PlanCache(PlanStoreBase, Generic[V]):
         self.index_backend = index_backend
         self.ttl_s = ttl_s
         self.policy = make_policy(eviction, ttl_s=ttl_s)
+        # obs: the shared metrics registry this store's accounting lands
+        # in (shards of a DistributedPlanCache share the facade's registry
+        # with a ``shard=<name>`` label); a private registry otherwise
+        self.obs = obs if obs is not None else MetricsRegistry()
+        self.obs_labels = dict(obs_labels or {})
         if pipeline is None:
             pipeline = ("exact", "fuzzy") if fuzzy else ("exact",)
         self.pipeline = (
@@ -80,12 +89,14 @@ class PlanCache(PlanStoreBase, Generic[V]):
                 fuzzy_threshold=fuzzy_threshold,
                 semantic_threshold=semantic_threshold,
                 index_backend=index_backend,
+                obs=self.obs,
+                obs_labels=self.obs_labels,
             )
         )
         self.fuzzy = self.pipeline.stage("fuzzy") is not None
         self._store: Dict[str, CacheEntry] = {}
         self._lock = threading.RLock()
-        self.stats = CacheStats()
+        self.stats = CacheStats(self.obs, **self.obs_labels)
 
     @property
     def _matcher(self):
@@ -113,34 +124,46 @@ class PlanCache(PlanStoreBase, Generic[V]):
         if contexts is None:
             contexts = [None] * len(keywords)
         try:
-            with self._lock:
+            with trace_span(SPAN_CACHE_LOOKUP, n=len(keywords),
+                            **self.obs_labels) as lsp, self._lock:
                 now = self._clock()
                 out: List[Optional[V]] = [None] * len(keywords)
                 pending = list(range(len(keywords)))
+                hits = 0
                 for stage in self.pipeline.stages:
                     if not pending:
                         break
-                    alts = stage.resolve(
-                        [keywords[i] for i in pending],
-                        [contexts[i] for i in pending],
-                        self._store.__contains__,
-                    )
-                    still: List[int] = []
-                    for i, alt in zip(pending, alts):
-                        v = None if alt is None else self._get_live(alt, now)
-                        if v is None:
-                            still.append(i)
-                        else:
-                            out[i] = v
-                    pending = still
+                    with trace_span(SPAN_MATCH_STAGE, stage=stage.name,
+                                    pending=len(pending)) as ssp:
+                        alts = stage.resolve(
+                            [keywords[i] for i in pending],
+                            [contexts[i] for i in pending],
+                            self._store.__contains__,
+                        )
+                        still: List[int] = []
+                        for i, alt in zip(pending, alts):
+                            v = None if alt is None else self._get_live(alt, now)
+                            if v is None:
+                                still.append(i)
+                            else:
+                                out[i] = v
+                                # attribution: which stage resolved batch
+                                # index i, and to which stored key
+                                deposit(i, stage=stage.name, matched_key=alt)
+                        ssp.set(resolved=len(pending) - len(still))
+                        pending = still
                 for v in out:
                     if v is None:
                         self.stats.misses += 1
                     else:
                         self.stats.hits += 1
+                        hits += 1
+                lsp.set(hits=hits)
                 return out
         finally:
-            self.stats.lookup_time_s += time.perf_counter() - t0
+            # lock-safe inc: runs outside self._lock, and a traced router
+            # may overlap concurrent lookup waves on one shared registry
+            self.stats.add("lookup_time_s", time.perf_counter() - t0)
 
     def _get_live(self, keyword: str, now: float) -> Optional[V]:
         """Serve one exact key: TTL-expire, count the hit, touch the policy."""
@@ -178,7 +201,8 @@ class PlanCache(PlanStoreBase, Generic[V]):
         items = list(items)
         if contexts is None:
             contexts = [None] * len(items)
-        with self._lock:
+        with trace_span(SPAN_CACHE_INSERT, n=len(items),
+                        **self.obs_labels), self._lock:
             now = self._clock()
             for kw, v in items:
                 entry = CacheEntry(v, now)
@@ -255,7 +279,10 @@ class PlanCache(PlanStoreBase, Generic[V]):
     def clear(self) -> None:
         with self._lock:
             self._store.clear()
-            self.stats = CacheStats()
+            # reset, don't rebuild: the stats object is a view over a
+            # possibly-shared registry, and replacing it would strand the
+            # registered series at their old values
+            self.stats.reset()
             self.policy.reset()
             self.pipeline.clear()
 

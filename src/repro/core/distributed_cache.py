@@ -82,6 +82,13 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.cache import CacheStats, PlanCache
 from repro.index.bank import embed, embed_batch
 from repro.memory.protocol import PlanStoreBase
+from repro.obs import MetricsRegistry, collect, deposit, trace_span
+from repro.obs.names import (
+    SPAN_DCACHE_INSERT,
+    SPAN_DCACHE_LOOKUP,
+    SPAN_DCACHE_TIER,
+    SPAN_SHARD_CALL,
+)
 
 
 class ShardUnavailable(RuntimeError):
@@ -150,6 +157,7 @@ class DistributedPlanCache(PlanStoreBase):
         interceptor: Optional[Any] = None,
         ack_policy: str = "all",
         ablate: Sequence[str] = (),
+        obs: Optional[MetricsRegistry] = None,
     ):
         if not isinstance(eviction, str):
             # a policy INSTANCE would be shared bookkeeping across shards
@@ -179,7 +187,10 @@ class DistributedPlanCache(PlanStoreBase):
         self.ablate = frozenset(ablate)
         self.shards: Dict[str, PlanCache] = {}
         self.down: set = set()
-        self.stats = CacheStats()
+        # one registry spans the facade and every shard: shard series carry
+        # a ``shard=<name>`` label, the facade's aggregate stats none
+        self.obs = obs if obs is not None else MetricsRegistry()
+        self.stats = CacheStats(self.obs)
         self._lock = threading.RLock()
         for i in range(n_nodes):
             self.add_node(f"cache-{i}")
@@ -202,6 +213,8 @@ class DistributedPlanCache(PlanStoreBase):
                 # the evict-after-wave guard ablation reaches every shard,
                 # including ones created by later add_node/restart_node
                 evict_during_wave="evict_after_wave" in self.ablate,
+                obs=self.obs,
+                obs_labels={"shard": name},
             )
             self.ring.add(name)
             if "churn_rehome" not in self.ablate:
@@ -338,11 +351,14 @@ class DistributedPlanCache(PlanStoreBase):
 
     def _shard_call(self, node: str, op: str, fn: Callable[[], Any]) -> Any:
         """Every per-shard batch call funnels through here — the seam where
-        a networked deployment dispatches an RPC and where the sim's fault
-        injector raises :class:`ShardUnavailable` / charges latency."""
-        if self.interceptor is not None:
-            return self.interceptor.call(node, op, fn)
-        return fn()
+        a networked deployment dispatches an RPC, where the sim's fault
+        injector raises :class:`ShardUnavailable` / charges latency, and
+        where tracing wraps all data- and control-plane shard traffic in
+        one ``dcache.shard_call`` span."""
+        with trace_span(SPAN_SHARD_CALL, node=node, op=op):
+            if self.interceptor is not None:
+                return self.interceptor.call(node, op, fn)
+            return fn()
 
     def _live(self, names: List[str]) -> List[str]:
         return [n for n in names if n not in self.down and n in self.shards]
@@ -392,7 +408,8 @@ class DistributedPlanCache(PlanStoreBase):
         """
         if contexts is None:
             contexts = [None] * len(keywords)
-        with self._lock:
+        with trace_span(SPAN_DCACHE_LOOKUP, n=len(keywords)) as lsp, \
+                self._lock:
             out: List[Optional[Any]] = [None] * len(keywords)
             owners_of = [self._probe_order(k) for k in keywords]
             pending = list(range(len(keywords)))
@@ -405,32 +422,46 @@ class DistributedPlanCache(PlanStoreBase):
                         by_node.setdefault(owners_of[i][tier], []).append(i)
                 if not by_node:
                     break
-                for node, idxs in by_node.items():
-                    shard = self.shards[node]
-                    kws = [keywords[i] for i in idxs]
-                    ctxs = [contexts[i] for i in idxs]
-                    try:
-                        vals = self._shard_call(
-                            node, "lookup_batch",
-                            lambda s=shard, k=kws, c=ctxs: s.lookup_batch(k, contexts=c),
-                        )
-                    except ShardUnavailable:
-                        if "crash_fallthrough" in self.ablate:
-                            dropped.update(idxs)  # served as misses (BUG)
-                        continue  # guard: keywords stay pending -> next tier
-                    for i, v in zip(idxs, vals):
-                        out[i] = v
+                with trace_span(SPAN_DCACHE_TIER, tier=tier,
+                                pending=len(pending),
+                                shards=len(by_node)):
+                    for node, idxs in sorted(by_node.items()):
+                        shard = self.shards[node]
+                        kws = [keywords[i] for i in idxs]
+                        ctxs = [contexts[i] for i in idxs]
+                        try:
+                            # a nested collector shadows the router's for
+                            # exactly this shard call; resolved indices are
+                            # re-deposited at the facade's batch positions
+                            # with the answering node and replica tier
+                            with collect() as shard_attrib:
+                                vals = self._shard_call(
+                                    node, "lookup_batch",
+                                    lambda s=shard, k=kws, c=ctxs:
+                                        s.lookup_batch(k, contexts=c),
+                                )
+                        except ShardUnavailable:
+                            if "crash_fallthrough" in self.ablate:
+                                dropped.update(idxs)  # served as misses (BUG)
+                            continue  # guard: keywords stay pending -> next tier
+                        for j, (i, v) in enumerate(zip(idxs, vals)):
+                            out[i] = v
+                            if v is not None:
+                                deposit(i, node=node, replica_tier=tier,
+                                        **shard_attrib.get(j))
                 pending = [
                     i for i in pending
                     if out[i] is None and i not in dropped
                     and tier + 1 < len(owners_of[i])
                 ]
                 tier += 1
+            hits = sum(1 for v in out if v is not None)
             for v in out:
                 if v is None:
                     self.stats.misses += 1
                 else:
                     self.stats.hits += 1
+            lsp.set(hits=hits, tiers=tier)
             return out
 
     def _insert_unlocked(
@@ -483,7 +514,7 @@ class DistributedPlanCache(PlanStoreBase):
         items = list(items)
         if contexts is None:
             contexts = [None] * len(items)
-        with self._lock:
+        with trace_span(SPAN_DCACHE_INSERT, n=len(items)), self._lock:
             if self.fuzzy and vectors is None and items:
                 vectors = embed_batch([kw for kw, _ in items])
             primary_by_node: Dict[str, List[int]] = {}
@@ -551,7 +582,8 @@ class DistributedPlanCache(PlanStoreBase):
                     self._shard_call(name, "clear", shard.clear)
                 except ShardUnavailable:
                     continue
-            self.stats = CacheStats()
+            # reset the shared-registry view in place (see PlanCache.clear)
+            self.stats.reset()
 
     def autotune(self, **thresholds) -> List[str]:
         """Run one index auto-tune step on every reachable shard (see

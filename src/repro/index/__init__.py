@@ -40,13 +40,15 @@ mandatory there, not optional.
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.index.bank import DIM, EmbeddingBank, embed, embed_batch
 from repro.index.bucketed import NEG_INF, BucketedIndex, _brute_topk
 from repro.index.device import DeviceBank
+from repro.obs import MetricsRegistry, trace_span
+from repro.obs.names import SPAN_INDEX_TOPK
 
 BACKENDS = ("auto", "brute", "pallas", "bucketed", "device")
 
@@ -65,11 +67,16 @@ class SimilarityIndex:
         lsh_seed: int = 0,
         probe_hamming: int = 1,
         auto_bucketed_min: int = 4096,
+        obs: Optional[MetricsRegistry] = None,
+        obs_labels: Optional[Dict[str, str]] = None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend {backend!r} not in {BACKENDS}")
         self.backend = backend
         self.bank = bank if bank is not None else EmbeddingBank(initial_capacity)
+        # obs: where backend telemetry (LSH counters, device H2D bytes)
+        # registers; shared by a traced serving path, private otherwise
+        self.obs_labels = dict(obs_labels or {})
         self._bucketed: Optional[BucketedIndex] = None
         self._device: Optional[DeviceBank] = None
         if backend in ("bucketed", "auto"):
@@ -80,10 +87,16 @@ class SimilarityIndex:
                 seed=lsh_seed,
                 probe_hamming=probe_hamming,
                 scan_threshold=auto_bucketed_min if backend == "auto" else 2048,
+                obs=obs,
+                obs_labels=self.obs_labels,
             )
         elif backend == "device":
             with self.bank.lock:
-                self._device = DeviceBank(self.bank.arena().shape[0])
+                self._device = DeviceBank(
+                    self.bank.arena().shape[0],
+                    obs=obs,
+                    obs_labels=self.obs_labels,
+                )
                 if len(self.bank):  # bootstrap: one upload of existing rows
                     slots = [self.bank.slot_of(k) for k in self.bank.keys()]
                     self._device.set_rows(slots, self.bank.arena()[slots])
@@ -194,31 +207,41 @@ class SimilarityIndex:
         exact count matters.
         """
         q = self._as_queries(queries)
-        if self.backend in ("pallas", "device"):
-            from repro.kernels import ops  # lazy: keep core import jax-free
+        with trace_span(SPAN_INDEX_TOPK, backend=self.backend,
+                        q=int(q.shape[0]), k=k, **self.obs_labels) as sp:
+            if self.backend in ("pallas", "device"):
+                from repro.kernels import ops  # lazy: keep core import jax-free
 
-            # search the full arena, not matrix(): its capacity changes
-            # only on doubling, so the jit'd kernel sees O(log N) shapes
-            # instead of retracing on every insert; pad Q likewise
-            nq = q.shape[0]
-            qp = max(8, 1 << max(0, nq - 1).bit_length())
-            if qp != nq:
-                q = np.pad(q, ((0, qp - nq), (0, 0)))
-            if self._device is not None:
-                # resident bank: only the query batch crosses to the device.
-                # Dispatch under bank.lock — a concurrent donating write
-                # would DELETE the arena buffer captured here (donation is
-                # in-place on TPU), which is a crash, not a stale read.
-                with self.bank.lock:
-                    self._device.note_h2d(q.nbytes)
-                    s, i = ops.resident_topk(q, self._device.arena, k=k)
+                # search the full arena, not matrix(): its capacity changes
+                # only on doubling, so the jit'd kernel sees O(log N) shapes
+                # instead of retracing on every insert; pad Q likewise
+                nq = q.shape[0]
+                qp = max(8, 1 << max(0, nq - 1).bit_length())
+                if qp != nq:
+                    q = np.pad(q, ((0, qp - nq), (0, 0)))
+                if self._device is not None:
+                    # resident bank: only the query batch crosses to the
+                    # device. Dispatch under bank.lock — a concurrent
+                    # donating write would DELETE the arena buffer captured
+                    # here (donation is in-place on TPU), which is a crash,
+                    # not a stale read.
+                    with self.bank.lock:
+                        self._device.note_h2d(q.nbytes)
+                        sp.set(h2d_bytes=int(q.nbytes))
+                        s, i = ops.resident_topk(q, self._device.arena, k=k)
+                else:
+                    s, i = ops.batch_topk(q, self.bank.arena(), k=k)
+                scores, slots = np.array(s[:nq]), np.array(i[:nq])
+            elif self._bucketed is not None:  # bucketed | auto
+                cand0 = self._bucketed.telemetry.candidates_total
+                scores, slots = self._bucketed.topk(q, k)
+                sp.set(
+                    lsh_candidates=(
+                        self._bucketed.telemetry.candidates_total - cand0
+                    )
+                )
             else:
-                s, i = ops.batch_topk(q, self.bank.arena(), k=k)
-            scores, slots = np.array(s[:nq]), np.array(i[:nq])
-        elif self._bucketed is not None:  # bucketed | auto
-            scores, slots = self._bucketed.topk(q, k)
-        else:
-            scores, slots = _brute_topk(self.bank.matrix(), q, k)
+                scores, slots = _brute_topk(self.bank.matrix(), q, k)
         # mask tombstoned / beyond-high-water slots: slot >= 0 => live key
         for r in range(slots.shape[0]):
             for c in range(slots.shape[1]):

@@ -29,23 +29,30 @@ dicts and may trigger an adaptive-geometry rebuild. Queries
 (``best_slot`` / ``topk`` / ``candidates``) are unlocked reads; a caller
 that interleaves queries with writers and needs a consistent view holds
 ``bank.lock`` across the query (PlanCache's RLock does this transitively).
-The :class:`LSHTelemetry` counters on the query path are deliberately
-lock-free and benign-racy.
+The :class:`LSHTelemetry` counters on the query path are registry-backed
+(each increment takes the counter's own lock) and never control-critical.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.index.bank import DIM, EmbeddingBank
+from repro.obs import MetricsRegistry, pow2_buckets
+from repro.obs import names as _names
 
 NEG_INF = np.float32(-1e30)
 
 
-@dataclass
+def _tele_prop(field: str):
+    def get(self):
+        return int(self._counters[field].value)
+
+    return property(get)
+
+
 class LSHTelemetry:
     """Live quality/cost counters for one BucketedIndex.
 
@@ -58,40 +65,68 @@ class LSHTelemetry:
     exact brute scan and recording top-1 agreement — an amortized-O(1)
     overhead instead of an offline sweep (the f3 benchmark's job).
 
-    Counter updates are benign-racy under concurrent queries (they feed
-    dashboards, never control flow); exactness is not required and no lock
-    is taken on the query path.
+    Registry-backed view over :mod:`repro.obs` counters plus one pow-2
+    histogram of per-query candidate counts; the historical field reads
+    and the ``snapshot()`` schema are unchanged.
     """
 
-    queries: int = 0
-    brute_fallback_queries: int = 0  # answered below scan_threshold
-    probed_queries: int = 0          # answered via bucket probing
-    candidates_total: int = 0
-    empty_candidate_queries: int = 0
-    # histogram of per-query candidate counts, log2 buckets: index b counts
-    # queries that scanned [2^b, 2^(b+1)) candidates (index 0: 0 or 1)
-    candidate_hist: List[int] = field(default_factory=lambda: [0] * 32)
-    recall_checks: int = 0
-    recall_agreements: int = 0
+    _FIELDS = {
+        "queries": _names.LSH_QUERIES,
+        "brute_fallback_queries": _names.LSH_BRUTE_FALLBACK_QUERIES,
+        "probed_queries": _names.LSH_PROBED_QUERIES,
+        "candidates_total": _names.LSH_CANDIDATES_TOTAL,
+        "empty_candidate_queries": _names.LSH_EMPTY_CANDIDATE_QUERIES,
+        "recall_checks": _names.LSH_RECALL_CHECKS,
+        "recall_agreements": _names.LSH_RECALL_AGREEMENTS,
+    }
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 **labels: str):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._counters = {
+            field: self.registry.counter(name, **labels)
+            for field, name in self._FIELDS.items()
+        }
+        # per-query candidate counts: bucket ``le_2^b`` counts queries that
+        # scanned (2^(b-1), 2^b] candidates (the first also holds 0)
+        self._candidates = self.registry.histogram(
+            _names.LSH_CANDIDATES, bounds=pow2_buckets(32), **labels
+        )
+
+    queries = _tele_prop("queries")
+    brute_fallback_queries = _tele_prop("brute_fallback_queries")
+    probed_queries = _tele_prop("probed_queries")
+    candidates_total = _tele_prop("candidates_total")
+    empty_candidate_queries = _tele_prop("empty_candidate_queries")
+    recall_checks = _tele_prop("recall_checks")
+    recall_agreements = _tele_prop("recall_agreements")
 
     def observe_brute(self) -> None:
-        self.queries += 1
-        self.brute_fallback_queries += 1
+        self._counters["queries"].inc()
+        self._counters["brute_fallback_queries"].inc()
 
     def observe_probe(self, n_candidates: int) -> None:
-        self.queries += 1
-        self.probed_queries += 1
-        self.candidates_total += n_candidates
+        self._counters["queries"].inc()
+        self._counters["probed_queries"].inc()
+        self._counters["candidates_total"].inc(n_candidates)
         if n_candidates == 0:
-            self.empty_candidate_queries += 1
-        self.candidate_hist[max(0, int(n_candidates).bit_length() - 1)] += 1
+            self._counters["empty_candidate_queries"].inc()
+        self._candidates.observe(n_candidates)
 
     def observe_recall(self, agreed: bool) -> None:
-        self.recall_checks += 1
-        self.recall_agreements += int(agreed)
+        self._counters["recall_checks"].inc()
+        self._counters["recall_agreements"].inc(int(agreed))
+
+    def reset(self) -> None:
+        """Fresh telemetry window (autotune calls this after acting);
+        zeros only this view's series, never the whole registry."""
+        for c in self._counters.values():
+            c.reset()
+        self._candidates.reset()
 
     def snapshot(self) -> Dict[str, Any]:
         probed = max(1, self.probed_queries)
+        hist = self._candidates.snapshot()["buckets"]
         return {
             "queries": self.queries,
             "probed_queries": self.probed_queries,
@@ -101,7 +136,11 @@ class LSHTelemetry:
                 self.empty_candidate_queries / probed, 4
             ),
             "candidate_hist": {
-                f"2^{b}": c for b, c in enumerate(self.candidate_hist) if c
+                f"2^{b}": hist[k]
+                for b, k in enumerate(
+                    f"le_{bound:g}" for bound in self._candidates.bounds
+                )
+                if k in hist
             },
             "top1_agreement": (
                 round(self.recall_agreements / self.recall_checks, 4)
@@ -151,6 +190,8 @@ class BucketedIndex:
         probe_hamming: int = 1,
         scan_threshold: int = 2048,
         recall_sample_every: int = 64,
+        obs: Optional[MetricsRegistry] = None,
+        obs_labels: Optional[Dict[str, str]] = None,
     ):
         """``n_bits=None`` (default) adapts: start at 12 bits and rebuild
         with +2 bits whenever average bucket occupancy exceeds
@@ -170,7 +211,7 @@ class BucketedIndex:
         self.scan_threshold = scan_threshold
         # live quality counters; every recall_sample_every-th probed query
         # is re-answered exactly to measure recall in production (0: off)
-        self.telemetry = LSHTelemetry()
+        self.telemetry = LSHTelemetry(obs, **(obs_labels or {}))
         self._recall_every = recall_sample_every
         self._seed = seed
         self._set_geometry(n_bits)
@@ -304,7 +345,7 @@ class BucketedIndex:
             self._set_probe_masks()
             action = f"probe_hamming->{self.probe_hamming}"
         if action is not None:
-            self.telemetry = LSHTelemetry()  # fresh window for new geometry
+            self.telemetry.reset()  # fresh window for new geometry
         return action
 
     # -- search -----------------------------------------------------------

@@ -42,13 +42,15 @@ from __future__ import annotations
 
 import functools
 import warnings
-from typing import Any, Dict, Sequence
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.index.bank import DIM
+from repro.obs import MetricsRegistry
+from repro.obs import names as _names
 
 
 def _donated(fn, *args):
@@ -98,22 +100,57 @@ class DeviceBank:
     distinct arena shapes, never one per insert.
     """
 
-    def __init__(self, capacity: int = 64, dim: int = DIM):
+    _COUNTERS = {
+        "h2d_bytes_total": _names.DEVICE_H2D_BYTES,
+        "row_updates": _names.DEVICE_ROW_UPDATES,
+        "batched_updates": _names.DEVICE_BATCHED_UPDATES,
+        "clears": _names.DEVICE_CLEARS,
+        "grows": _names.DEVICE_GROWS,
+    }
+
+    def __init__(self, capacity: int = 64, dim: int = DIM,
+                 *, obs: Optional[MetricsRegistry] = None,
+                 obs_labels: Optional[Dict[str, str]] = None):
         cap = max(1, int(capacity))
         self.dim = dim
         self._arena = jnp.zeros((cap, dim), jnp.float32)
-        # telemetry: every host->device byte this bank moves, by cause
-        self.h2d_bytes_total = 0
-        self.row_updates = 0
-        self.batched_updates = 0
-        self.clears = 0
-        self.grows = 0
+        # telemetry: every host->device byte this bank moves, by cause —
+        # registry-backed counters (repro.obs); the historical int attrs
+        # are read-only property views below
+        reg = obs if obs is not None else MetricsRegistry()
+        labels = obs_labels or {}
+        self._c = {
+            field: reg.counter(name, **labels)
+            for field, name in self._COUNTERS.items()
+        }
+        self._cap_gauge = reg.gauge(_names.DEVICE_CAPACITY, **labels)
+        self._cap_gauge.set(cap)
 
     # -- introspection ----------------------------------------------------
 
     @property
     def capacity(self) -> int:
         return self._arena.shape[0]
+
+    @property
+    def h2d_bytes_total(self) -> int:
+        return int(self._c["h2d_bytes_total"].value)
+
+    @property
+    def row_updates(self) -> int:
+        return int(self._c["row_updates"].value)
+
+    @property
+    def batched_updates(self) -> int:
+        return int(self._c["batched_updates"].value)
+
+    @property
+    def clears(self) -> int:
+        return int(self._c["clears"].value)
+
+    @property
+    def grows(self) -> int:
+        return int(self._c["grows"].value)
 
     @property
     def arena(self) -> jnp.ndarray:
@@ -132,7 +169,7 @@ class DeviceBank:
 
     def note_h2d(self, nbytes: int) -> None:
         """Account a transfer performed on this bank's behalf (queries)."""
-        self.h2d_bytes_total += int(nbytes)
+        self._c["h2d_bytes_total"].inc(int(nbytes))
 
     # -- mutation (caller holds the host bank's lock) ---------------------
 
@@ -145,14 +182,15 @@ class DeviceBank:
             self._arena = _donated(
                 functools.partial(_grow, new_cap=new_cap), self._arena
             )
-            self.grows += 1
+            self._c["grows"].inc()
+            self._cap_gauge.set(new_cap)
 
     def set_row(self, slot: int, vec: np.ndarray) -> None:
         self.ensure_capacity(slot + 1)
         v = np.asarray(vec, np.float32)
         self._arena = _donated(_set_row, self._arena, np.int32(slot), v)
-        self.h2d_bytes_total += v.nbytes
-        self.row_updates += 1
+        self._c["h2d_bytes_total"].inc(v.nbytes)
+        self._c["row_updates"].inc()
 
     def set_rows(self, slots: Sequence[int], vecs: np.ndarray) -> None:
         """One donated scatter for a whole admission wave.
@@ -172,8 +210,8 @@ class DeviceBank:
             s = np.concatenate([s, np.repeat(s[-1:], pad)])
             v = np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
         self._arena = _donated(_set_rows, self._arena, s, v)
-        self.h2d_bytes_total += v.nbytes + s.nbytes
-        self.batched_updates += 1
+        self._c["h2d_bytes_total"].inc(v.nbytes + s.nbytes)
+        self._c["batched_updates"].inc()
 
     def clear_row(self, slot: int) -> None:
         """Tombstone a slot with device-generated zeros (zero H2D)."""
@@ -182,4 +220,4 @@ class DeviceBank:
 
     def clear(self) -> None:
         self._arena = _donated(_clear_all, self._arena)
-        self.clears += 1
+        self._c["clears"].inc()

@@ -205,9 +205,23 @@ def build_pipeline(
     fuzzy_threshold: float = 0.8,
     semantic_threshold: float = 0.85,
     index_backend: str = "auto",
+    obs: Optional[Any] = None,
+    obs_labels: Optional[dict] = None,
 ) -> MatchPipeline:
     """Build a pipeline from stage names (``exact`` | ``fuzzy`` |
-    ``semantic``) and/or pre-built stage instances, in cascade order."""
+    ``semantic``) and/or pre-built stage instances, in cascade order.
+
+    ``obs`` (a :class:`repro.obs.MetricsRegistry`) and ``obs_labels`` ride
+    down into each stage's similarity index, which registers its LSH /
+    device-bank telemetry there with an added ``stage=<name>`` label — so
+    a fuzzy and a semantic index in one pipeline stay distinct series."""
+    base = dict(obs_labels or {})
+
+    def stage_kw(name: str) -> dict:
+        if obs is None and not base:
+            return {}
+        return {"obs": obs, "obs_labels": dict(base, stage=name)}
+
     stages: List[MatchStage] = []
     for item in spec:
         if isinstance(item, MatchStage):
@@ -215,9 +229,15 @@ def build_pipeline(
         elif item == "exact":
             stages.append(ExactStage())
         elif item == "fuzzy":
-            stages.append(FuzzyStage(fuzzy_threshold, index_backend))
+            stages.append(
+                FuzzyStage(fuzzy_threshold, index_backend, **stage_kw("fuzzy"))
+            )
         elif item == "semantic":
-            stages.append(SemanticStage(semantic_threshold, index_backend))
+            stages.append(
+                SemanticStage(
+                    semantic_threshold, index_backend, **stage_kw("semantic")
+                )
+            )
         else:
             raise ValueError(
                 f"unknown pipeline stage {item!r} "

@@ -25,12 +25,15 @@ This module pins the contract down:
   embeds its context text itself.
 
 ``CacheStats`` lives here too (re-exported from ``repro.core.cache`` for
-backward compatibility) so implementations share one accounting shape.
+backward compatibility) so implementations share one accounting shape. It
+is a *view* over a :class:`repro.obs.MetricsRegistry` — stores that share
+a registry (distributed shards, a traced serving path) contribute to one
+label-keyed series set, while a bare ``CacheStats()`` gets a private
+registry and behaves exactly like the historical dataclass.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import (
     Any,
     Dict,
@@ -43,16 +46,67 @@ from typing import (
     runtime_checkable,
 )
 
+from repro.obs import MetricsRegistry
+from repro.obs import names as _names
+
 V = TypeVar("V")
 
 
-@dataclass
+def _stat_prop(field: str):
+    def get(self):
+        v = self._counters[field].value
+        return v if field == "lookup_time_s" else int(v)
+
+    def set_(self, v):
+        # deprecated ``stats.hits += 1`` shim: get-then-set, safe only
+        # under the owning store's lock (where all historical writers
+        # live); lock-free callers use ``add()``
+        self._counters[field].set(v)
+
+    return property(get, set_)
+
+
 class CacheStats:
-    hits: int = 0
-    misses: int = 0
-    inserts: int = 0
-    evictions: int = 0
-    lookup_time_s: float = 0.0
+    """Hit/miss/insert/evict accounting for one plan store.
+
+    Registry-backed view: the historical dataclass fields are properties
+    over lock-safe :class:`repro.obs.Counter` instances, so the old
+    ``stats.hits`` reads and ``snapshot()`` schema are unchanged while
+    shared-registry deployments get per-shard labeled series for free.
+    """
+
+    _FIELDS = {
+        "hits": _names.CACHE_HITS,
+        "misses": _names.CACHE_MISSES,
+        "inserts": _names.CACHE_INSERTS,
+        "evictions": _names.CACHE_EVICTIONS,
+        "lookup_time_s": _names.CACHE_LOOKUP_TIME_S,
+    }
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 **labels: str):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.labels = labels
+        self._counters = {
+            field: self.registry.counter(name, **labels)
+            for field, name in self._FIELDS.items()
+        }
+
+    hits = _stat_prop("hits")
+    misses = _stat_prop("misses")
+    inserts = _stat_prop("inserts")
+    evictions = _stat_prop("evictions")
+    lookup_time_s = _stat_prop("lookup_time_s")
+
+    def add(self, field: str, n: float = 1) -> None:
+        """Lock-safe increment (the contract for unlocked callers)."""
+        self._counters[field].inc(n)
+
+    def reset(self) -> None:
+        """Zero this view's own series (NOT the whole registry) — what
+        ``clear()`` calls now that stats objects are shared handles."""
+        for c in self._counters.values():
+            c.reset()
 
     @property
     def hit_rate(self) -> float:

@@ -1,0 +1,97 @@
+"""Per-request cache attribution: WHERE did a hit come from, WHAT did it
+save.
+
+The router sees only ``lookup_batch -> Optional[template]``; the layers
+underneath know the interesting part — which pipeline stage resolved the
+query (exact | fuzzy | semantic), which shard and replica tier answered,
+what key it matched. This module carries that detail back up WITHOUT
+widening the ``PlanStore`` protocol: the router opens a context-local
+:class:`AttributionCollector` around its lookup, every resolving layer
+calls :func:`deposit` (a no-op when no collector is open), and facade
+layers re-map indices as the batch narrows:
+
+* ``PlanCache.lookup_batch`` deposits ``stage`` + ``matched_key`` at its
+  local batch index;
+* ``DistributedPlanCache.lookup_batch`` opens a nested collector around
+  each per-shard call, then re-deposits at the facade's indices with
+  ``node`` and ``tier`` added (contextvars nest, so the inner collector
+  shadows the outer one for exactly the duration of the shard call);
+* the router joins the collected detail with the §4.4 cost model
+  (:func:`tokens_saved_estimate`) and emits one ``cache.attribution``
+  span event per request.
+
+Deposits are thread-local by construction (a collector is visible only to
+the call stack that opened it), so concurrent ``route_batch`` waves never
+see each other's attributions.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from contextvars import ContextVar
+from typing import Any, Dict, Optional
+
+_collector: ContextVar[Optional["AttributionCollector"]] = ContextVar(
+    "repro_obs_attribution", default=None
+)
+
+
+class AttributionCollector:
+    """index -> merged attribution dict for one lookup batch."""
+
+    __slots__ = ("info",)
+
+    def __init__(self):
+        self.info: Dict[int, Dict[str, Any]] = {}
+
+    def deposit(self, i: int, **fields: Any) -> None:
+        self.info.setdefault(i, {}).update(fields)
+
+    def get(self, i: int) -> Dict[str, Any]:
+        return self.info.get(i, {})
+
+    def items(self):
+        return self.info.items()
+
+
+@contextmanager
+def collect():
+    """Open a collector for the enclosed lookup; nested opens shadow."""
+    c = AttributionCollector()
+    token = _collector.set(c)
+    try:
+        yield c
+    finally:
+        _collector.reset(token)
+
+
+def deposit(i: int, **fields: Any) -> None:
+    """Attach attribution fields to batch index ``i`` of the innermost
+    open collector; silently a no-op when none is open (un-traced paths
+    pay one contextvar read)."""
+    c = _collector.get()
+    if c is not None:
+        c.deposit(i, **fields)
+
+
+def tokens_saved_estimate(template: Any) -> int:
+    """§4.4 cost-model attribution for one hit: the large-planner output
+    tokens a cached template avoids regenerating. Templates that expose
+    ``size_tokens()`` (:class:`repro.core.template.PlanTemplate`) answer
+    exactly; anything else is estimated from its serialized length (the
+    chars/4 heuristic the cost model uses everywhere)."""
+    size = getattr(template, "size_tokens", None)
+    if callable(size):
+        try:
+            return int(size())
+        except Exception:
+            pass
+    return max(1, len(str(template)) // 4)
+
+
+__all__ = [
+    "AttributionCollector",
+    "collect",
+    "deposit",
+    "tokens_saved_estimate",
+]

@@ -25,6 +25,8 @@ import numpy as np
 from repro.configs.base import ModelConfig, ShardingProfile
 from repro.distributed import sharding as shd
 from repro.models import lm
+from repro.obs import trace_span
+from repro.obs.names import SPAN_ENGINE_GENERATE
 from repro.serving.sampler import sample_token
 
 
@@ -112,21 +114,24 @@ class Engine:
         """Batched generation. Returns (B, <=max_new) generated ids."""
         B, S = tokens.shape
         assert S + max_new <= self.max_len + 8, "increase engine max_len"
-        logits, cache = self.prefill(tokens)
-        out = []
-        key = jax.random.PRNGKey(seed)
-        tok = sample_token(logits, temperature, key)
-        done = np.zeros((B,), bool)
-        for i in range(max_new):
-            out.append(tok)
-            if eos_id is not None:
-                done |= tok[:, 0] == eos_id
-                if done.all():
-                    break
-            logits, cache = self.decode(cache, tok)
-            key, sub = jax.random.split(key)
-            tok = sample_token(logits, temperature, sub)
-        return np.concatenate(out, axis=1)
+        with trace_span(SPAN_ENGINE_GENERATE, batch=B, prompt_len=S,
+                        max_new=max_new) as sp:
+            logits, cache = self.prefill(tokens)
+            out = []
+            key = jax.random.PRNGKey(seed)
+            tok = sample_token(logits, temperature, key)
+            done = np.zeros((B,), bool)
+            for i in range(max_new):
+                out.append(tok)
+                if eos_id is not None:
+                    done |= tok[:, 0] == eos_id
+                    if done.all():
+                        break
+                logits, cache = self.decode(cache, tok)
+                key, sub = jax.random.split(key)
+                tok = sample_token(logits, temperature, sub)
+            sp.set(new_tokens=len(out))
+            return np.concatenate(out, axis=1)
 
     def measured_rates(self) -> Dict[str, float]:
         r = self.stats.rates()

@@ -25,7 +25,17 @@ the ``_pending`` futures list. Cache reads/writes need no router-side lock
 the embedding bank's lock, so host arena, LSH buckets, and device arena
 mutate atomically). ``route``/``route_batch`` may be called concurrently
 from many request threads while async cache-generation workers insert;
-``RouterMetrics`` counters are benign-racy (never consistency-critical).
+``RouterMetrics`` counters are lock-safe ``repro.obs`` registry counters
+(the historical bare-int struct raced: ``async_cachegens`` /
+``cachegen_dropped`` / ``sync_cachegen_fallbacks`` were ``+=``'d while
+``route_batch`` mutated the same fields from request threads).
+
+Observability: with a tracer installed (``repro.obs.use_tracer``) every
+``route``/``route_batch`` opens a span tree — router → cache lookup →
+per-shard/per-tier fan-out → match-pipeline stage → index backend — and
+emits one ``cache.attribution`` event per request (hit tier, matched
+stage/key, §4.4 ``tokens_saved``) plus a ``cachegen.fate`` event per
+admission wave (async | sync_fallback | dropped).
 """
 
 from __future__ import annotations
@@ -38,6 +48,15 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.cache import PlanCache
+from repro.obs import (
+    MetricsRegistry,
+    collect,
+    current_span,
+    get_tracer,
+    tokens_saved_estimate,
+    trace_span,
+)
+from repro.obs import names as _names
 
 
 @dataclass
@@ -128,17 +147,72 @@ class TierPool:
                 self._executor = None
 
 
-@dataclass
+def _metric_prop(field: str):
+    def get(self):
+        v = self._c[field].value
+        return v if field == "lookup_s" else int(v)
+
+    return property(get)
+
+
 class RouterMetrics:
-    requests: int = 0
-    hits: int = 0
-    misses: int = 0
-    large_tier_calls: int = 0
-    small_tier_calls: int = 0
-    async_cachegens: int = 0
-    sync_cachegen_fallbacks: int = 0
-    cachegen_dropped: int = 0
-    lookup_s: float = 0.0
+    """Router accounting as a view over a ``repro.obs`` registry.
+
+    Every counter is a lock-safe :class:`repro.obs.Counter` — the fix for
+    the historical data race where cachegen bookkeeping was ``+=``'d from
+    pool threads against ``route_batch``'s request-thread increments. The
+    historical field reads (``m.hits``) and the ``snapshot()`` schema are
+    unchanged; writers go through :meth:`add`. ``lookup_latency`` is a
+    bucketed histogram feeding the p50/p99 columns in BENCH_t3/BENCH_s1.
+    """
+
+    _FIELDS = {
+        "requests": _names.ROUTER_REQUESTS,
+        "hits": _names.ROUTER_HITS,
+        "misses": _names.ROUTER_MISSES,
+        "large_tier_calls": _names.ROUTER_LARGE_TIER_CALLS,
+        "small_tier_calls": _names.ROUTER_SMALL_TIER_CALLS,
+        "async_cachegens": _names.ROUTER_ASYNC_CACHEGENS,
+        "sync_cachegen_fallbacks": _names.ROUTER_SYNC_CACHEGEN_FALLBACKS,
+        "cachegen_dropped": _names.ROUTER_CACHEGEN_DROPPED,
+        "lookup_s": _names.ROUTER_LOOKUP_S,
+        "tokens_saved": _names.ROUTER_TOKENS_SAVED,
+    }
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 **labels: str):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._c = {
+            field: self.registry.counter(name, **labels)
+            for field, name in self._FIELDS.items()
+        }
+        self.lookup_latency = self.registry.histogram(
+            _names.ROUTER_LOOKUP_LATENCY, **labels
+        )
+
+    requests = _metric_prop("requests")
+    hits = _metric_prop("hits")
+    misses = _metric_prop("misses")
+    large_tier_calls = _metric_prop("large_tier_calls")
+    small_tier_calls = _metric_prop("small_tier_calls")
+    async_cachegens = _metric_prop("async_cachegens")
+    sync_cachegen_fallbacks = _metric_prop("sync_cachegen_fallbacks")
+    cachegen_dropped = _metric_prop("cachegen_dropped")
+    lookup_s = _metric_prop("lookup_s")
+    tokens_saved = _metric_prop("tokens_saved")
+
+    def add(self, field: str, n: float = 1) -> None:
+        """Lock-safe increment — callable from any thread."""
+        self._c[field].inc(n)
+
+    def observe_lookup(self, dt: float) -> None:
+        self._c["lookup_s"].inc(dt)
+        self.lookup_latency.observe(dt)
+
+    def reset(self) -> None:
+        for c in self._c.values():
+            c.reset()
+        self.lookup_latency.reset()
 
     def snapshot(self) -> Dict[str, Any]:
         return {
@@ -150,6 +224,8 @@ class RouterMetrics:
             "sync_cachegen_fallbacks": self.sync_cachegen_fallbacks,
             "cachegen_dropped": self.cachegen_dropped,
             "lookup_s": round(self.lookup_s, 6),
+            "tokens_saved": self.tokens_saved,
+            "lookup_latency": self.lookup_latency.snapshot(),
         }
 
 
@@ -169,6 +245,7 @@ class TwoTierRouter:
         cachegen_pool: Optional[Any] = None,
         cachegen_fallback: bool = True,
         clock: Optional[Callable[[], float]] = None,
+        obs: Optional[MetricsRegistry] = None,
     ):
         self.cache = cache
         self.extract_keyword = extract_keyword
@@ -178,7 +255,11 @@ class TwoTierRouter:
         # injectable time source for latency metrics (repro.sim drives a
         # virtual clock; production uses the monotonic perf counter)
         self._clock = clock if clock is not None else time.perf_counter
-        self.metrics = RouterMetrics()
+        # the serving spine's registry: default to the cache's own, so one
+        # snapshot covers router + store + index without extra wiring
+        if obs is None:
+            obs = getattr(cache, "obs", None)
+        self.metrics = RouterMetrics(obs)
         # GUARD — saturated-pool fallback: when an async cachegen
         # submission is REJECTED (pool saturated / shut down), the wave is
         # generated synchronously on the request thread instead — slower,
@@ -206,12 +287,15 @@ class TwoTierRouter:
         self._lock = threading.Lock()
 
     def route(self, request: Any) -> Any:
-        self.metrics.requests += 1
+        self.metrics.add("requests")
         kw = self.extract_keyword(request)
-        t0 = self._clock()
-        tpl = self.cache.lookup(kw)
-        self.metrics.lookup_s += self._clock() - t0
-        return self._dispatch(request, kw, tpl)
+        with trace_span(_names.SPAN_ROUTE) as sp:
+            t0 = self._clock()
+            with collect() as attrib, trace_span(_names.SPAN_ROUTER_LOOKUP, n=1):
+                tpl = self.cache.lookup(kw)
+            self.metrics.observe_lookup(self._clock() - t0)
+            self._attribution_event(sp, 0, tpl, attrib)
+            return self._dispatch(request, kw, tpl)
 
     def route_batch(self, requests: List[Any]) -> List[Any]:
         """Admit a whole batch of requests through one cache pass.
@@ -224,65 +308,113 @@ class TwoTierRouter:
         admission wave (``insert_batch``: one lock acquisition, one device
         scatter) instead of one insert per miss.
         """
-        self.metrics.requests += len(requests)
+        self.metrics.add("requests", len(requests))
         kws = [self.extract_keyword(r) for r in requests]
-        t0 = self._clock()
-        # PlanStore contract: lookup_batch is the primitive — no capability
-        # probing; any conformant store answers the wave in one pass
-        tpls = self.cache.lookup_batch(kws)
-        self.metrics.lookup_s += self._clock() - t0
+        with trace_span(_names.SPAN_ROUTE_BATCH, batch=len(requests)) as bsp:
+            t0 = self._clock()
+            # PlanStore contract: lookup_batch is the primitive — no
+            # capability probing; any conformant store answers the wave in
+            # one pass. The attribution collector rides the call: resolving
+            # layers deposit (stage, matched_key, node, tier) per index.
+            with collect() as attrib, \
+                    trace_span(_names.SPAN_ROUTER_LOOKUP, n=len(kws)):
+                tpls = self.cache.lookup_batch(kws)
+            self.metrics.observe_lookup(self._clock() - t0)
 
-        out: List[Any] = []
-        wave: List[tuple] = []  # (request, kw, large-tier result) misses
-        for r, kw, tpl in zip(requests, kws, tpls):
-            if tpl is not None:
-                out.append(self._serve_hit(r, tpl))
-            else:
-                result = self._serve_miss(r)
-                out.append(result)
-                wave.append((r, kw, result))
+            out: List[Any] = []
+            wave: List[tuple] = []  # (request, kw, large-tier result) misses
+            for i, (r, kw, tpl) in enumerate(zip(requests, kws, tpls)):
+                self._attribution_event(bsp, i, tpl, attrib)
+                if tpl is not None:
+                    out.append(self._serve_hit(r, tpl))
+                else:
+                    result = self._serve_miss(r)
+                    out.append(result)
+                    wave.append((r, kw, result))
+            bsp.set(hits=len(requests) - len(wave))
 
-        if wave:
-            def gen_and_insert_wave():
-                # per-request failure isolation: one bad make_template must
-                # not discard the rest of the wave's templates (the
-                # per-request path loses only its own); the first error
-                # still surfaces through drain() after the wave lands
-                items, first_err = [], None
-                for r, kw, result in wave:
+            if wave:
+                def gen_and_insert_wave():
+                    # per-request failure isolation: one bad make_template
+                    # must not discard the rest of the wave's templates (the
+                    # per-request path loses only its own); the first error
+                    # still surfaces through drain() after the wave lands
+                    items, first_err = [], None
+                    for r, kw, result in wave:
+                        try:
+                            template = self.make_template(r, result)
+                        except Exception as e:
+                            first_err = first_err or e
+                            continue
+                        if template is not None:
+                            items.append((kw, template))
+                    if items:
+                        self.cache.insert_batch(items)
+                    if first_err is not None:
+                        raise first_err
+                    return items
+
+                gen = self._traced_cachegen(gen_and_insert_wave, len(wave))
+                if self._pool is None or not self._submit_cachegen(
+                    gen, len(wave)
+                ):
+                    # sync mode (or the guarded saturated-pool fallback):
+                    # the batch's plans are already computed and paid for —
+                    # defer the wave error to drain()/close() rather than
+                    # discarding every served result by raising here. Warn
+                    # so a caller that never drains still sees the failure;
+                    # keep the stash bounded (first error is what drain
+                    # re-raises).
                     try:
-                        template = self.make_template(r, result)
+                        gen()
                     except Exception as e:
-                        first_err = first_err or e
-                        continue
-                    if template is not None:
-                        items.append((kw, template))
-                if items:
-                    self.cache.insert_batch(items)
-                if first_err is not None:
-                    raise first_err
-                return items
+                        warnings.warn(
+                            f"cache generation failed for an admission wave "
+                            f"(deferred to drain()): {e!r}"
+                        )
+                        with self._lock:
+                            if len(self._sync_cachegen_errors) < 16:
+                                self._sync_cachegen_errors.append(e)
+            return out
 
-            if self._pool is None or not self._submit_cachegen(
-                gen_and_insert_wave, len(wave)
-            ):
-                # sync mode (or the guarded saturated-pool fallback): the
-                # batch's plans are already computed and paid for — defer
-                # the wave error to drain()/close() rather than discarding
-                # every served result by raising here. Warn so a caller
-                # that never drains still sees the failure; keep the stash
-                # bounded (first error is what drain re-raises).
-                try:
-                    gen_and_insert_wave()
-                except Exception as e:
-                    warnings.warn(
-                        f"cache generation failed for an admission wave "
-                        f"(deferred to drain()): {e!r}"
-                    )
-                    with self._lock:
-                        if len(self._sync_cachegen_errors) < 16:
-                            self._sync_cachegen_errors.append(e)
-        return out
+    def _attribution_event(self, sp: Any, i: int, tpl: Optional[Any],
+                           attrib: Any) -> None:
+        """One ``cache.attribution`` span event for request ``i``: which
+        tier serves it, where the hit came from (stage / matched key /
+        shard / replica tier, deposited by the resolving layers), and the
+        §4.4 cost attribution — the large-planner output tokens the cached
+        template avoids regenerating, which are also (approximately) the
+        adaptation tokens the small planner must now read."""
+        if tpl is None:
+            sp.event(_names.EVENT_ATTRIBUTION, i=i, hit=False, tier="large")
+            return
+        saved = tokens_saved_estimate(tpl)
+        self.metrics.add("tokens_saved", saved)
+        sp.event(
+            _names.EVENT_ATTRIBUTION, i=i, hit=True, tier="small",
+            tokens_saved=saved, adapt_cost_tokens=saved, **attrib.get(i)
+        )
+
+    def _traced_cachegen(self, gen: Callable[[], Any], n: int) -> Callable[[], Any]:
+        """Wrap a cache-generation task in a ``router.cachegen`` span.
+
+        The tracer and parent span are captured at SUBMIT time — pool
+        worker threads have an empty span contextvar, so the async path
+        must parent explicitly (``start_span``/``end``)."""
+        tracer = get_tracer()
+        parent = current_span()
+
+        def traced() -> Any:
+            sp = tracer.start_span(_names.SPAN_CACHEGEN, parent=parent, n=n)
+            try:
+                return gen()
+            except BaseException as e:
+                sp.set(error=type(e).__name__)
+                raise
+            finally:
+                sp.end()
+
+        return traced
 
     def _submit_cachegen(self, gen: Callable[[], Any], n: int) -> bool:
         """Hand one cache-generation task to the async pool.
@@ -291,6 +423,10 @@ class TwoTierRouter:
         ``cachegen_fallback`` guard ablated, dropped); False when the
         caller must run it synchronously — the GUARD path for a rejected
         submission (pool saturated or shut down): slower, never lost.
+
+        All bookkeeping goes through lock-safe registry counters: this
+        method runs on request threads concurrently with other waves, and
+        the historical bare ``+=`` on a shared struct lost increments.
         """
         try:
             fut = self._pool.submit(gen)
@@ -299,27 +435,34 @@ class TwoTierRouter:
                 # ABLATION (repro.sim): the rejected wave is silently
                 # dropped — the distillation loss the cachegen_loss
                 # oracle catches
-                self.metrics.cachegen_dropped += n
+                self.metrics.add("cachegen_dropped", n)
+                current_span().event(
+                    _names.EVENT_CACHEGEN_FATE, fate="dropped", n=n
+                )
                 return True
-            self.metrics.sync_cachegen_fallbacks += n
+            self.metrics.add("sync_cachegen_fallbacks", n)
+            current_span().event(
+                _names.EVENT_CACHEGEN_FATE, fate="sync_fallback", n=n
+            )
             return False
         with self._lock:
             self._pending.append(fut)
-        self.metrics.async_cachegens += n
+        self.metrics.add("async_cachegens", n)
+        current_span().event(_names.EVENT_CACHEGEN_FATE, fate="async", n=n)
         return True
 
     def _serve_hit(self, request: Any, tpl: Any) -> Any:
         """Cache hit: cheap tier adapts the cached template (shared by the
         single and batched admission paths so metrics/policy can't drift)."""
-        self.metrics.hits += 1
-        self.metrics.small_tier_calls += 1
+        self.metrics.add("hits")
+        self.metrics.add("small_tier_calls")
         return self.plan_small_with_template(request, tpl)
 
     def _serve_miss(self, request: Any) -> Any:
         """Cache miss: expensive tier replans (cache distillation is the
         caller's job — per-request future or batched wave)."""
-        self.metrics.misses += 1
-        self.metrics.large_tier_calls += 1
+        self.metrics.add("misses")
+        self.metrics.add("large_tier_calls")
         return self.plan_large(request)
 
     def _dispatch(self, request: Any, kw: str, tpl: Optional[Any]) -> Any:
@@ -333,8 +476,9 @@ class TwoTierRouter:
                 self.cache.insert(kw, template)
             return template
 
-        if self._pool is None or not self._submit_cachegen(gen_and_insert, 1):
-            gen_and_insert()
+        gen = self._traced_cachegen(gen_and_insert, 1)
+        if self._pool is None or not self._submit_cachegen(gen, 1):
+            gen()
         return result
 
     def drain(self, timeout: float = 30.0) -> None:

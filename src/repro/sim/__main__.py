@@ -42,6 +42,7 @@ def _fail_dump(report, dump_dir: str, tag: str) -> str:
     payload = {
         "config": dataclasses.asdict(report.config),
         "trace_hash": report.trace_hash,
+        "span_digest": report.span_digest,
         "violations": [dataclasses.asdict(v) for v in report.violations],
         "store_stats": report.store_stats,
         "router_metrics": report.router_metrics,
@@ -56,11 +57,14 @@ def _fail_dump(report, dump_dir: str, tag: str) -> str:
 
 
 def _run_once(cfg: SimConfig, *, verify_determinism: bool = True):
+    """Run once; on verify, rerun and return (trace_hash, span_digest) —
+    both must match for the cell to count as deterministic."""
     report = run_sim(cfg)
-    rerun_hash = None
+    rerun = None
     if verify_determinism:
-        rerun_hash = run_sim(cfg).trace_hash
-    return report, rerun_hash
+        r2 = run_sim(cfg)
+        rerun = (r2.trace_hash, r2.span_digest)
+    return report, rerun
 
 
 def cmd_single(args) -> int:
@@ -74,12 +78,14 @@ def cmd_single(args) -> int:
     print(f"steps={report.steps} ops={report.ops_applied} "
           f"lookups={report.lookups} inserts={report.inserts}")
     print(f"trace_hash={report.trace_hash}")
+    print(f"span_digest={report.span_digest} spans={report.n_spans}")
     print(f"store_stats={json.dumps(report.store_stats, sort_keys=True)}")
     if report.router_metrics:
         print(f"router={json.dumps(report.router_metrics, sort_keys=True)}")
     ok = True
-    if rerun is not None and rerun != report.trace_hash:
-        print(f"NONDETERMINISTIC: rerun hash {rerun} != {report.trace_hash}")
+    if rerun is not None and rerun != (report.trace_hash, report.span_digest):
+        print(f"NONDETERMINISTIC: rerun {rerun} != "
+              f"{(report.trace_hash, report.span_digest)}")
         ok = False
     for v in report.violations:
         print(f"VIOLATION step={v.step} oracle={v.oracle}: {v.detail}")
@@ -112,8 +118,8 @@ def cmd_check(args) -> int:
                     red.append(f"{tag}: {report.violations[0].oracle}: "
                                f"{report.violations[0].detail}")
                     _fail_dump(report, args.dump_dir, tag)
-                elif rerun != report.trace_hash:
-                    red.append(f"{tag}: nondeterministic trace")
+                elif rerun != (report.trace_hash, report.span_digest):
+                    red.append(f"{tag}: nondeterministic trace/span stream")
                     _fail_dump(report, args.dump_dir, tag)
         if args.ablation_audit:
             # fault-plan guards, plus the scenario-tied guards (e.g. the

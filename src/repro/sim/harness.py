@@ -13,8 +13,11 @@ simultaneously replayed on the sequential :class:`~repro.sim.oracle.
 ModelStore`; divergence is a :class:`~repro.sim.oracle.Violation`.
 
 Determinism contract: ``run_sim(cfg)`` twice returns the identical
-``trace_hash``. On violations the report carries a replayable repro file
-(see ``repro.sim.trace``).
+``trace_hash`` AND the identical ``span_digest`` — the run executes under
+a ``repro.obs`` tracer bound to the virtual clock, so the exported span
+stream (ids, timestamps, attributes) is a pure function of ``(seed,
+config)``, byte-identical across reruns. On violations the report carries
+a replayable repro file (see ``repro.sim.trace``).
 """
 
 from __future__ import annotations
@@ -24,6 +27,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.distributed_cache import DistributedPlanCache
 from repro.envs.workloads import SIM_SCENARIOS, sim_traffic
+from repro.obs import InMemoryExporter, Tracer, use_tracer
 from repro.serving.router import TierPool, TwoTierRouter
 from repro.sim.clock import VirtualClock
 from repro.sim.faults import (
@@ -106,6 +110,12 @@ class SimReport:
     interceptor: Dict[str, int] = field(default_factory=dict)
     cachegen: Optional[Dict[str, int]] = None
     trace_tail: List[Dict[str, Any]] = field(default_factory=list)
+    # observability: blake2b of the canonical span stream (joins the
+    # determinism contract alongside trace_hash), span count, and a
+    # per-span-kind census of the run
+    span_digest: str = ""
+    n_spans: int = 0
+    span_summary: Dict[str, int] = field(default_factory=dict)
 
     @property
     def ok(self) -> bool:
@@ -168,6 +178,11 @@ def run_sim(config: SimConfig) -> SimReport:
             f"unknown ablation key(s) {sorted(unknown)}; "
             f"valid: {list(ALL_ABLATIONS)}"
         )
+
+    # spans bind to the virtual clock: ids are sequential, timestamps are
+    # scheduler-owned, so the exported stream is byte-identical per seed
+    span_exporter = InMemoryExporter()
+    tracer = Tracer(clock=clock, exporters=[span_exporter])
 
     interceptor = SimInterceptor(scheduler, clock)
     store = DistributedPlanCache(
@@ -234,6 +249,7 @@ def run_sim(config: SimConfig) -> SimReport:
             cachegen_pool=cachegen_pool,
             cachegen_fallback="cachegen_fallback" not in cfg.ablate,
             clock=clock,
+            obs=store.obs,
         )
 
     versions: Dict[str, int] = {}
@@ -431,12 +447,18 @@ def run_sim(config: SimConfig) -> SimReport:
     faults = build_fault_schedule(
         cfg.fault, cfg.n_ops * cfg.n_clients, lag_steps=cfg.lag_steps
     )
-    steps = scheduler.run(on_op, faults=faults, on_fault=on_fault)
+    with use_tracer(tracer):
+        steps = scheduler.run(on_op, faults=faults, on_fault=on_fault)
+
+        # drain inside the traced region so late cachegen spans land in the
+        # exported stream before the digest is taken
+        if router is not None:
+            router.drain()
+    tracer.close()
 
     # ---- terminal oracles --------------------------------------------------
 
     if router is not None:
-        router.drain()
         m = router.metrics
         dropped = any(v.oracle == "completeness" for v in violations)
         if m.hits + m.misses != m.requests and not dropped:
@@ -480,6 +502,10 @@ def run_sim(config: SimConfig) -> SimReport:
     if router is not None:
         router.close()
 
+    span_summary: Dict[str, int] = {}
+    for sp in span_exporter.spans:
+        span_summary[sp["name"]] = span_summary.get(sp["name"], 0) + 1
+
     return SimReport(
         config=cfg,
         trace_hash=trace.trace_hash,
@@ -502,6 +528,9 @@ def run_sim(config: SimConfig) -> SimReport:
             }
         ),
         trace_tail=trace.tail,
+        span_digest=span_exporter.digest(),
+        n_spans=tracer.n_spans,
+        span_summary=span_summary,
     )
 
 

@@ -1,6 +1,6 @@
 """Docs hygiene gate (run by the CI docs job and ``make docs-check``).
 
-Four checks, all against the working tree:
+Five checks, all against the working tree:
 
 1. ``README.md`` exists at the repo root.
 2. Every *internal* markdown link in ``README.md`` and ``docs/*.md``
@@ -16,6 +16,11 @@ Four checks, all against the working tree:
    ablation key, and every public ``DistributedPlanCache`` method must
    appear in a code span/fence somewhere in the docs corpus — adding a
    fault plan or a control-plane method without documenting it fails CI.
+5. The observability surface is documented: every metric name, span kind,
+   and span-event kind catalogued in ``repro.obs.names``
+   (``METRIC_NAMES``/``SPAN_NAMES``/``EVENT_NAMES``) must appear in a code
+   span/fence in the docs corpus — instrumenting a new name without adding
+   it to ``docs/observability.md`` fails CI.
 
 Usage:  PYTHONPATH=src python tools/check_docs.py
 """
@@ -156,6 +161,27 @@ def check_coverage(errors: list) -> int:
     return n
 
 
+def check_obs_coverage(errors: list) -> int:
+    """Metric/span/event catalog documentation coverage (check 5)."""
+    names_py = ROOT / "src/repro/obs/names.py"
+    corpus = "\n".join(code_regions(d.read_text()) for d in doc_files())
+    required = {
+        "metric": _module_literal(names_py, "METRIC_NAMES"),
+        "span kind": _module_literal(names_py, "SPAN_NAMES"),
+        "span event": _module_literal(names_py, "EVENT_NAMES"),
+    }
+    n = 0
+    for kind, names in required.items():
+        for name in names:
+            n += 1
+            if not re.search(rf"(?<![\w.]){re.escape(name)}(?![\w.])", corpus):
+                errors.append(
+                    f"{kind} `{name}` (repro/obs/names.py) is not documented "
+                    "in README.md/docs/*.md — add it to docs/observability.md"
+                )
+    return n
+
+
 def main() -> None:
     errors: list = []
     if not (ROOT / "README.md").exists():
@@ -163,12 +189,13 @@ def main() -> None:
     n_links = check_links(errors)
     n_cmds = check_commands(errors)
     n_names = check_coverage(errors)
+    n_obs = check_obs_coverage(errors)
     if errors:
         fail(errors)
     print(
         f"docs OK: {len(doc_files())} documents, {n_links} internal links "
         f"resolve, {n_cmds} quoted commands parse, {n_names} operational "
-        "names covered"
+        f"names covered, {n_obs} metric/span names covered"
     )
 
 

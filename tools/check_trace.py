@@ -1,0 +1,270 @@
+"""Trace artifact gate (run by the CI smoke job and ``make trace-check``).
+
+Validates the artifacts the traced quickstart (``python -m repro.obs``)
+writes, against the schemas ``docs/observability.md`` documents:
+
+1. ``trace.jsonl`` — every line is canonical JSON (``sort_keys``, compact
+   separators — re-serialising must reproduce the bytes), carries exactly
+   the span fields {name, span_id, parent_id, start, end, attrs, events},
+   span ids are unique, every non-null ``parent_id`` resolves to a span in
+   the file, children start no earlier than their parent (children may END
+   after it — async cachegen spans outlive the route that submitted them
+   by design), and every span/event name is catalogued in
+   ``repro.obs.names`` (SPAN_NAMES / EVENT_NAMES).
+2. ``trace_chrome.json`` — valid Chrome trace-event JSON: a
+   ``traceEvents`` list whose entries carry {name, ph, pid, tid}, with
+   ``"X"`` events also carrying numeric ``ts``/``dur`` and ``args``.
+3. Cross-check — the Chrome timeline contains one ``"X"`` event per JSONL
+   span (same multiset of names), so the two exports cannot drift apart.
+4. Acceptance shape — the span forest contains at least one chain
+   router.route_batch -> dcache.lookup_batch -> dcache.tier ->
+   cache.lookup_batch -> match.stage, and at least one
+   ``cache.attribution`` event with ``hit=true`` carries ``tokens_saved``.
+   (Disable with ``--no-require-serving-path`` for traces of other
+   entrypoints.)
+
+Usage:  PYTHONPATH=src python tools/check_trace.py [--dir trace-out]
+        PYTHONPATH=src python tools/check_trace.py trace.jsonl trace_chrome.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import os
+import pathlib
+import sys
+from typing import Any, Dict, List
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+SPAN_FIELDS = {"name", "span_id", "parent_id", "start", "end", "attrs",
+               "events"}
+EVENT_FIELDS = {"name", "t", "attrs"}
+
+# the route_batch acceptance chain: each name must appear as a (transitive)
+# descendant of the previous one
+SERVING_CHAIN = ["router.route_batch", "dcache.lookup_batch", "dcache.tier",
+                 "cache.lookup_batch", "match.stage"]
+
+
+def _catalog(name: str) -> List[str]:
+    """Literal tuple from repro/obs/names.py via the AST (no import)."""
+    path = ROOT / "src/repro/obs/names.py"
+    for node in ast.parse(path.read_text()).body:
+        if isinstance(node, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == name for t in node.targets
+        ):
+            return list(ast.literal_eval(node.value))
+    raise SystemExit(f"FAIL: literal {name} not found in {path}")
+
+
+def check_jsonl(path: str, errors: List[str]) -> List[Dict[str, Any]]:
+    span_kinds = set(_catalog("SPAN_NAMES"))
+    event_kinds = set(_catalog("EVENT_NAMES"))
+    spans: List[Dict[str, Any]] = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.rstrip("\n")
+            if not line:
+                continue
+            where = f"{path}:{lineno}"
+            try:
+                s = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors.append(f"{where}: not JSON ({e})")
+                continue
+            canon = json.dumps(s, sort_keys=True, separators=(",", ":"))
+            if canon != line:
+                errors.append(f"{where}: not canonical JSON "
+                              "(sort_keys + compact separators)")
+            if set(s) != SPAN_FIELDS:
+                errors.append(f"{where}: span fields {sorted(s)} != "
+                              f"{sorted(SPAN_FIELDS)}")
+                continue
+            if s["name"] not in span_kinds:
+                errors.append(f"{where}: span kind {s['name']!r} is not in "
+                              "repro.obs.names.SPAN_NAMES")
+            if not isinstance(s["span_id"], int):
+                errors.append(f"{where}: span_id must be int")
+            if s["parent_id"] is not None and not isinstance(s["parent_id"], int):
+                errors.append(f"{where}: parent_id must be int or null")
+            if not isinstance(s["attrs"], dict):
+                errors.append(f"{where}: attrs must be an object")
+            for fld in ("start", "end"):
+                if not isinstance(s[fld], (int, float)):
+                    errors.append(f"{where}: {fld} must be a number "
+                                  "(finished span)")
+            if isinstance(s["start"], (int, float)) and \
+                    isinstance(s["end"], (int, float)) and s["end"] < s["start"]:
+                errors.append(f"{where}: end {s['end']} < start {s['start']}")
+            if not isinstance(s["events"], list):
+                errors.append(f"{where}: events must be a list")
+                continue
+            for ev in s["events"]:
+                if not isinstance(ev, dict) or set(ev) != EVENT_FIELDS:
+                    errors.append(f"{where}: event fields != "
+                                  f"{sorted(EVENT_FIELDS)}: {ev!r}")
+                elif ev["name"] not in event_kinds:
+                    errors.append(f"{where}: event kind {ev['name']!r} is not "
+                                  "in repro.obs.names.EVENT_NAMES")
+            spans.append(s)
+
+    by_id: Dict[int, Dict[str, Any]] = {}
+    for s in spans:
+        if s["span_id"] in by_id:
+            errors.append(f"{path}: duplicate span_id {s['span_id']}")
+        by_id[s["span_id"]] = s
+    for s in spans:
+        pid = s["parent_id"]
+        if pid is None:
+            continue
+        parent = by_id.get(pid)
+        if parent is None:
+            errors.append(f"{path}: span {s['span_id']} ({s['name']}) has "
+                          f"unknown parent_id {pid}")
+        elif parent["start"] > s["start"]:
+            # end containment is deliberately NOT checked: async cachegen
+            # spans end after the route_batch span that submitted them
+            errors.append(
+                f"{path}: span {s['span_id']} ({s['name']}) starts at "
+                f"{s['start']}, before its parent {pid} ({parent['name']}) "
+                f"at {parent['start']}")
+    return spans
+
+
+def check_chrome(path: str, errors: List[str]) -> List[Dict[str, Any]]:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"{path}: unreadable ({e})")
+        return []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        errors.append(f"{path}: traceEvents must be a list")
+        return []
+    complete: List[Dict[str, Any]] = []
+    for i, ev in enumerate(events):
+        where = f"{path}: traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        missing = {"name", "ph", "pid", "tid"} - set(ev)
+        if missing:
+            errors.append(f"{where}: missing {sorted(missing)}")
+            continue
+        if ev["ph"] == "X":
+            for fld in ("ts", "dur"):
+                if not isinstance(ev.get(fld), (int, float)):
+                    errors.append(f"{where}: 'X' event needs numeric {fld}")
+            if not isinstance(ev.get("args"), dict):
+                errors.append(f"{where}: 'X' event needs args object")
+            else:
+                complete.append(ev)
+        elif ev["ph"] == "i" and not isinstance(ev.get("ts"), (int, float)):
+            errors.append(f"{where}: 'i' event needs numeric ts")
+    return complete
+
+
+def check_cross(spans, chrome_x, errors: List[str]) -> None:
+    want = sorted(s["name"] for s in spans)
+    got = sorted(ev["name"] for ev in chrome_x)
+    if want != got:
+        only_j = [n for n in want if n not in got]
+        only_c = [n for n in got if n not in want]
+        errors.append(
+            "chrome trace drifted from jsonl: "
+            f"{len(want)} jsonl spans vs {len(got)} 'X' events "
+            f"(jsonl-only {only_j[:5]}, chrome-only {only_c[:5]})")
+
+
+def check_serving_path(spans, errors: List[str]) -> None:
+    by_id = {s["span_id"]: s for s in spans}
+
+    def ancestors(s):
+        pid = s["parent_id"]
+        while pid is not None and pid in by_id:
+            yield by_id[pid]
+            pid = by_id[pid]["parent_id"]
+
+    # walk the chain bottom-up from every match.stage span
+    found_chain = False
+    for s in spans:
+        if s["name"] != SERVING_CHAIN[-1]:
+            continue
+        names = [a["name"] for a in ancestors(s)]
+        idx = -1
+        ok = True
+        for want in reversed(SERVING_CHAIN[:-1]):
+            try:
+                idx = names.index(want, idx + 1)
+            except ValueError:
+                ok = False
+                break
+        if ok:
+            found_chain = True
+            break
+    if not found_chain:
+        errors.append("no span chain " + " -> ".join(SERVING_CHAIN) +
+                      " found (traced route_batch missing?)")
+
+    attributed = [
+        ev for s in spans for ev in s["events"]
+        if ev["name"] == "cache.attribution" and ev["attrs"].get("hit")
+    ]
+    if not attributed:
+        errors.append("no cache.attribution event with hit=true "
+                      "(run enough repeats for a cache hit)")
+    elif not any(isinstance(ev["attrs"].get("tokens_saved"), (int, float))
+                 for ev in attributed):
+        errors.append("cache.attribution hits carry no numeric tokens_saved")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python tools/check_trace.py",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="trace.jsonl [trace_chrome.json] (default: --dir)")
+    ap.add_argument("--dir", default="trace-out",
+                    help="directory holding trace.jsonl + trace_chrome.json")
+    ap.add_argument("--no-require-serving-path", action="store_true",
+                    help="skip the route_batch span-chain acceptance check")
+    args = ap.parse_args(argv)
+
+    if args.paths:
+        jsonl = args.paths[0]
+        chrome = args.paths[1] if len(args.paths) > 1 else None
+    else:
+        jsonl = os.path.join(args.dir, "trace.jsonl")
+        chrome = os.path.join(args.dir, "trace_chrome.json")
+
+    errors: List[str] = []
+    if not os.path.exists(jsonl):
+        print(f"FAIL: {jsonl} does not exist")
+        return 1
+    spans = check_jsonl(jsonl, errors)
+    if not spans:
+        errors.append(f"{jsonl}: no spans")
+    chrome_x: List[Dict[str, Any]] = []
+    if chrome is not None:
+        chrome_x = check_chrome(chrome, errors)
+        check_cross(spans, chrome_x, errors)
+    if not args.no_require_serving_path:
+        check_serving_path(spans, errors)
+
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}")
+        return 1
+    n_events = sum(len(s["events"]) for s in spans)
+    print(f"trace OK: {len(spans)} spans ({n_events} events) in {jsonl}"
+          + (f", {len(chrome_x)} complete events in {chrome}"
+             if chrome is not None else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
