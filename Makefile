@@ -7,7 +7,7 @@ test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
 bench-fast:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --fast --only t1,t5,f3,s1 --json-dir bench-json
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --fast --only t1,t4,t5,f3,s1 --json-dir bench-json
 
 docs-check:
 	PYTHONPATH=$(PYTHONPATH) python tools/check_docs.py

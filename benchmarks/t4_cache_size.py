@@ -12,12 +12,15 @@ keeps the reused templates resident, which shows up directly as hit rate.
 
 from __future__ import annotations
 
-from typing import List
+import shutil
+import tempfile
+from typing import List, Optional
 
 from benchmarks.common import Row
 from repro.core.agent_loop import AgentConfig
 from repro.core.cache import PlanCache
 from repro.core.harness import run_workload
+from repro.core.template import PlanStep, PlanTemplate
 
 HOT_KEYS = 20
 TAIL_PER_ROUND = 30
@@ -85,6 +88,79 @@ def eviction_skew_rows(fast: bool = False) -> List[Row]:
     return rows
 
 
+def _template(kw: str, body_chars: int) -> PlanTemplate:
+    """A real (JSON-serializable) template so victims survive a cold spill."""
+    return PlanTemplate(
+        kw,
+        [
+            PlanStep("message", "u" * (body_chars // 2), {"tool": "search"}),
+            PlanStep("output", "o" * body_chars),
+            PlanStep("answer", "done"),
+        ],
+        source_task=kw,
+    )
+
+
+def _skewed_template_stream(cache: PlanCache, rounds: int) -> None:
+    """The eviction_skew stream with real templates: hot entries that a cold
+    tier can bring back after a tail flood churns them out of RAM."""
+    tail_i = 0
+    for _ in range(rounds):
+        for h in range(HOT_KEYS):
+            kw = f"hot-keyword-{h}"
+            if cache.lookup(kw) is None:
+                cache.insert(kw, _template(kw, body_chars=600))
+            cache.lookup(kw)
+        for _ in range(TAIL_PER_ROUND):
+            kw = f"tail-keyword-{tail_i}"
+            tail_i += 1
+            if cache.lookup(kw) is None:
+                cache.insert(kw, _template(kw, body_chars=80))
+
+
+def cold_tier_rows(fast: bool = False) -> List[Row]:
+    """``t4/cold_tier/*``: the same skewed stream with and without the
+    persistent cold tier under the hot store. LRU churns the hot set out on
+    every tail flood; with a cold tier those victims spill to disk and come
+    back as promotes instead of misses, so the hit-rate delta is the direct
+    win of keeping a persistent tier."""
+    rounds = 12 if fast else 40
+    rows = []
+    hit_rates = {}
+    for label, cold in (("hot_only", False), ("with_cold", True)):
+        cold_dir: Optional[str] = (
+            tempfile.mkdtemp(prefix="bench-cold-") if cold else None
+        )
+        try:
+            c = PlanCache(capacity=SKEW_CAPACITY, eviction="lru",
+                          cold_dir=cold_dir, cold_budget_tokens=10**6)
+            _skewed_template_stream(c, rounds)
+            hit_rates[label] = c.stats.hit_rate
+            extra = {"hit_rate": round(c.stats.hit_rate, 3),
+                     "evictions": c.stats.evictions,
+                     "capacity": SKEW_CAPACITY}
+            if cold:
+                extra.update(c.stats.cold_snapshot())
+            rows.append(Row(f"t4/cold_tier/{label}", 0.0, extra))
+        finally:
+            if cold_dir is not None:
+                shutil.rmtree(cold_dir, ignore_errors=True)
+    rows.append(
+        Row(
+            "t4/cold_tier/cold_vs_hot_only",
+            0.0,
+            {
+                "hit_rate_delta": round(
+                    hit_rates["with_cold"] - hit_rates["hot_only"], 3
+                ),
+                "cold_beats_hot_only":
+                    hit_rates["with_cold"] > hit_rates["hot_only"],
+            },
+        )
+    )
+    return rows
+
+
 def run(fast: bool = False) -> List[Row]:
     n = 80 if fast else 200
     sizes = [1, 10, 100] if fast else [1, 10, 20, 50, 100]
@@ -107,4 +183,5 @@ def run(fast: bool = False) -> List[Row]:
             )
         )
     rows += eviction_skew_rows(fast)
+    rows += cold_tier_rows(fast)
     return rows

@@ -24,7 +24,7 @@ import json
 import shutil
 import zlib
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import ml_dtypes
@@ -59,11 +59,24 @@ def _flatten(tree: Any) -> List[Tuple[str, np.ndarray]]:
 
 
 class CheckpointStore:
-    def __init__(self, directory: str, *, n_shards: int = 1, keep_last: int = 3):
+    def __init__(
+        self,
+        directory: str,
+        *,
+        n_shards: int = 1,
+        keep_last: int = 3,
+        pin_check: Optional[Callable[[int], bool]] = None,
+    ):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.n_shards = n_shards
         self.keep_last = keep_last
+        # pin_check(step) -> True means the step is live (externally
+        # referenced — e.g. a cold-tier segment with manifest entries) and
+        # must survive gc regardless of age; keep_last rotation applies
+        # only to unpinned steps. Training checkpoints (no pin_check)
+        # keep the pure age-rotation semantics.
+        self.pin_check = pin_check
 
     # ------------------------------------------------------------------
 
@@ -149,7 +162,15 @@ class CheckpointStore:
 
     def gc(self) -> None:
         steps = self.committed_steps()
-        for s in steps[: -self.keep_last]:
+        # pinned steps are live (see pin_check in __init__): age rotation
+        # only ever considers the unpinned ones, so a referenced cold-tier
+        # segment can never be deleted out from under its manifest no
+        # matter how many newer steps land
+        unpinned = (
+            steps if self.pin_check is None
+            else [s for s in steps if not self.pin_check(s)]
+        )
+        for s in unpinned[: -self.keep_last] if self.keep_last > 0 else unpinned:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
         # remove torn checkpoints (no COMMITTED marker)
         for d in self.dir.glob("step_*"):

@@ -31,8 +31,15 @@ from typing import Any, Callable, Dict, Generic, List, Optional, Sequence, Tuple
 from repro.memory.pipeline import MatchPipeline, build_pipeline
 from repro.memory.policies import CacheEntry, EvictionPolicy, make_policy
 from repro.memory.protocol import CacheStats, PlanStoreBase, V
+from repro.memory.tiered import ColdTier
 from repro.obs import MetricsRegistry, deposit, trace_span
-from repro.obs.names import SPAN_CACHE_INSERT, SPAN_CACHE_LOOKUP, SPAN_MATCH_STAGE
+from repro.obs.names import (
+    SPAN_CACHE_INSERT,
+    SPAN_CACHE_LOOKUP,
+    SPAN_CACHE_PROMOTE,
+    SPAN_CACHE_SPILL,
+    SPAN_MATCH_STAGE,
+)
 
 
 class PlanCache(PlanStoreBase, Generic[V]):
@@ -55,6 +62,11 @@ class PlanCache(PlanStoreBase, Generic[V]):
         pipeline: Optional[Union[MatchPipeline, Sequence[Any]]] = None,
         clock: Optional[Callable[[], float]] = None,
         evict_during_wave: bool = False,
+        serve_expired: bool = False,
+        cold_dir: Optional[str] = None,
+        cold_budget_tokens: int = 160,
+        cold_keep_last: int = 8,
+        cold_refcount_gc: bool = True,
         obs: Optional[MetricsRegistry] = None,
         obs_labels: Optional[Dict[str, str]] = None,
     ):
@@ -69,6 +81,10 @@ class PlanCache(PlanStoreBase, Generic[V]):
         # restores the pre-protocol per-insert eviction so the sim's
         # eviction oracle can demonstrate it catches the regression.
         self._evict_during_wave = evict_during_wave
+        # ABLATION SEAM (repro.sim only): serve_expired=True skips the TTL
+        # check on the lookup path, serving entries past their expiry — the
+        # ttl_churn phantom oracle must catch exactly this.
+        self._serve_expired = serve_expired
         self.fuzzy_threshold = fuzzy_threshold
         self.semantic_threshold = semantic_threshold
         self.index_backend = index_backend
@@ -97,6 +113,22 @@ class PlanCache(PlanStoreBase, Generic[V]):
         self._store: Dict[str, CacheEntry] = {}
         self._lock = threading.RLock()
         self.stats = CacheStats(self.obs, **self.obs_labels)
+        # the cold persistent tier (repro.memory.tiered): eviction victims
+        # spill to CheckpointStore segments and hot misses promote back
+        # through insert_batch; None keeps the historical two-tier shape
+        self.cold: Optional[ColdTier] = (
+            None if cold_dir is None else ColdTier(
+                cold_dir,
+                budget_tokens=cold_budget_tokens,
+                keep_last=cold_keep_last,
+                refcount_gc=cold_refcount_gc,
+            )
+        )
+
+    def now(self) -> float:
+        """The store's clock — capture this before a read whose derived
+        wave will be inserted with ``unless_written_since``."""
+        return self._clock()
 
     @property
     def _matcher(self):
@@ -152,6 +184,27 @@ class PlanCache(PlanStoreBase, Generic[V]):
                                 deposit(i, stage=stage.name, matched_key=alt)
                         ssp.set(resolved=len(pending) - len(still))
                         pending = still
+                if pending and self.cold is not None:
+                    # the cold tier resolves exact keys only, via the
+                    # in-RAM manifest; a manifest hit PROMOTES the entry
+                    # back through the normal insert path (per-key waves,
+                    # in batch order) and serves it from the hot tier
+                    with trace_span(SPAN_MATCH_STAGE, stage="cold",
+                                    pending=len(pending)) as ssp:
+                        still = []
+                        for i in pending:
+                            kw = keywords[i]
+                            v = (self._promote(kw, now)
+                                 if kw in self.cold else None)
+                            if v is None:
+                                still.append(i)
+                            else:
+                                out[i] = v
+                                deposit(i, stage="cold", matched_key=kw,
+                                        cache_tier="cold")
+                                self.stats.add("cold_hits")
+                        ssp.set(resolved=len(pending) - len(still))
+                        pending = still
                 for v in out:
                     if v is None:
                         self.stats.misses += 1
@@ -170,12 +223,36 @@ class PlanCache(PlanStoreBase, Generic[V]):
         entry = self._store.get(keyword)
         if entry is None:
             return None
-        if self.policy.expired(keyword, entry, now):
+        if not self._serve_expired and self.policy.expired(keyword, entry, now):
+            # expiry is a hard delete, never a spill: a TTL'd entry is
+            # stale by contract and must not resurrect from the cold tier
             self._delete(keyword)
             return None
         entry.hits += 1
         self.policy.on_access(keyword, entry)
         return entry.value
+
+    def _promote(self, keyword: str, now: float) -> Optional[V]:
+        """Move one cold entry back to the hot tier and serve it.
+
+        Promotion is a MOVE (the manifest entry is consumed) through the
+        normal ``insert_batch`` path — policy bookkeeping, pipeline index
+        maintenance, and any cascading eviction (which may spill a colder
+        victim, or even re-spill this key if the policy scores it lowest)
+        all behave exactly as a fresh insert. Returns None when the
+        manifest was stale (segment rotated/torn) or the promoted entry
+        did not survive its own admission wave."""
+        got = self.cold.take([keyword])[0]
+        if got is None:
+            return None
+        with trace_span(SPAN_CACHE_PROMOTE, key=keyword, **self.obs_labels):
+            self.insert_batch(
+                [(keyword, got.value)],
+                contexts=[got.context],
+                vectors=None if got.vector is None else [got.vector],
+            )
+            self.stats.add("promotes")
+        return self._get_live(keyword, now)
 
     def _delete(self, keyword: str) -> None:
         del self._store[keyword]
@@ -188,6 +265,7 @@ class PlanCache(PlanStoreBase, Generic[V]):
         *,
         contexts: Optional[Sequence[Optional[str]]] = None,
         vectors: Optional[Any] = None,
+        unless_written_since: Optional[float] = None,
     ) -> None:
         """Insert a whole admission wave under one lock acquisition.
 
@@ -196,7 +274,13 @@ class PlanCache(PlanStoreBase, Generic[V]):
         instead of one index write per key. ``vectors`` lets a caller that
         already embedded the keys (a replicating distributed cache) skip
         re-embedding. Eviction runs after the wave lands, so a wave larger
-        than ``capacity`` keeps its newest entries.
+        than ``capacity`` keeps its newest entries; with a cold tier wired,
+        the wave's victims spill as ONE cold segment at wave end.
+
+        ``unless_written_since`` is conditional admission (see the
+        protocol docs): keys whose live entry was (re)written at or after
+        the token are skipped — the guard against async cache generation
+        clobbering a newer client insert with a stale template.
         """
         items = list(items)
         if contexts is None:
@@ -204,20 +288,61 @@ class PlanCache(PlanStoreBase, Generic[V]):
         with trace_span(SPAN_CACHE_INSERT, n=len(items),
                         **self.obs_labels), self._lock:
             now = self._clock()
-            for kw, v in items:
-                entry = CacheEntry(v, now)
+            kept: List[int] = []
+            victims: List[Tuple[str, CacheEntry]] = []
+
+            def _evict_one() -> None:
+                vk = self.policy.victim(self._store)
+                ventry = self._store[vk]
+                self._delete(vk)
+                self.stats.evictions += 1
+                if self.cold is not None:
+                    victims.append((vk, ventry))
+
+            for idx, (kw, v) in enumerate(items):
+                if unless_written_since is not None:
+                    existing = self._store.get(kw)
+                    if (existing is not None
+                            and existing.inserted_at >= unless_written_since):
+                        self.stats.add("stale_insert_skips")
+                        continue
+                kept.append(idx)
+                entry = CacheEntry(
+                    v, now,
+                    context=contexts[idx],
+                    vector=None if vectors is None else vectors[idx],
+                )
                 self._store[kw] = entry
                 self.policy.on_insert(kw, entry)
                 self.stats.inserts += 1
                 if self._evict_during_wave:
                     while len(self._store) > self.capacity:
-                        self._delete(self.policy.victim(self._store))
-                        self.stats.evictions += 1
-            if items:
-                self.pipeline.on_insert_batch(items, contexts, vectors)
+                        _evict_one()
+            if kept:
+                self.pipeline.on_insert_batch(
+                    [items[i] for i in kept],
+                    [contexts[i] for i in kept],
+                    None if vectors is None else [vectors[i] for i in kept],
+                )
             while len(self._store) > self.capacity:
-                self._delete(self.policy.victim(self._store))
-                self.stats.evictions += 1
+                _evict_one()
+            if victims:
+                self._spill(victims)
+
+    def _spill(self, victims: List[Tuple[str, CacheEntry]]) -> None:
+        """Write one spill wave (this insert wave's eviction victims) to
+        the cold tier: compaction + segment write + manifest commit."""
+        with trace_span(SPAN_CACHE_SPILL, n=len(victims),
+                        **self.obs_labels) as sp:
+            saved = self.cold.spill([
+                (kw, e.value, e.context, e.vector,
+                 float(e.hits + getattr(e.value, "uses", 0)))
+                for kw, e in victims
+            ])
+            self.stats.add("spills", len(victims))
+            if saved:
+                self.stats.add("compaction_saved_tokens", saved)
+            sp.set(saved_tokens=saved)
 
     def peek(self, keyword: str) -> Optional[V]:
         """Value for an exact key WITHOUT hit accounting or policy touches
@@ -243,10 +368,13 @@ class PlanCache(PlanStoreBase, Generic[V]):
             ]
 
     def remove(self, keyword: str) -> bool:
-        """Delete one entry, keeping stage indexes in sync. True if present."""
+        """Delete one entry, keeping stage indexes in sync. True if present
+        in EITHER tier — a removed key must not resurrect from the cold
+        manifest on a later miss."""
         with self._lock:
+            purged = self.cold.purge(keyword) if self.cold is not None else False
             if keyword not in self._store:
-                return False
+                return purged
             self._delete(keyword)
             return True
 
@@ -285,6 +413,8 @@ class PlanCache(PlanStoreBase, Generic[V]):
             self.stats.reset()
             self.policy.reset()
             self.pipeline.clear()
+            if self.cold is not None:
+                self.cold.clear()
 
     # -- serialization (checkpoint/restore of the test-time memory) --------
 

@@ -76,7 +76,9 @@ from __future__ import annotations
 
 import bisect
 import hashlib
+import os
 import threading
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cache import CacheStats, PlanCache
@@ -157,6 +159,9 @@ class DistributedPlanCache(PlanStoreBase):
         interceptor: Optional[Any] = None,
         ack_policy: str = "all",
         ablate: Sequence[str] = (),
+        cold_dir: Optional[str] = None,
+        cold_budget_tokens: int = 160,
+        cold_keep_last: int = 8,
         obs: Optional[MetricsRegistry] = None,
     ):
         if not isinstance(eviction, str):
@@ -185,6 +190,13 @@ class DistributedPlanCache(PlanStoreBase):
         self.interceptor = interceptor
         self.ack_policy = ack_policy
         self.ablate = frozenset(ablate)
+        # cold persistent tier (repro.memory.tiered): every shard gets its
+        # own segment directory under cold_dir — spill/promote stay
+        # shard-local, so they ride the same interceptor seam as the
+        # lookup/insert calls that trigger them
+        self.cold_dir = cold_dir
+        self.cold_budget_tokens = cold_budget_tokens
+        self.cold_keep_last = cold_keep_last
         self.shards: Dict[str, PlanCache] = {}
         self.down: set = set()
         # one registry spans the facade and every shard: shard series carry
@@ -213,6 +225,16 @@ class DistributedPlanCache(PlanStoreBase):
                 # the evict-after-wave guard ablation reaches every shard,
                 # including ones created by later add_node/restart_node
                 evict_during_wave="evict_after_wave" in self.ablate,
+                # ABLATION (ttl_expiry): shards serve expired entries
+                serve_expired="ttl_expiry" in self.ablate,
+                cold_dir=(None if self.cold_dir is None
+                          else os.path.join(self.cold_dir, name)),
+                cold_budget_tokens=self.cold_budget_tokens,
+                cold_keep_last=self.cold_keep_last,
+                # ABLATION (cold_gc_refcount): segments age-rotate even
+                # while the manifest references them — the lost-template
+                # regression the sim's cold_tier durability oracle catches
+                cold_refcount_gc="cold_gc_refcount" not in self.ablate,
                 obs=self.obs,
                 obs_labels={"shard": name},
             )
@@ -490,12 +512,27 @@ class DistributedPlanCache(PlanStoreBase):
             except ShardUnavailable:
                 continue  # write lands on the remaining owners
 
+    def now(self) -> float:
+        """The facade's clock (shared with every shard) — capture before a
+        read whose derived wave inserts with ``unless_written_since``."""
+        return self.clock() if self.clock is not None else time.time()
+
+    def arm_cold_crash(self, waves: int) -> None:
+        """Sim fault seam: arm every shard's cold tier to crash between
+        segment write and manifest commit on its next ``waves`` spill
+        waves (no-op for shards without a cold tier)."""
+        with self._lock:
+            for shard in self.shards.values():
+                if shard.cold is not None:
+                    shard.cold.arm_crash_after_segment(waves)
+
     def insert_batch(
         self,
         items: Sequence[Tuple[str, Any]],
         *,
         contexts: Optional[Sequence[Optional[str]]] = None,
         vectors: Optional[Any] = None,
+        unless_written_since: Optional[float] = None,
     ) -> None:
         """Admission-wave insert: group by owner shard so each shard takes
         the wave in one ``insert_batch`` call (one device scatter per shard
@@ -531,6 +568,10 @@ class DistributedPlanCache(PlanStoreBase):
                     [items[j] for j in idxs],
                     contexts=[contexts[j] for j in idxs],
                     vectors=None if vectors is None else [vectors[j] for j in idxs],
+                    # conditional admission is enforced per shard: each
+                    # shard compares the token against ITS entry timestamps
+                    # (all shards share the facade's clock)
+                    unless_written_since=unless_written_since,
                 )
 
             for n, idxs in primary_by_node.items():

@@ -40,6 +40,7 @@ from repro.memory.policies import (
     make_policy,
 )
 from repro.memory.protocol import CacheStats, PlanStore, PlanStoreBase
+from repro.memory.tiered import ColdEntry, ColdTier, compact_template
 from repro.memory.registry import (
     METHOD_REGISTRY,
     AgentMethod,
@@ -53,6 +54,8 @@ __all__ = [
     "AgentMethod",
     "CacheEntry",
     "CacheStats",
+    "ColdEntry",
+    "ColdTier",
     "CostAwarePolicy",
     "EVICTION_POLICIES",
     "EvictionPolicy",
@@ -68,6 +71,7 @@ __all__ = [
     "SemanticStage",
     "TTLPolicy",
     "build_pipeline",
+    "compact_template",
     "get_method_class",
     "make_method",
     "make_policy",

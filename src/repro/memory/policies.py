@@ -38,6 +38,11 @@ class CacheEntry:
     value: Any
     inserted_at: float
     hits: int = 0  # lookups served by this entry since (re)insert
+    # insertion side-channel kept so a cold-tier spill can round-trip the
+    # entry (repro.memory.tiered): the semantic-stage context string and
+    # the key's embedding vector (None when the store has no fuzzy tier)
+    context: Optional[str] = None
+    vector: Any = None
 
 
 class EvictionPolicy:

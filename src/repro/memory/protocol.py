@@ -23,6 +23,13 @@ This module pins the contract down:
   embeddings instead of having every shard re-embed them. They feed the
   key-matching stages only — a context-matching stage (semantic) always
   embeds its context text itself.
+* ``unless_written_since`` is CONDITIONAL ADMISSION (insert-if-newer): a
+  writer that derived its wave from a cache read at time *t* (async cache
+  generation) passes ``unless_written_since=store.now()`` captured at that
+  read, and any key whose live entry was (re)written at or after *t* is
+  skipped — a slow background distillation can never clobber a newer
+  client insert with a stale template. ``now()`` reads the store's
+  injectable clock so tokens and entry timestamps share one time source.
 
 ``CacheStats`` lives here too (re-exported from ``repro.core.cache`` for
 backward compatibility) so implementations share one accounting shape. It
@@ -81,6 +88,14 @@ class CacheStats:
         "inserts": _names.CACHE_INSERTS,
         "evictions": _names.CACHE_EVICTIONS,
         "lookup_time_s": _names.CACHE_LOOKUP_TIME_S,
+        # cold-tier + conditional-admission accounting (repro.memory.tiered);
+        # stay 0 for two-tier stores, and stay OUT of snapshot() so the
+        # historical snapshot schema is unchanged — read cold_snapshot()
+        "cold_hits": _names.CACHE_COLD_HITS,
+        "spills": _names.CACHE_SPILLS,
+        "promotes": _names.CACHE_PROMOTES,
+        "compaction_saved_tokens": _names.CACHE_COMPACTION_SAVED_TOKENS,
+        "stale_insert_skips": _names.CACHE_STALE_INSERT_SKIPS,
     }
 
     def __init__(self, registry: Optional[MetricsRegistry] = None,
@@ -97,6 +112,11 @@ class CacheStats:
     inserts = _stat_prop("inserts")
     evictions = _stat_prop("evictions")
     lookup_time_s = _stat_prop("lookup_time_s")
+    cold_hits = _stat_prop("cold_hits")
+    spills = _stat_prop("spills")
+    promotes = _stat_prop("promotes")
+    compaction_saved_tokens = _stat_prop("compaction_saved_tokens")
+    stale_insert_skips = _stat_prop("stale_insert_skips")
 
     def add(self, field: str, n: float = 1) -> None:
         """Lock-safe increment (the contract for unlocked callers)."""
@@ -121,6 +141,16 @@ class CacheStats:
             "inserts": self.inserts,
             "evictions": self.evictions,
             "lookup_time_s": round(self.lookup_time_s, 6),
+        }
+
+    def cold_snapshot(self) -> Dict[str, int]:
+        """The tiered-memory counters (all 0 unless a cold tier is wired)."""
+        return {
+            "cold_hits": self.cold_hits,
+            "spills": self.spills,
+            "promotes": self.promotes,
+            "compaction_saved_tokens": self.compaction_saved_tokens,
+            "stale_insert_skips": self.stale_insert_skips,
         }
 
 
@@ -149,7 +179,10 @@ class PlanStore(Protocol):
         *,
         contexts: Optional[Sequence[Optional[str]]] = None,
         vectors: Optional[Any] = None,
+        unless_written_since: Optional[float] = None,
     ) -> None: ...
+
+    def now(self) -> float: ...
 
     def lookup(
         self, keyword: str, *, context: Optional[str] = None
@@ -192,11 +225,13 @@ class PlanStoreBase:
         *,
         context: Optional[str] = None,
         vector: Optional[Any] = None,
+        unless_written_since: Optional[float] = None,
     ) -> None:
         self.insert_batch(
             [(keyword, value)],
             contexts=[context],
             vectors=None if vector is None else [vector],
+            unless_written_since=unless_written_since,
         )
 
 

@@ -1,0 +1,374 @@
+"""Tiered plan memory: the cold persistent tier under the hot stores.
+
+The paper's test-time memory lives in host RAM (``PlanCache``) with hot
+vectors in the DeviceBank; eviction is a hard delete, so cache capacity is
+bounded by one process's RAM. This module adds the third tier: when the
+eviction policy picks a victim, the victim's template (plus its insertion
+context and key embedding) *spills* to a :class:`~repro.checkpoint.store.
+CheckpointStore`-backed on-disk segment instead of vanishing, and a miss
+in the hot tier consults a compact in-RAM **manifest** (key -> segment id,
+``size_tokens``, reuse score) to *promote* the entry back through the
+store's normal ``insert_batch`` path.
+
+Two invariants make the tier safe:
+
+* **two-phase spill** — the segment is written (atomically: the
+  CheckpointStore's ``COMMITTED`` marker) BEFORE the manifest references
+  it. A crash between the two phases loses the spilled entries (they were
+  already evicted from the hot tier) but can never leave the manifest
+  pointing at a segment that does not exist — the manifest is the source
+  of truth for what the cold tier holds.
+* **refcounted segment gc** — segments are garbage-collected by live
+  reference count (entries still in the manifest pin their segment), NOT
+  by ``keep_last`` age rotation: an old segment whose entries were never
+  promoted must survive arbitrarily many newer spill waves. Only
+  fully-unreferenced segments rotate. ``refcount_gc=False`` is the
+  ``repro.sim`` ablation (``cold_gc_refcount``): age rotation deletes
+  live segments and the sim's durability oracle catches the lost
+  templates.
+
+**Template compaction** bounds the bytes a cold entry costs: past a token
+budget, step bodies are truncated and non-skeleton output steps collapse
+into one summary step (the compacting-session-manager pattern — keep the
+slotted skeleton, summarize the bulk). Compaction is idempotent and never
+grows ``size_tokens``; non-template values pass through untouched.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.template import PlanStep, PlanTemplate
+
+# -- template compaction ----------------------------------------------------
+
+# per-step body cap (chars) applied by the truncation pass
+_STEP_CHAR_CAP = 160
+_SUMMARY_PREFIX = "[compacted:"
+
+
+def _truncate_steps(tpl: PlanTemplate) -> PlanTemplate:
+    """Pass 1: cap each step body at ``_STEP_CHAR_CAP`` chars (ops are the
+    slotted skeleton and are kept verbatim)."""
+    steps = [
+        PlanStep(s.kind, s.content[:_STEP_CHAR_CAP], s.op) for s in tpl.steps
+    ]
+    return PlanTemplate(tpl.keyword, steps, tpl.source_task[:_STEP_CHAR_CAP],
+                        tpl.uses)
+
+
+def _elide_outputs(tpl: PlanTemplate) -> PlanTemplate:
+    """Pass 2: collapse the non-skeleton ``output`` steps into ONE summary
+    step. Message steps (the slotted plan skeleton) and the answer step
+    are kept; an existing summary step is not re-summarized (idempotence)."""
+    kept: List[PlanStep] = []
+    elided = 0
+    summary_at: Optional[int] = None
+    for s in tpl.steps:
+        if s.kind == "output" and not s.content.startswith(_SUMMARY_PREFIX):
+            elided += 1
+            if summary_at is None:
+                summary_at = len(kept)
+                kept.append(None)  # placeholder, patched below
+            continue
+        kept.append(s)
+    if elided == 0:
+        return tpl
+    kept[summary_at] = PlanStep(
+        "output", f"{_SUMMARY_PREFIX} {elided} output step(s) elided]", None
+    )
+    return PlanTemplate(tpl.keyword, kept, tpl.source_task, tpl.uses)
+
+
+def compact_template(value: Any, *, budget_tokens: int = 160) -> Tuple[Any, int]:
+    """Compact ``value`` toward ``budget_tokens``; returns ``(value',
+    saved_tokens)``.
+
+    Only :class:`~repro.core.template.PlanTemplate` values compact —
+    anything else (sim payload dicts, benchmark stand-ins) passes through
+    with 0 saved. Guarantees: idempotent (compacting a compacted template
+    is the identity) and monotone (``size_tokens`` never grows — a pass
+    whose result is not strictly smaller is discarded).
+    """
+    if not isinstance(value, PlanTemplate):
+        return value, 0
+    before = value.size_tokens()
+    out = value
+    for compact_pass in (_truncate_steps, _elide_outputs):
+        if out.size_tokens() <= budget_tokens:
+            break
+        candidate = compact_pass(out)
+        if candidate.size_tokens() < out.size_tokens():
+            out = candidate
+    return out, before - out.size_tokens()
+
+
+# -- cold-entry serialization ------------------------------------------------
+#
+# Segments carry JSON (as a uint8 array leaf through the CheckpointStore's
+# crc-verified shard files): templates round-trip through a tagged encoding,
+# plain JSON values pass through, embedding vectors travel as float lists.
+
+
+def _encode_value(v: Any) -> Any:
+    if isinstance(v, PlanTemplate):
+        return {
+            "__plan_template__": {
+                "keyword": v.keyword,
+                "steps": [s.to_json() for s in v.steps],
+                "source_task": v.source_task,
+                "uses": v.uses,
+            }
+        }
+    return v
+
+
+def _decode_value(v: Any) -> Any:
+    if isinstance(v, dict) and "__plan_template__" in v:
+        d = v["__plan_template__"]
+        return PlanTemplate(
+            keyword=d["keyword"],
+            steps=[PlanStep(s["kind"], s["content"], s["op"])
+                   for s in d["steps"]],
+            source_task=d["source_task"],
+            uses=d["uses"],
+        )
+    return v
+
+
+class ColdEntry:
+    """One promoted cold-tier record (value + its insertion side-channel)."""
+
+    __slots__ = ("value", "context", "vector")
+
+    def __init__(self, value: Any, context: Optional[str], vector: Optional[Any]):
+        self.value = value
+        self.context = context
+        self.vector = vector
+
+
+class ColdTier:
+    """Manifest + CheckpointStore-backed segments for evicted templates.
+
+    Thread-safety: all public methods take the tier's own lock; the owning
+    ``PlanCache`` additionally serializes spill/promote under its store
+    lock, so the lock here only protects direct ColdTier users (tests,
+    benchmarks).
+    """
+
+    def __init__(
+        self,
+        directory: str,
+        *,
+        budget_tokens: int = 160,
+        keep_last: int = 8,
+        refcount_gc: bool = True,
+    ):
+        # local import: checkpoint pulls in jax; memory.policies must stay
+        # importable without it
+        from repro.checkpoint.store import CheckpointStore
+
+        self.budget_tokens = budget_tokens
+        # ABLATION SEAM (repro.sim only): refcount_gc=False drops the
+        # pin_check, so keep_last age rotation deletes segments that still
+        # have live manifest entries — the lost-template regression the
+        # sim's cold_tier durability oracle catches.
+        self.refcount_gc = refcount_gc
+        self.store = CheckpointStore(
+            directory,
+            keep_last=keep_last,
+            pin_check=(self._segment_live if refcount_gc else None),
+        )
+        # the compact in-RAM manifest: key -> {segment, size_tokens, score}
+        self.manifest: Dict[str, Dict[str, Any]] = {}
+        self._seg_refs: Dict[int, int] = {}  # segment id -> live entries
+        self._next_segment = 0
+        self._crash_after_segment = 0  # sim fault arming (count-based)
+        self._lock = threading.RLock()
+        # resume: adopt committed segments left by a previous process so a
+        # fresh manifest never collides with their ids (their entries are
+        # unreachable without the in-RAM manifest and gc will reclaim them)
+        steps = self.store.committed_steps()
+        if steps:
+            self._next_segment = steps[-1] + 1
+
+    # -- introspection ------------------------------------------------------
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self.manifest)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self.manifest
+
+    def keys(self) -> List[str]:
+        with self._lock:
+            return sorted(self.manifest)
+
+    def _segment_live(self, segment: int) -> bool:
+        return self._seg_refs.get(segment, 0) > 0
+
+    def live_segments(self) -> List[int]:
+        with self._lock:
+            return sorted(s for s, n in self._seg_refs.items() if n > 0)
+
+    # -- sim fault seam ------------------------------------------------------
+
+    def arm_crash_after_segment(self, waves: int) -> None:
+        """Sim fault: the next ``waves`` spill waves crash between the
+        segment write and the manifest commit — the segment lands on disk
+        but the manifest never references it (entries lost; gc reclaims
+        the orphan). Deterministic, count-based, mirrored by the sim's
+        ModelStore."""
+        with self._lock:
+            self._crash_after_segment = waves
+
+    # -- spill / fetch / take ------------------------------------------------
+
+    def spill(
+        self,
+        entries: Sequence[Tuple[str, Any, Optional[str], Optional[Any], float]],
+    ) -> int:
+        """Write one spill wave ``(key, value, context, vector, score)`` as
+        ONE segment, then commit the manifest. Returns the compaction
+        tokens saved across the wave.
+
+        Phase order is load-bearing: segment first (atomic via the
+        CheckpointStore COMMITTED marker), manifest second — a crash
+        between the phases loses the wave (already evicted from hot) but
+        never yields a manifest entry without a segment behind it.
+        """
+        if not entries:
+            return 0
+        with self._lock:
+            records = []
+            saved_total = 0
+            for key, value, context, vector, score in entries:
+                value, saved = compact_template(
+                    value, budget_tokens=self.budget_tokens
+                )
+                saved_total += saved
+                size_fn = getattr(value, "size_tokens", None)
+                records.append({
+                    "key": key,
+                    "value": _encode_value(value),
+                    "context": context,
+                    "vector": (None if vector is None
+                               else np.asarray(vector, dtype=np.float32).tolist()),
+                    "size_tokens": int(size_fn()) if callable(size_fn) else 1,
+                    "score": float(score),
+                })
+            segment = self._next_segment
+            self._next_segment += 1
+            payload = np.frombuffer(
+                json.dumps(records, sort_keys=True).encode(), dtype=np.uint8
+            )
+            # phase 1: the segment (atomic; also runs gc over unpinned ones)
+            self.store.save(segment, {"payload": payload})
+            if self._crash_after_segment > 0:
+                # injected crash between segment write and manifest commit:
+                # the wave is lost (the orphan segment has no references and
+                # will be reclaimed by gc)
+                self._crash_after_segment -= 1
+                return saved_total
+            # phase 2: the manifest commit makes the wave visible
+            for rec in records:
+                self._drop_ref(rec["key"])  # overwrite: release the old segment
+                self.manifest[rec["key"]] = {
+                    "segment": segment,
+                    "size_tokens": rec["size_tokens"],
+                    "score": rec["score"],
+                }
+                self._seg_refs[segment] = self._seg_refs.get(segment, 0) + 1
+            return saved_total
+
+    def _drop_ref(self, key: str) -> None:
+        meta = self.manifest.pop(key, None)
+        if meta is not None:
+            seg = meta["segment"]
+            self._seg_refs[seg] = self._seg_refs.get(seg, 1) - 1
+            if self._seg_refs[seg] <= 0:
+                del self._seg_refs[seg]
+
+    def _read_segment(self, segment: int) -> Dict[str, Dict[str, Any]]:
+        template = {"payload": np.zeros(0, dtype=np.uint8)}
+        try:
+            tree, _ = self.store.restore(template, step=segment)
+        except (FileNotFoundError, KeyError, IOError):
+            return {}
+        records = json.loads(bytes(np.asarray(tree["payload"])).decode())
+        return {r["key"]: r for r in records}
+
+    def fetch(self, keys: Sequence[str]) -> List[Optional[ColdEntry]]:
+        """Resolve ``keys`` against the manifest and load the referenced
+        segments (one read per distinct segment). Entries stay in the cold
+        tier — use :meth:`take` for promotion."""
+        with self._lock:
+            out: List[Optional[ColdEntry]] = [None] * len(keys)
+            by_segment: Dict[int, List[int]] = {}
+            for i, k in enumerate(keys):
+                meta = self.manifest.get(k)
+                if meta is not None:
+                    by_segment.setdefault(meta["segment"], []).append(i)
+            for segment, idxs in by_segment.items():
+                records = self._read_segment(segment)
+                for i in idxs:
+                    rec = records.get(keys[i])
+                    if rec is None:
+                        # the segment is gone or torn (e.g. age-rotated by
+                        # the gc ablation): the manifest entry is stale —
+                        # drop it so the miss is accounted once
+                        self._drop_ref(keys[i])
+                        continue
+                    vec = rec["vector"]
+                    out[i] = ColdEntry(
+                        _decode_value(rec["value"]),
+                        rec["context"],
+                        None if vec is None else np.asarray(vec, dtype=np.float32),
+                    )
+            return out
+
+    def take(self, keys: Sequence[str]) -> List[Optional[ColdEntry]]:
+        """Fetch + remove: the promotion primitive (an entry lives in
+        exactly one tier, so promoting moves it out of the manifest and
+        unpins its segment)."""
+        with self._lock:
+            got = self.fetch(keys)
+            for k, e in zip(keys, got):
+                if e is not None:
+                    self._drop_ref(k)
+            return got
+
+    # -- maintenance ---------------------------------------------------------
+
+    def purge(self, key: str) -> bool:
+        """Drop one cold entry (store ``remove`` reaches the cold tier too —
+        a removed key must not resurrect on a later miss)."""
+        with self._lock:
+            present = key in self.manifest
+            self._drop_ref(key)
+            return present
+
+    def clear(self) -> None:
+        with self._lock:
+            self.manifest.clear()
+            self._seg_refs.clear()
+            self.store.gc()  # nothing is pinned now; reclaim segments
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "entries": len(self.manifest),
+                "segments": len(self._seg_refs),
+                "size_tokens": sum(
+                    m["size_tokens"] for m in self.manifest.values()
+                ),
+            }
+
+
+__all__ = ["ColdEntry", "ColdTier", "compact_template"]

@@ -36,6 +36,11 @@ CACHE_MISSES = "cache.misses"
 CACHE_INSERTS = "cache.inserts"
 CACHE_EVICTIONS = "cache.evictions"
 CACHE_LOOKUP_TIME_S = "cache.lookup_time_s"
+CACHE_COLD_HITS = "cache.cold_hits"
+CACHE_SPILLS = "cache.spills"
+CACHE_PROMOTES = "cache.promotes"
+CACHE_COMPACTION_SAVED_TOKENS = "cache.compaction_saved_tokens"
+CACHE_STALE_INSERT_SKIPS = "cache.stale_insert_skips"
 
 LSH_QUERIES = "index.lsh.queries"
 LSH_PROBED_QUERIES = "index.lsh.probed_queries"
@@ -70,6 +75,11 @@ METRIC_NAMES = (
     "cache.inserts",
     "cache.evictions",
     "cache.lookup_time_s",
+    "cache.cold_hits",
+    "cache.spills",
+    "cache.promotes",
+    "cache.compaction_saved_tokens",
+    "cache.stale_insert_skips",
     "index.lsh.queries",
     "index.lsh.probed_queries",
     "index.lsh.brute_fallback_queries",
@@ -98,6 +108,8 @@ SPAN_DCACHE_TIER = "dcache.tier"
 SPAN_SHARD_CALL = "dcache.shard_call"
 SPAN_CACHE_LOOKUP = "cache.lookup_batch"
 SPAN_CACHE_INSERT = "cache.insert_batch"
+SPAN_CACHE_SPILL = "cache.spill"
+SPAN_CACHE_PROMOTE = "cache.promote"
 SPAN_MATCH_STAGE = "match.stage"
 SPAN_INDEX_TOPK = "index.topk"
 SPAN_ENGINE_GENERATE = "engine.generate"
@@ -113,6 +125,8 @@ SPAN_NAMES = (
     "dcache.shard_call",
     "cache.lookup_batch",
     "cache.insert_batch",
+    "cache.spill",
+    "cache.promote",
     "match.stage",
     "index.topk",
     "engine.generate",

@@ -286,16 +286,25 @@ class TwoTierRouter:
         self._sync_cachegen_errors: List[BaseException] = []
         self._lock = threading.Lock()
 
+    def _read_token(self) -> Optional[float]:
+        """Conditional-admission token: the store clock captured at lookup
+        time, so the distilled wave inserts with ``unless_written_since``
+        and can never clobber an entry written after this read (None for
+        legacy stores without ``now()``)."""
+        now_fn = getattr(self.cache, "now", None)
+        return now_fn() if callable(now_fn) else None
+
     def route(self, request: Any) -> Any:
         self.metrics.add("requests")
         kw = self.extract_keyword(request)
         with trace_span(_names.SPAN_ROUTE) as sp:
+            token = self._read_token()
             t0 = self._clock()
             with collect() as attrib, trace_span(_names.SPAN_ROUTER_LOOKUP, n=1):
                 tpl = self.cache.lookup(kw)
             self.metrics.observe_lookup(self._clock() - t0)
             self._attribution_event(sp, 0, tpl, attrib)
-            return self._dispatch(request, kw, tpl)
+            return self._dispatch(request, kw, tpl, token)
 
     def route_batch(self, requests: List[Any]) -> List[Any]:
         """Admit a whole batch of requests through one cache pass.
@@ -311,6 +320,7 @@ class TwoTierRouter:
         self.metrics.add("requests", len(requests))
         kws = [self.extract_keyword(r) for r in requests]
         with trace_span(_names.SPAN_ROUTE_BATCH, batch=len(requests)) as bsp:
+            token = self._read_token()
             t0 = self._clock()
             # PlanStore contract: lookup_batch is the primitive — no
             # capability probing; any conformant store answers the wave in
@@ -349,7 +359,16 @@ class TwoTierRouter:
                         if template is not None:
                             items.append((kw, template))
                     if items:
-                        self.cache.insert_batch(items)
+                        # insert-if-newer: this wave derives from the
+                        # lookup above — an entry (re)written since then
+                        # (client insert, another wave) must win over the
+                        # possibly-slow async distillation
+                        if token is not None:
+                            self.cache.insert_batch(
+                                items, unless_written_since=token
+                            )
+                        else:
+                            self.cache.insert_batch(items)
                     if first_err is not None:
                         raise first_err
                     return items
@@ -465,7 +484,8 @@ class TwoTierRouter:
         self.metrics.add("large_tier_calls")
         return self.plan_large(request)
 
-    def _dispatch(self, request: Any, kw: str, tpl: Optional[Any]) -> Any:
+    def _dispatch(self, request: Any, kw: str, tpl: Optional[Any],
+                  token: Optional[float] = None) -> Any:
         if tpl is not None:
             return self._serve_hit(request, tpl)
         result = self._serve_miss(request)
@@ -473,7 +493,11 @@ class TwoTierRouter:
         def gen_and_insert():
             template = self.make_template(request, result)
             if template is not None:
-                self.cache.insert(kw, template)
+                if token is not None:
+                    self.cache.insert(kw, template,
+                                      unless_written_since=token)
+                else:
+                    self.cache.insert(kw, template)
             return template
 
         gen = self._traced_cachegen(gen_and_insert, 1)

@@ -104,10 +104,15 @@ def cmd_check(args) -> int:
     """CI matrix: seeds x scenarios x fault plans, guards on + ablation audit."""
     red: List[str] = []
     cells = 0
+    # plans that pin their own scenario (SimConfig.normalized) run once
+    # per seed under it; other scenario pairings would be duplicate cells
+    pinned = {"mid_wave_evict": "evict_then_hit",
+              "cold_tier": "evict_then_hit",
+              "ttl_churn": "skewed_reuse"}
     for seed in range(args.seeds):
         for scenario in SIM_SCENARIOS:
             for fault in FAULT_PLANS:
-                if fault == "mid_wave_evict" and scenario != "evict_then_hit":
+                if fault in pinned and scenario != pinned[fault]:
                     continue  # plan pins its scenario; skip duplicate cells
                 cfg = SimConfig(seed=seed, scenario=scenario, fault=fault,
                                 n_ops=args.ops)

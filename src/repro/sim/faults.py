@@ -20,6 +20,11 @@ plan                      guard under test                            ablation k
                           rebalances, ``remove_node`` drains)
 ``async_cachegen``        rejected-submission sync fallback in        ``cachegen_fallback``
                           ``TwoTierRouter`` (no dropped waves)
+``cold_tier``             manifest-refcounted cold-segment gc in      ``cold_gc_refcount``
+                          ``ColdTier`` (age rotation must never
+                          delete a segment with live entries)
+``ttl_churn``             expire-on-touch in ``PlanCache._get_live``  ``ttl_expiry``
+                          (an expired entry must never be served)
 ========================  ==========================================  ===========================
 
 One guard is tied to a *scenario* rather than a fault plan: the fuzzy
@@ -39,7 +44,8 @@ from repro.sim.clock import VirtualClock
 from repro.sim.scheduler import StepScheduler
 
 FAULT_PLANS = ("none", "crash_restart", "replica_lag", "hedge_timeout",
-               "mid_wave_evict", "membership_churn", "async_cachegen")
+               "mid_wave_evict", "membership_churn", "async_cachegen",
+               "cold_tier", "ttl_churn")
 
 # guard-ablation keys, by the plan whose oracle they trip
 ABLATION_OF = {
@@ -49,6 +55,8 @@ ABLATION_OF = {
     "mid_wave_evict": "evict_after_wave",
     "membership_churn": "churn_rehome",
     "async_cachegen": "cachegen_fallback",
+    "cold_tier": "cold_gc_refcount",
+    "ttl_churn": "ttl_expiry",
 }
 
 # guard-ablation keys tripped by a traffic scenario instead of a fault plan
@@ -233,7 +241,13 @@ def build_fault_schedule(plan: str, n_steps: int, *, node: str = "cache-1",
         node mid-wave / gracefully ``remove_node`` one, racing the client
         traffic (``membership_churn``);
       * ``pool_saturate``      — arm N rejected cachegen submissions on
-        the sim worker pool (``async_cachegen``).
+        the sim worker pool (``async_cachegen``);
+      * ``cold_crash``         — arm N spill-wave crashes between segment
+        write and manifest commit on store AND model (``cold_tier``): the
+        entries are lost on both sides, deterministically, proving the
+        two-phase spill ordering is mirrored;
+      * ``ttl_pressure``       — marker only: the ttl plan does its damage
+        through config (short ``ttl_s`` against skewed reuse gaps).
     """
     if plan not in FAULT_PLANS:
         raise ValueError(f"unknown fault plan {plan!r}; one of {FAULT_PLANS}")
@@ -274,6 +288,14 @@ def build_fault_schedule(plan: str, n_steps: int, *, node: str = "cache-1",
         # the distilled waves (cachegen_loss oracle)
         sched.inject(q, "pool_saturate", calls=6)
         sched.inject(3 * q, "pool_saturate", calls=6)
+    elif plan == "cold_tier":
+        # lose one spill wave mid-run and one late: a crash between the
+        # segment write and the manifest commit must lose the wave WHOLE
+        # (no template both lost and unevicted) on store and model alike
+        sched.inject(q, "cold_crash", calls=1)
+        sched.inject(3 * q, "cold_crash", calls=1)
+    elif plan == "ttl_churn":
+        sched.inject(q, "ttl_pressure")
     return sched
 
 

@@ -22,6 +22,8 @@ a replayable repro file (see ``repro.sim.trace``).
 
 from __future__ import annotations
 
+import shutil
+import tempfile
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -47,7 +49,7 @@ from repro.sim.trace import TraceRecorder
 # ablation keys consumed by DistributedPlanCache's own seams (the rest are
 # consumed by the harness/router wiring below)
 _STORE_ABLATIONS = ("crash_fallthrough", "evict_after_wave", "churn_rehome",
-                    "fuzzy_scatter")
+                    "fuzzy_scatter", "cold_gc_refcount", "ttl_expiry")
 
 
 @dataclass
@@ -69,6 +71,12 @@ class SimConfig:
     cachegen_workers: int = 2
     lag_steps: int = 6
     ablate: Tuple[str, ...] = ()  # guard ablations (faults.ALL_ABLATIONS)
+    # tiered-memory knobs: cold_tier spills capacity victims to an on-disk
+    # segment tier (a per-run temp directory — the flag, not a path, lives
+    # here so replay JSON stays machine-independent); ttl_s wraps the
+    # eviction policy in expire-on-touch
+    cold_tier: bool = False
+    ttl_s: Optional[float] = None
 
     def normalized(self) -> "SimConfig":
         """Fill in plan-specific defaults (documented per fault plan)."""
@@ -90,6 +98,37 @@ class SimConfig:
                 replication=1,
                 capacity_per_node=min(cfg.capacity_per_node, 8),
                 batch=max(cfg.batch, 12),
+            )
+        if cfg.fault == "cold_tier":
+            # single-shard, exact-match, heavy eviction pressure: every
+            # wave spills, immediate re-lookups promote. Exact-only keeps
+            # the model's per-key promote replay aligned with the store's
+            # in-wave cold stage (fuzzy would re-resolve mid-wave against
+            # an index the store only updates at wave end)
+            cfg = replace(
+                cfg,
+                scenario="evict_then_hit",
+                fuzzy=False,
+                n_nodes=1,
+                replication=1,
+                capacity_per_node=min(cfg.capacity_per_node, 8),
+                batch=max(cfg.batch, 12),
+                cold_tier=True,
+            )
+        if cfg.fault == "ttl_churn":
+            # expiry-vs-lookup races: skewed reuse gaps straddle a short
+            # TTL so hot keys survive while the tail expires under
+            # concurrent lookups. Exact-only: an intra-wave expiry deletes
+            # a key from the store's fuzzy index between two queries of
+            # the SAME wave, which the model (per-key replay) cannot
+            # mirror — the exact pipeline has no such coupling
+            cfg = replace(
+                cfg,
+                scenario="skewed_reuse",
+                fuzzy=False,
+                n_nodes=1,
+                replication=1,
+                ttl_s=cfg.ttl_s if cfg.ttl_s is not None else 0.05,
             )
         if cfg.scenario == "paraphrase_burst":
             cfg = replace(cfg, fuzzy=True)
@@ -116,6 +155,8 @@ class SimReport:
     span_digest: str = ""
     n_spans: int = 0
     span_summary: Dict[str, int] = field(default_factory=dict)
+    # tiered-memory accounting (all 0 unless cold_tier/ttl was configured)
+    cold_stats: Dict[str, int] = field(default_factory=dict)
 
     @property
     def ok(self) -> bool:
@@ -144,14 +185,17 @@ class _RecordingStore:
 
     def __init__(self, store: DistributedPlanCache):
         self._store = store
-        self._waves: List[List[Tuple[str, Any]]] = []
+        # (wave, unless_written_since token) — the token travels with the
+        # wave so the model's conditional-admission replay sees exactly
+        # the timestamp each shard compared against
+        self._waves: List[Tuple[List[Tuple[str, Any]], Optional[float]]] = []
 
     def insert_batch(self, items, **kw):
         items = list(items)
-        self._waves.append(items)
+        self._waves.append((items, kw.get("unless_written_since")))
         return self._store.insert_batch(items, **kw)
 
-    def drain_waves(self) -> List[List[Tuple[str, Any]]]:
+    def drain_waves(self) -> List[Tuple[List[Tuple[str, Any]], Optional[float]]]:
         waves, self._waves = self._waves, []
         return waves
 
@@ -161,6 +205,18 @@ class _RecordingStore:
 
 def run_sim(config: SimConfig) -> SimReport:
     cfg = config.normalized()
+    # the cold tier is REAL on-disk state (CheckpointStore segments): each
+    # universe gets a throwaway directory whose path never reaches the
+    # trace/span streams, so determinism digests stay machine-independent
+    cold_dir = tempfile.mkdtemp(prefix="sim-cold-") if cfg.cold_tier else None
+    try:
+        return _run_sim(cfg, cold_dir)
+    finally:
+        if cold_dir is not None:
+            shutil.rmtree(cold_dir, ignore_errors=True)
+
+
+def _run_sim(cfg: SimConfig, cold_dir: Optional[str]) -> SimReport:
     if cfg.scenario not in SIM_SCENARIOS:
         raise ValueError(f"unknown scenario {cfg.scenario!r}")
     if cfg.fault not in FAULT_PLANS:
@@ -196,6 +252,12 @@ def run_sim(config: SimConfig) -> SimReport:
         interceptor=interceptor,
         ack_policy="primary" if "replica_ack" in cfg.ablate else "all",
         ablate=[a for a in cfg.ablate if a in _STORE_ABLATIONS],
+        ttl_s=cfg.ttl_s,
+        cold_dir=cold_dir,
+        # tiny rotation horizon so the ablated (age-based) gc actually
+        # deletes still-referenced segments within a short run — under the
+        # refcount guard the same horizon never touches a live segment
+        cold_keep_last=2,
     )
     interceptor.lag_steps = cfg.lag_steps
 
@@ -206,6 +268,11 @@ def run_sim(config: SimConfig) -> SimReport:
         exact_only=not cfg.fuzzy,
         fuzzy=cfg.fuzzy,
         fuzzy_threshold=cfg.fuzzy_threshold,
+        clock=clock,
+        # the model ALWAYS encodes the spec — an ablated store diverges
+        # from it, which is exactly what the audit cells assert
+        ttl_s=cfg.ttl_s,
+        cold_enabled=cfg.cold_tier,
     )
     for name in list(store.shards):
         model.add_node(name)
@@ -260,18 +327,19 @@ def run_sim(config: SimConfig) -> SimReport:
         """Replay the router's recorded admission waves on the model at
         the step they landed (sync: inside the route op; async: inside the
         cachegen worker op the scheduler chose to run)."""
-        for wave in rec.drain_waves():
+        for wave, token in rec.drain_waves():
             for kw, _ in wave:
                 versions.setdefault(kw, 0)
-            model.insert_wave(wave)
+            model.insert_wave(wave, unless_written_since=token)
             counters["inserts"] += len(wave)
             distill["landed"] += len(wave)
 
     # ---- op application ----------------------------------------------------
 
     def check_lookup(step: int, kws: List[str], got: List[Optional[Any]]) -> None:
-        for kw, real in zip(kws, got):
-            expected, strict = model.lookup(kw)
+        # wave-level replay: the model mirrors the store's stage structure
+        # (hot pass for every query, then the cold pass), not key-by-key
+        for kw, real, (expected, strict) in zip(kws, got, model.lookup_wave(kws)):
             if real is not None and value_torn(real):
                 violations.append(Violation(step, "torn_entry",
                                             f"{kw!r} -> corrupt value {real!r}"))
@@ -434,6 +502,13 @@ def run_sim(config: SimConfig) -> SimReport:
         elif spec.kind == "pool_saturate":
             if cachegen_pool is not None:
                 cachegen_pool.arm_saturation(d["calls"])
+        elif spec.kind == "cold_crash":
+            # arm BOTH sides: the store's next spill wave dies between
+            # segment write and manifest commit; the model drops the same
+            # wave, so the loss is deterministic and the oracles prove it
+            # is whole-wave (nothing both lost and unevicted)
+            store.arm_cold_crash(d["calls"])
+            model.arm_cold_crash(d["calls"])
         trace.record(step, "fault", spec.kind, d)
 
     # ---- run ---------------------------------------------------------------
@@ -482,7 +557,8 @@ def run_sim(config: SimConfig) -> SimReport:
             violations.append(Violation(
                 steps, "capacity",
                 f"{name} holds {len(shard)} > capacity {cfg.capacity_per_node}"))
-    if not cfg.fuzzy and cfg.fault in ("none", "mid_wave_evict"):
+    if not cfg.fuzzy and cfg.fault in ("none", "mid_wave_evict",
+                                       "cold_tier", "ttl_churn"):
         # eviction conservation: the store must evict exactly the victims
         # the sequential policy replay evicts (a shard restart would reset
         # shard counters, so crash plans skip this check; fuzzy cells skip
@@ -531,6 +607,13 @@ def run_sim(config: SimConfig) -> SimReport:
         span_digest=span_exporter.digest(),
         n_spans=tracer.n_spans,
         span_summary=span_summary,
+        # spill/promote accounting lands on the shard-labeled counters
+        # (spills happen inside shard insert waves), so aggregate those
+        cold_stats={
+            k: sum(sh.stats.cold_snapshot()[k]
+                   for sh in store.shards.values())
+            for k in s.cold_snapshot()
+        },
     )
 
 

@@ -91,6 +91,9 @@ class ModelStore:
         fuzzy: bool = False,
         fuzzy_threshold: float = 0.8,
         index_backend: str = "auto",
+        clock: Optional[Any] = None,
+        ttl_s: Optional[float] = None,
+        cold_enabled: bool = False,
     ):
         if eviction not in ("lru", "cost"):
             raise ValueError("model replays eviction for 'lru' and 'cost' only")
@@ -101,15 +104,44 @@ class ModelStore:
         self.fuzzy = fuzzy
         self.fuzzy_threshold = fuzzy_threshold
         self.index_backend = index_backend
+        # TTL twin: entries expire strictly after ttl_s, judged against the
+        # SAME virtual clock the store reads. The scheduler serializes ops
+        # and nothing advances the clock between a store op and its mirror
+        # call here, so write stamps and expiry decisions agree bit-for-bit
+        # (the single-node pinning in SimConfig.normalized keeps one seam
+        # charge per op — see docs/simulation.md).
+        self.clock = clock
+        self.ttl_s = ttl_s
+        # cold-tier twin (repro.memory.tiered): per-node manifest mirror;
+        # eviction spills, exact-miss promotes (a MOVE back to hot with a
+        # cascading evict), expiry/remove never resurrect from cold
+        self.cold_enabled = cold_enabled
         self.ring = HashRing(vnodes)
         self.nodes: Dict[str, Dict[str, Any]] = {}
         self.hits: Dict[str, Dict[str, int]] = {}
         self.order: Dict[str, List[str]] = {}  # LRU recency, oldest first
         self.seq: Dict[str, Dict[str, int]] = {}  # stable dict-order mirror
         self.sim: Dict[str, Any] = {}  # per-node SimilarityIndex twins
+        self.wtime: Dict[str, Dict[str, float]] = {}  # write stamps (TTL/CAS)
+        self.cold: Dict[str, Dict[str, Any]] = {}  # cold-manifest mirrors
         self._next_seq = 0
+        self._cold_crash = 0  # armed spill-wave crashes (segment w/o manifest)
         self.crashed: set = set()
         self.evictions = 0
+
+    def _now(self) -> float:
+        return float(self.clock()) if self.clock is not None else 0.0
+
+    def _expired(self, node: str, kw: str) -> bool:
+        if self.ttl_s is None:
+            return False
+        return self._now() - self.wtime[node][kw] > self.ttl_s
+
+    def arm_cold_crash(self, waves: int) -> None:
+        """Mirror of ``DistributedPlanCache.arm_cold_crash``: the next
+        ``waves`` spill waves lose their entries (segment written, manifest
+        never committed)."""
+        self._cold_crash = waves
 
     # -- membership ----------------------------------------------------------
 
@@ -120,6 +152,8 @@ class ModelStore:
         self.hits[name] = {}
         self.order[name] = []
         self.seq[name] = {}
+        self.wtime[name] = {}
+        self.cold[name] = {}
         if self.fuzzy:
             from repro.index import SimilarityIndex
 
@@ -156,6 +190,9 @@ class ModelStore:
         del self.hits[name]
         del self.order[name]
         del self.seq[name]
+        self.wtime.pop(name, None)
+        # a dropped node takes its cold directory with it — nothing re-homes
+        self.cold.pop(name, None)
         self.sim.pop(name, None)
         self.ring.remove(name)
         self.crashed.discard(name)
@@ -174,6 +211,10 @@ class ModelStore:
                     moves.append((node, kw, v))
         for node, kw, v in moves:
             self._remove_from(node, kw)
+            # the facade re-homes via ``shard.remove`` which purges the
+            # stale owner's cold manifest too
+            if self.cold_enabled:
+                self.cold[node].pop(kw, None)
             self._insert_single(kw, v)
 
     def crash(self, name: str) -> None:
@@ -189,6 +230,10 @@ class ModelStore:
         self.hits[name] = {}
         self.order[name] = []
         self.seq[name] = {}
+        # restart_node calls shard.clear(), which wipes the cold manifest
+        # and gc's its segments — cold entries do NOT survive a restart
+        self.wtime[name] = {}
+        self.cold[name] = {}
         if self.fuzzy:
             self.sim[name].clear()
         if not recover:
@@ -217,6 +262,7 @@ class ModelStore:
             self._next_seq += 1
             self.seq[node][kw] = self._next_seq
         store[kw] = value
+        self.wtime[node][kw] = self._now()
         self.hits[node][kw] = 0  # re-insert resets live-hit accounting
         if kw in self.order[node]:
             self.order[node].remove(kw)
@@ -225,6 +271,7 @@ class ModelStore:
     def _remove_from(self, node: str, kw: str) -> None:
         del self.nodes[node][kw]
         del self.hits[node][kw]
+        self.wtime[node].pop(kw, None)
         self.order[node].remove(kw)
         # dict-order fidelity: a removed key re-inserts at the END of the
         # real shard's store dict, so its order stamp must not survive
@@ -243,10 +290,21 @@ class ModelStore:
         )
 
     def _evict(self, node: str) -> None:
+        victims: List[Tuple[str, Any]] = []
         while len(self.nodes[node]) > self.capacity:
             victim = self._victim(node)
+            victims.append((victim, self.nodes[node][victim]))
             self._remove_from(node, victim)
             self.evictions += 1
+        if victims and self.cold_enabled:
+            # capacity victims SPILL (expiry/remove never do); one spill
+            # wave per eviction round, lost whole if a crash is armed
+            # between segment write and manifest commit
+            if self._cold_crash > 0:
+                self._cold_crash -= 1
+            else:
+                for kw, v in victims:
+                    self.cold[node][kw] = v
 
     def _live_owners(self, kw: str) -> List[str]:
         return [
@@ -266,11 +324,21 @@ class ModelStore:
                 self.sim[n].add(kw)
             self._evict(n)
 
-    def insert_wave(self, items: Sequence[Tuple[str, Any]]) -> None:
+    def insert_wave(
+        self,
+        items: Sequence[Tuple[str, Any]],
+        *,
+        unless_written_since: Optional[float] = None,
+    ) -> None:
         """Spec semantics: the wave lands on every live owner (crashed
         owners drop their copy — the RPC fails), grouped per node with
         eviction AFTER each node's sub-wave (primary groups first, then
-        replica groups, mirroring the facade's ack structure)."""
+        replica groups, mirroring the facade's ack structure).
+
+        ``unless_written_since`` mirrors conditional admission: a key whose
+        live entry on that node was (re)written at or after the token is
+        skipped — the stale background wave loses to the newer client
+        insert, per node, exactly as each shard decides it."""
         for rank0 in (True, False):
             groups: Dict[str, List[Tuple[str, Any]]] = {}
             for kw, v in items:
@@ -281,10 +349,18 @@ class ModelStore:
             for n, sub in groups.items():
                 if n in self.crashed:
                     continue  # write RPC failed; remaining owners hold it
+                applied: List[str] = []
                 for kw, v in sub:
+                    if (
+                        unless_written_since is not None
+                        and kw in self.nodes[n]
+                        and self.wtime[n][kw] >= unless_written_since
+                    ):
+                        continue  # stale write skipped; index untouched
                     self._apply(n, kw, v)
-                if self.fuzzy:
-                    self.sim[n].add_batch([kw for kw, _ in sub])
+                    applied.append(kw)
+                if self.fuzzy and applied:
+                    self.sim[n].add_batch(applied)
                 self._evict(n)
 
     def remove(self, kw: str) -> None:
@@ -293,6 +369,10 @@ class ModelStore:
                 continue  # unreachable; its stale copy dies at restart
             if kw in self.nodes[n]:
                 self._remove_from(n, kw)
+            if self.cold_enabled:
+                # shard.remove purges the cold manifest entry too — a
+                # removed key must not resurrect through a later promote
+                self.cold[n].pop(kw, None)
 
     # -- read path -----------------------------------------------------------
 
@@ -302,32 +382,98 @@ class ModelStore:
             owners += [n for n in sorted(self.nodes) if n not in owners]
         return owners
 
-    def lookup(self, kw: str) -> Tuple[Optional[Any], bool]:
-        """(expected value or None, strict).
-
-        Walks the same tiered probe order as the facade — ring owners,
-        then (fuzzy) the remaining shards — resolving per node exactly as
-        the shard's match pipeline does: exact dict membership first, then
-        the twin similarity index at the shard's threshold. With the twin
-        index mirrored call-for-call the prediction is exact, so fuzzy
-        cells are STRICT; ``strict=False`` survives only for the legacy
-        ``exact_only=False`` mode (no similarity model installed)."""
+    def _serve_hot(self, kw: str) -> Optional[Any]:
+        """The exact(+fuzzy) tiers of one query, with TTL expire-on-touch
+        — everything EXCEPT the cold stage."""
         for n in self._probe_order(kw):
             if n in self.crashed:
                 continue  # guard spec: reader falls through to next tier
             served = kw if kw in self.nodes[n] else None
+            if served is not None and self._expired(n, served):
+                # expire-on-touch, mirroring _get_live: a hard delete (the
+                # entry does NOT spill), after which the pipeline falls
+                # through to the fuzzy stage
+                self._remove_from(n, served)
+                served = None
             if served is None and self.fuzzy:
                 served = self.sim[n].best_match_batch(
                     [kw], self.fuzzy_threshold
                 )[0]
+                if served is not None and self._expired(n, served):
+                    # the fuzzy stage resolved an expired twin: _get_live
+                    # deletes it and the wave does NOT re-run the stage
+                    self._remove_from(n, served)
+                    served = None
             if served is not None:
                 v = self.nodes[n][served]
                 self.hits[n][served] += 1
                 if served in self.order[n]:
                     self.order[n].remove(served)
                     self.order[n].append(served)
-                return v, True
-        return None, True if self.fuzzy else self.exact_only
+                return v
+        return None
+
+    def _serve_cold(self, kw: str) -> Optional[Any]:
+        """The cold stage of one query: an exact manifest hit PROMOTES
+        (a MOVE back through the admission path, cascading evict after
+        the insert). The stage does NOT re-probe the hot tier, mirroring
+        the shard's pipeline exactly."""
+        if not self.cold_enabled:
+            return None
+        for n in self._probe_order(kw):
+            if n in self.crashed or kw not in self.cold.get(n, {}):
+                continue
+            v = self.cold[n].pop(kw)
+            self._apply(n, kw, v)
+            if self.fuzzy:
+                self.sim[n].add_batch([kw])
+            self._evict(n)
+            # under the cost policy a promote into a fully-reused hot set
+            # picks ITSELF as the cascade victim (hits=0, youngest stamp)
+            # — the store then misses, so the model must too
+            if kw not in self.nodes[n]:
+                return None
+            self.hits[n][kw] += 1
+            if kw in self.order[n]:
+                self.order[n].remove(kw)
+                self.order[n].append(kw)
+            return v
+        return None
+
+    def lookup_wave(
+        self, kws: Sequence[str]
+    ) -> List[Tuple[Optional[Any], bool]]:
+        """Stage-faithful replay of one batched lookup: every query
+        resolves against the hot tier BEFORE any cold promotion runs,
+        because the store's pipeline serves the whole exact stage first —
+        a promote's cascade eviction must not unsettle earlier queries of
+        the same wave (they already captured their values)."""
+        strict = True if self.fuzzy else self.exact_only
+        out: List[Optional[Tuple[Optional[Any], bool]]] = [None] * len(kws)
+        cold_pass: List[int] = []
+        for i, kw in enumerate(kws):
+            v = self._serve_hot(kw)
+            if v is None:
+                cold_pass.append(i)
+            else:
+                out[i] = (v, True)
+        for i in cold_pass:
+            v = self._serve_cold(kws[i])
+            out[i] = (v, True) if v is not None else (None, strict)
+        return out  # type: ignore[return-value]
+
+    def lookup(self, kw: str) -> Tuple[Optional[Any], bool]:
+        """(expected value or None, strict).
+
+        Walks the same tiered probe order as the facade — ring owners,
+        then (fuzzy) the remaining shards — resolving per node exactly as
+        the shard's match pipeline does: exact dict membership first, then
+        the twin similarity index at the shard's threshold, then the cold
+        manifest. With the twin index mirrored call-for-call the
+        prediction is exact, so fuzzy cells are STRICT; ``strict=False``
+        survives only for the legacy ``exact_only=False`` mode (no
+        similarity model installed)."""
+        return self.lookup_wave([kw])[0]
 
     def keys(self) -> List[str]:
         seen: set = set()

@@ -285,6 +285,69 @@ def test_ring_change_sequences_agree_with_model(events, seed):
     assert dc.keys() == model.visible_keys() == model.keys()
 
 
+# -- repro.memory.tiered: cold-tier round-trip + compaction properties --------
+
+_STEP = st.tuples(
+    st.sampled_from(["message", "output", "answer"]),
+    st.text(alphabet="abcdef 0123", min_size=0, max_size=240),
+    st.one_of(st.none(), st.dictionaries(
+        st.sampled_from(["tool", "arg"]),
+        st.text(alphabet="xyz", min_size=1, max_size=6), max_size=2)),
+)
+
+
+def _template_from(draws):
+    from repro.core.template import PlanStep, PlanTemplate
+
+    return PlanTemplate(
+        "drawn keyword",
+        [PlanStep(k, c, op) for k, c, op in draws],
+        source_task="drawn task",
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(_STEP, min_size=1, max_size=12))
+def test_spill_promote_roundtrip_preserves_template_semantics(draws):
+    """Through the on-disk segment encoding and back: with a non-binding
+    compaction budget, spill -> promote is the identity on templates."""
+    import tempfile
+
+    from repro.memory import ColdTier
+
+    tpl = _template_from(draws)
+    with tempfile.TemporaryDirectory() as d:
+        ct = ColdTier(d, budget_tokens=10**9)
+        ct.spill([("k", tpl, "ctx", None, 1.0)])
+        back = ct.take(["k"])[0].value
+    assert [s.to_json() for s in back.steps] == [s.to_json() for s in tpl.steps]
+    assert (back.keyword, back.source_task, back.uses) == (
+        tpl.keyword, tpl.source_task, tpl.uses)
+    assert back.size_tokens() == tpl.size_tokens()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(_STEP, min_size=1, max_size=12),
+       st.integers(min_value=1, max_value=400))
+def test_compaction_idempotent_and_monotone(draws, budget):
+    """compact_template never grows size_tokens, keeps the slotted
+    skeleton, and is idempotent at any budget."""
+    from repro.memory import compact_template
+
+    tpl = _template_from(draws)
+    once, saved = compact_template(tpl, budget_tokens=budget)
+    assert saved >= 0
+    assert once.size_tokens() == tpl.size_tokens() - saved
+    assert once.size_tokens() <= tpl.size_tokens()
+    # the slotted skeleton (message ops) survives every pass
+    assert [s.op for s in once.message_steps()] == \
+        [s.op for s in tpl.message_steps()]
+    twice, saved2 = compact_template(once, budget_tokens=budget)
+    assert saved2 == 0
+    assert [s.to_json() for s in twice.steps] == \
+        [s.to_json() for s in once.steps]
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.dictionaries(st.sampled_from(["company", "year", "student"]),
                        st.text(alphabet="ABCdef123", min_size=2, max_size=8),

@@ -83,6 +83,17 @@ def test_fault_plans_clean_under_guards(fault):
         assert r.router_metrics["async_cachegens"] > 0
         assert r.router_metrics["sync_cachegen_fallbacks"] > 0
         assert r.router_metrics["cachegen_dropped"] == 0
+    if fault == "cold_tier":
+        # the tier really cycled: capacity victims spilled, exact misses
+        # promoted back, and the armed spill-wave crashes lost their
+        # entries WHOLE on both sides (the run is still clean)
+        assert r.cold_stats["spills"] > 0
+        assert r.cold_stats["promotes"] > 0
+        assert r.cold_stats["cold_hits"] == r.cold_stats["promotes"]
+    if fault == "ttl_churn":
+        # expiry really bit: lookups crossed the TTL horizon and missed,
+        # and the model agreed on every expire-on-touch decision
+        assert r.store_stats["misses"] > 0
 
 
 def test_replica_lag_guard_blocks_stale_reads():
@@ -104,6 +115,11 @@ EXPECTED_ORACLES = {
     "mid_wave_evict": {"eviction_order", "durability", "phantom"},
     "membership_churn": {"durability", "linearizability", "control_plane"},
     "async_cachegen": {"cachegen_loss"},
+    # age-rotated gc deletes live cold segments: templates the model says
+    # are promotable come back MISS
+    "cold_tier": {"durability"},
+    # serving expired entries: values the model already expired come back
+    "ttl_churn": {"phantom", "control_plane"},
 }
 
 
@@ -442,6 +458,65 @@ def test_async_admission_race_regression_pinned_seed(tmp_path, capsys):
     assert rc == 0
     assert "replay reproduced the recorded interleaving exactly" in out
     assert "cachegen_loss" in out
+
+
+# -- tiered memory: cold tier + ttl plans --------------------------------------
+
+
+def test_cold_tier_plan_clean_deterministic_and_cycling():
+    """The cold_tier plan drives real spill/promote traffic (on-disk
+    CheckpointStore segments under a throwaway dir) with two armed
+    spill-wave crashes — and stays clean, deterministic, and replayable:
+    no template is ever both lost and unevicted."""
+    cfg = _cfg(seed=7, fault="cold_tier")
+    r = run_sim(cfg)
+    assert r.ok, r.violations[:3]
+    assert r.config.cold_tier and r.config.n_nodes == 1
+    assert r.cold_stats["spills"] > r.cold_stats["promotes"] > 0
+    b = run_sim(cfg)
+    assert (b.trace_hash, b.span_digest) == (r.trace_hash, r.span_digest)
+
+
+def test_cold_crash_loses_wave_whole_on_both_sides(tmp_path):
+    """A crash between segment write and manifest commit loses the spill
+    wave WHOLE — the manifest never references the orphan segment, and the
+    sim cell with two such armed crashes is as clean as one without."""
+    from repro.memory import ColdTier
+
+    ct = ColdTier(str(tmp_path))
+    ct.arm_crash_after_segment(1)
+    ct.spill([("a", 1, None, None, 0.0), ("b", 2, None, None, 0.0)])
+    assert len(ct) == 0  # both entries lost together, none half-committed
+    assert ct.fetch(["a", "b"]) == [None, None]
+    ct.spill([("c", 3, None, None, 0.0)])  # disarmed: the next wave lands
+    assert "c" in ct and ct.take(["c"])[0].value == 3
+
+    r = run_sim(_cfg(seed=1, fault="cold_tier"))  # plan arms two crashes
+    assert r.ok, r.violations[:3]
+
+
+def test_ttl_churn_plan_clean_and_expiry_bites():
+    cfg = _cfg(seed=9, fault="ttl_churn")
+    r = run_sim(cfg)
+    assert r.ok, r.violations[:3]
+    assert r.config.ttl_s == 0.05 and not r.config.fuzzy
+    assert r.store_stats["misses"] > 0  # expiry-vs-lookup races happened
+    assert run_sim(cfg).span_digest == r.span_digest
+
+
+def test_conditional_admission_regression_pinned_seed():
+    """Regression pin for insert-if-newer (§4.3 admission race): under the
+    async_cachegen plan, distilled waves carry the token their lookup read;
+    every key a client re-wrote in the interim is SKIPPED — the model
+    replays each skip decision, so the run stays linearizable with a
+    nonzero skip count, bit-for-bit reproducible."""
+    cfg = _cfg(seed=3, fault="async_cachegen")
+    r = run_sim(cfg)
+    assert r.ok, r.violations[:3]
+    assert r.cold_stats["stale_insert_skips"] > 0  # the race really ran
+    b = run_sim(cfg)
+    assert (b.trace_hash, b.span_digest) == (r.trace_hash, r.span_digest)
+    assert b.cold_stats["stale_insert_skips"] == r.cold_stats["stale_insert_skips"]
 
 
 # -- strict paraphrase scenarios (similarity-aware model) ----------------------

@@ -138,6 +138,24 @@ def test_checkpoint_atomicity_and_gc(tmp_path):
     assert not torn.exists()
 
 
+def test_checkpoint_gc_never_deletes_pinned_segment(tmp_path):
+    # cold-tier contract: segments referenced by a live manifest entry are
+    # pinned — keep_last age rotation must skip them no matter how many
+    # newer segments land, and reclaim them once unpinned
+    live = {10}
+    store = CheckpointStore(tmp_path, keep_last=2,
+                            pin_check=lambda s: s in live)
+    for s in (10, 20, 30, 40):
+        store.save(s, {"x": jnp.ones((4,))})
+    # age order would rotate 10 first; the pin protects it, 20 rotates
+    assert store.committed_steps() == [10, 30, 40]
+    restored, _ = store.restore({"x": jnp.zeros(4, jnp.float32)}, step=10)
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.ones(4))
+    live.discard(10)
+    store.gc()  # unpinned now: ordinary rotation reclaims it
+    assert store.committed_steps() == [30, 40]
+
+
 def test_checkpoint_corruption_detected(tmp_path):
     store = CheckpointStore(tmp_path)
     store.save(1, {"x": jnp.arange(8, dtype=jnp.float32)})
