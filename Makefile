@@ -1,7 +1,7 @@
 # Local mirror of .github/workflows/smoke.yml
 PYTHONPATH := src
 
-.PHONY: smoke test bench-fast docs-check sim-check trace-check
+.PHONY: smoke test bench-fast analyze docs-check sim-check trace-check
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -9,8 +9,14 @@ test:
 bench-fast:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --fast --only t1,t4,t5,f3,s1 --json-dir bench-json
 
+# AST invariant linter over src/repro (lock discipline, determinism,
+# jit/donation safety, obs-name drift, thread hygiene) — pure stdlib,
+# needs no runtime deps; see docs/static-analysis.md
+analyze:
+	PYTHONPATH=$(PYTHONPATH) python -m tools.analyze --json analysis-report.json
+
 docs-check:
-	PYTHONPATH=$(PYTHONPATH) python tools/check_docs.py
+	PYTHONPATH=$(PYTHONPATH) python -m tools.analyze --gate docs
 
 # 5-seed deterministic-simulation matrix (scenarios x fault plans, guards
 # on, plus the guard-ablation oracle audit); failure seeds land in
@@ -24,6 +30,6 @@ sim-check:
 # trace_chrome.json must load in chrome://tracing / perfetto
 trace-check:
 	PYTHONPATH=$(PYTHONPATH) python -m repro.obs --out-dir trace-out
-	PYTHONPATH=$(PYTHONPATH) python tools/check_trace.py --dir trace-out
+	PYTHONPATH=$(PYTHONPATH) python -m tools.analyze --gate trace --trace-dir trace-out
 
-smoke: test bench-fast sim-check docs-check trace-check
+smoke: analyze test bench-fast sim-check docs-check trace-check

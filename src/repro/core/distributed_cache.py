@@ -186,7 +186,9 @@ class DistributedPlanCache(PlanStoreBase):
         self.index_backend = index_backend
         self.eviction = eviction
         self.ttl_s = ttl_s
-        self.clock = clock
+        # the injectable clock seam: store the function (wall clock only as
+        # the default REFERENCE); every read goes through self.clock()
+        self.clock = clock if clock is not None else time.time
         self.interceptor = interceptor
         self.ack_policy = ack_policy
         self.ablate = frozenset(ablate)
@@ -515,7 +517,7 @@ class DistributedPlanCache(PlanStoreBase):
     def now(self) -> float:
         """The facade's clock (shared with every shard) — capture before a
         read whose derived wave inserts with ``unless_written_since``."""
-        return self.clock() if self.clock is not None else time.time()
+        return self.clock()
 
     def arm_cold_crash(self, waves: int) -> None:
         """Sim fault seam: arm every shard's cold tier to crash between

@@ -83,9 +83,12 @@ class TierPool:
 
     def pick(self) -> Any:
         # return-then-increment so the rotation starts at replica 0 and
-        # visits every replica (increment-first skipped slot 0 forever)
-        eng = self.replicas[self._rr % len(self.replicas)]
-        self._rr = (self._rr + 1) % len(self.replicas)
+        # visits every replica (increment-first skipped slot 0 forever).
+        # Locked: concurrent dispatches racing the read-increment would
+        # hand the same replica to both and skip another entirely.
+        with self._executor_lock:
+            eng = self.replicas[self._rr % len(self.replicas)]
+            self._rr = (self._rr + 1) % len(self.replicas)
         return eng
 
     def dispatch(self, fn: Callable[[Any], Any], *, hedge: bool = False) -> Any:

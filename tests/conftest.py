@@ -5,6 +5,8 @@ import sys
 # Multi-device tests spawn subprocesses with their own flags.
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so tests can import the tools.analyze gate package
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import pytest  # noqa: E402
 

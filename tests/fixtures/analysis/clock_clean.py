@@ -1,0 +1,27 @@
+"""Golden CLEAN fixture for the determinism checker.
+
+The injectable clock seam (a bare wall-clock REFERENCE stored as the
+default, called through the attribute) and seeded RNG constructions.
+"""
+
+import random
+import time
+
+import numpy as np
+
+
+class Clocked:
+    def __init__(self, clock=None):
+        # reference, not a call: repro.sim rebinds this to a VirtualClock
+        self._clock = clock if clock is not None else time.time
+
+    def now(self):
+        return self._clock()
+
+
+def make_rng(seed):
+    return random.Random(seed)
+
+
+def make_np_rng(seed):
+    return np.random.default_rng(seed)

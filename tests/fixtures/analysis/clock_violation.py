@@ -1,0 +1,26 @@
+"""Golden VIOLATING fixture for the determinism checker.
+
+Four expected findings: a wall-clock call, a global-RNG draw, an
+unseeded generator construction, and a global numpy draw.
+"""
+
+import random
+import time
+
+import numpy as np
+
+
+def stamp():
+    return time.time()  # wall-clock CALL, not the seam reference
+
+
+def jitter():
+    return random.random()  # process-global RNG draw
+
+
+def make_rng():
+    return np.random.default_rng()  # unseeded generator
+
+
+def shuffle_global(xs):
+    np.random.shuffle(xs)  # numpy process-global RNG

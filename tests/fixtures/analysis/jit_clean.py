@@ -1,0 +1,53 @@
+"""Golden CLEAN fixture for the jit-safety checker.
+
+The safe idioms: output-ref subscript writes in a pallas kernel
+(params are writable), the rebind-from-result donation pattern, and the
+forwarding-helper indirection (``_donated(fn, *args)`` /
+``functools.partial``) from ``index/device.py``.
+"""
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter(arena, idx, val):
+    return arena.at[idx].set(val)
+
+
+@functools.partial(jax.jit, static_argnames=("new_cap",), donate_argnums=(0,))
+def grow(arena, *, new_cap):
+    return arena
+
+
+def _donated(fn, *args):
+    return fn(*args)
+
+
+def kernel(x_ref, o_ref):
+    acc = x_ref[...] * 2
+    o_ref[...] = acc  # param subscript write: the pallas ref-write idiom
+
+
+def run_kernel(pl, x):
+    return pl.pallas_call(kernel, out_shape=x)(x)
+
+
+def direct_rebind(arena, idx, val):
+    arena = scatter(arena, idx, val)
+    return arena.sum()
+
+
+class Bank:
+    def __init__(self, arena):
+        self._arena = arena
+
+    def set_row(self, idx, val):
+        self._arena = _donated(scatter, self._arena, idx, val)
+        return self._arena.shape
+
+    def grow_to(self, new_cap):
+        self._arena = _donated(
+            functools.partial(grow, new_cap=new_cap), self._arena
+        )

@@ -1,0 +1,38 @@
+"""Golden VIOLATING fixture for the jit-safety checker.
+
+Expected findings: a print and a captured-state write inside a jitted
+body, a captured-state write inside a pallas kernel, and a
+read-after-donation at a caller site.
+"""
+
+import functools
+
+import jax
+
+STATE = {}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter(arena, idx, val):
+    return arena.at[idx].set(val)
+
+
+@jax.jit
+def impure(x):
+    print("tracing")        # side effect under trace
+    STATE["calls"] = 1      # captured-state mutation under trace
+    return x * 2
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+    STATE["kernel_ran"] = True  # captured-state mutation in a kernel
+
+
+def run_kernel(pl, x):
+    return pl.pallas_call(kernel, out_shape=x)(x)
+
+
+def read_after_donation(arena, idx, val):
+    out = scatter(arena, idx, val)
+    return out.sum() + arena.sum()  # arena's buffer was donated above

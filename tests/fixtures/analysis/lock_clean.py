@@ -1,0 +1,43 @@
+"""Golden CLEAN fixture for the lock-discipline checker.
+
+Exercises the patterns the checker must NOT flag: construction-time
+writes, lexically-held writes, a private helper whose only call sites
+hold the lock (the ``EmbeddingBank._grow`` shape), a nested function
+defined inside the locked region (the ``PlanCache.insert_batch``
+shape), and a dataclass-field lock.
+"""
+
+import threading
+from dataclasses import dataclass, field
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+        self.items = {}
+
+    def bump(self):
+        with self._lock:
+            self.count += 1
+            self._grow()
+
+    def _grow(self):
+        # only ever called from bump, under the lock
+        self.items["cap"] = self.count * 2
+
+    def insert(self):
+        with self._lock:
+            def evict():
+                self.count -= 1  # nested def inherits the held state
+            evict()
+
+
+@dataclass
+class FieldLocked:
+    total: int = 0
+    lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def add(self, n):
+        with self.lock:
+            self.total += n

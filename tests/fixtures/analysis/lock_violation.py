@@ -1,0 +1,23 @@
+"""Golden VIOLATING fixture for the lock-discipline checker.
+
+Three expected findings: the unheld write in ``bump``, the unheld write
+in ``_bump_unlocked`` (reachable from a public method without the
+lock), and ``caller``'s unheld call site into it.
+"""
+
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        self.count += 1  # unheld write in a lock-owning class
+
+    def caller(self):
+        self._bump_unlocked()  # unheld call to a lock-requiring helper
+
+    def _bump_unlocked(self):
+        self.count += 1

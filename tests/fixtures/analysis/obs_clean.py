@@ -1,0 +1,14 @@
+"""Golden CLEAN fixture for the obs-names checker.
+
+All instrumentation names flow through the ``repro.obs.names`` catalog.
+"""
+
+from repro.obs import names as _names
+
+
+def instrument(registry, tracer):
+    c = registry.counter(_names.ROUTER_REQUESTS)
+    h = registry.histogram(_names.ROUTER_LOOKUP_LATENCY)
+    with tracer.span(_names.SPAN_ROUTE) as sp:
+        sp.event(_names.EVENT_ATTRIBUTION, hit=True)
+    return c, h

@@ -1,0 +1,12 @@
+"""Golden VIOLATING fixture for the obs-names checker.
+
+Three expected findings: literal names handed to a counter, a span,
+and a span event.
+"""
+
+
+def instrument(registry, tracer):
+    c = registry.counter("router.requests")
+    with tracer.span("router.route") as sp:
+        sp.event("cache.attribution", hit=True)
+    return c

@@ -1,0 +1,16 @@
+"""Fixture: malformed pragmas — empty reason, unknown kind.
+
+Both are pragma-hygiene findings.
+"""
+
+import time
+
+
+def stamp():
+    # analysis: clock-ok()
+    return time.time()
+
+
+def other():
+    # analysis: wibble-ok(no checker uses this kind)
+    return 1

@@ -1,0 +1,12 @@
+"""Fixture: a stale pragma — the line it guards no longer violates.
+
+``analyze_paths`` must flag it as pragma-hygiene so suppressions
+cannot silently rot.
+"""
+
+import time
+
+
+def seam(clock=None):
+    # analysis: clock-ok(stale: the call below became a seam reference)
+    return clock if clock is not None else time.time

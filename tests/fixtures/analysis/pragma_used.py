@@ -1,0 +1,12 @@
+"""Fixture: a pragma that legitimately suppresses a finding.
+
+``analyze_paths`` must return no determinism finding AND no
+pragma-hygiene finding for this file.
+"""
+
+import time
+
+
+def stamp():
+    # analysis: clock-ok(fixture demonstrating suppression; not sim code)
+    return time.time()

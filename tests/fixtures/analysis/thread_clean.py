@@ -1,0 +1,43 @@
+"""Golden CLEAN fixture for the thread-hygiene checker.
+
+The dispositions the checker must accept: shutdown reachable from
+another method (through a conditional-expression binding, the
+``TwoTierRouter._pool`` shape), a context-managed pool, daemon=True,
+an assigned ``.daemon = True``, and an explicit join.
+"""
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+
+class Pool:
+    def __init__(self, workers, enabled):
+        self._pool = ThreadPoolExecutor(max_workers=workers) if enabled else None
+
+    def close(self):
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+
+
+def scoped(tasks):
+    with ThreadPoolExecutor(max_workers=2) as pool:
+        return [pool.submit(t).result() for t in tasks]
+
+
+def daemonized(fn):
+    t = threading.Thread(target=fn, daemon=True)
+    t.start()
+    return t
+
+
+def daemon_assigned(fn):
+    t1 = threading.Thread(target=fn)
+    t1.daemon = True
+    t1.start()
+    return t1
+
+
+def joined(fn):
+    t2 = threading.Thread(target=fn)
+    t2.start()
+    t2.join()

@@ -1,0 +1,24 @@
+"""Golden VIOLATING fixture for the thread-hygiene checker.
+
+Three expected findings: a bound executor with no reachable shutdown,
+a bound thread with no join/daemon disposition, and an unbound
+construction.
+"""
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+
+def leak_pool(tasks):
+    pool = ThreadPoolExecutor(max_workers=2)
+    return [pool.submit(t) for t in tasks]
+
+
+def leak_thread(fn):
+    t = threading.Thread(target=fn)
+    t.start()
+    return t
+
+
+def unbound(fn):
+    return ThreadPoolExecutor(max_workers=1).submit(fn)

@@ -1,0 +1,207 @@
+"""Tier-1 tests for the ``tools.analyze`` invariant-checker suite.
+
+Golden violating/clean fixture pairs live in
+``tests/fixtures/analysis/``: each checker must fire on its violating
+fixture (the guard-ablation direction — delete the guard and the
+checker catches it) and stay silent on the clean fixture that encodes
+the repo's real idioms (seam references, helper-under-lock,
+rebind-from-result donation, context-managed pools).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FIX = ROOT / "tests" / "fixtures" / "analysis"
+
+from tools.analyze import CHECKER_IDS  # noqa: E402
+from tools.analyze.common import fingerprint  # noqa: E402
+from tools.analyze.gates import (  # noqa: E402
+    DEFAULT_TARGET,
+    PRAGMA_HYGIENE_ID,
+    PRAGMAS_OF_CHECKER,
+    analyze_paths,
+)
+
+
+def findings_for(name):
+    findings, n_files = analyze_paths([FIX / name])
+    assert n_files == 1, f"{name} failed to parse"
+    return findings
+
+
+PAIRS = [
+    ("lock-discipline", "lock_violation.py", "lock_clean.py"),
+    ("determinism", "clock_violation.py", "clock_clean.py"),
+    ("jit-safety", "jit_violation.py", "jit_clean.py"),
+    ("obs-names", "obs_violation.py", "obs_clean.py"),
+    ("thread-hygiene", "thread_violation.py", "thread_clean.py"),
+]
+
+
+@pytest.mark.parametrize("checker,violating,clean", PAIRS,
+                         ids=[p[0] for p in PAIRS])
+def test_golden_pair(checker, violating, clean):
+    bad = findings_for(violating)
+    assert bad, f"{violating} tripped nothing"
+    assert {f.checker for f in bad} == {checker}, \
+        f"{violating} tripped other checkers: {[f.render() for f in bad]}"
+    good = findings_for(clean)
+    assert good == [], \
+        f"{clean} must be clean: {[f.render() for f in good]}"
+
+
+def test_lock_discipline_details():
+    bad = findings_for("lock_violation.py")
+    msgs = "\n".join(f.message for f in bad)
+    # the direct unheld writes AND the transitive unheld call site
+    assert "Counter.bump writes self.count" in msgs
+    assert "Counter._bump_unlocked writes self.count" in msgs
+    assert "Counter.caller calls self._bump_unlocked()" in msgs
+
+
+def test_determinism_details():
+    bad = findings_for("clock_violation.py")
+    msgs = "\n".join(f.message for f in bad)
+    assert "time.time()" in msgs
+    assert "random.random()" in msgs
+    assert "default_rng" in msgs
+    assert "np.random.shuffle" in msgs
+    assert len(bad) == 4
+
+
+def test_jit_safety_details():
+    bad = findings_for("jit_violation.py")
+    msgs = "\n".join(f.message for f in bad)
+    assert "print() inside a jax.jit body" in msgs
+    assert "`STATE['calls']`" in msgs
+    assert "pallas kernel body" in msgs
+    assert "donated to scatter()" in msgs
+
+
+def test_thread_hygiene_details():
+    bad = findings_for("thread_violation.py")
+    msgs = "\n".join(f.message for f in bad)
+    assert "no .shutdown(...) on `pool`" in msgs
+    assert "no .join(...) or daemon=True on `t`" in msgs
+    assert "without a binding" in msgs
+    assert len(bad) == 3
+
+
+# -- pragmas ----------------------------------------------------------------
+
+
+def test_pragma_suppresses_and_counts_as_used():
+    assert findings_for("pragma_used.py") == []
+
+
+def test_unused_pragma_is_flagged():
+    out = findings_for("pragma_unused.py")
+    assert [f.checker for f in out] == [PRAGMA_HYGIENE_ID]
+    assert "suppresses nothing" in out[0].message
+
+
+def test_malformed_pragmas_are_flagged():
+    out = findings_for("pragma_bad.py")
+    assert {f.checker for f in out} == {PRAGMA_HYGIENE_ID}
+    msgs = "\n".join(f.message for f in out)
+    assert "has no reason" in msgs
+    assert "unknown pragma kind `wibble-ok`" in msgs
+
+
+# -- fingerprints -----------------------------------------------------------
+
+
+def test_fingerprint_is_line_number_independent(tmp_path):
+    src = (FIX / "clock_violation.py").read_text()
+    shifted = tmp_path / "clock_violation.py"  # same basename, same rel key
+    shifted.write_text("# pad\n# pad\n# pad\n" + src)
+    base, _ = analyze_paths([FIX / "clock_violation.py"])
+    moved, _ = analyze_paths([shifted])
+    # same content hashed under different paths: compare the content half
+    # by re-fingerprinting under a fixed file key
+    def content_prints(findings, lines):
+        return sorted(
+            fingerprint(f.checker, "K", lines[f.line - 1].strip(), 0)
+            for f in findings
+        )
+    assert content_prints(base, src.splitlines()) == \
+        content_prints(moved, shifted.read_text().splitlines())
+    assert [f.line for f in moved] == [f.line + 3 for f in base]
+
+
+def test_fingerprints_are_stable_and_unique():
+    out = findings_for("clock_violation.py")
+    prints = [f.fingerprint for f in out]
+    assert len(set(prints)) == len(prints)
+    again = [f.fingerprint for f in findings_for("clock_violation.py")]
+    assert prints == again
+
+
+# -- the tree itself --------------------------------------------------------
+
+
+def test_src_repro_is_clean():
+    findings, n_files = analyze_paths([DEFAULT_TARGET])
+    assert n_files > 50
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_checker_catalog_matches_registry():
+    ids = set(PRAGMAS_OF_CHECKER) | {PRAGMA_HYGIENE_ID}
+    assert ids == set(CHECKER_IDS)
+
+
+# -- CLI --------------------------------------------------------------------
+
+
+def _cli(*args, cwd=ROOT):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.analyze", *args],
+        capture_output=True, text=True, cwd=cwd, timeout=120,
+    )
+
+
+def test_cli_help_exits_zero():
+    r = _cli("--help")
+    assert r.returncode == 0
+    assert "--gate" in r.stdout
+
+
+def test_cli_violating_fixture_fails_with_json_report(tmp_path):
+    report = tmp_path / "report.json"
+    r = _cli(str(FIX / "clock_violation.py"), "--json", str(report))
+    assert r.returncode == 1
+    doc = json.loads(report.read_text())
+    assert doc["gate"] == "analyze"
+    assert doc["files_checked"] == 1
+    assert doc["baselined"] == 0
+    assert len(doc["findings"]) == 4
+    f = doc["findings"][0]
+    assert set(f) == {"checker", "file", "line", "col", "message",
+                      "fingerprint"}
+
+
+def test_cli_baseline_grandfathers_findings(tmp_path):
+    baseline = tmp_path / "baseline.json"
+    r = _cli(str(FIX / "clock_violation.py"),
+             "--baseline", str(baseline), "--write-baseline")
+    assert r.returncode == 0
+    doc = json.loads(baseline.read_text())
+    assert len(doc["fingerprints"]) == 4
+    r2 = _cli(str(FIX / "clock_violation.py"), "--baseline", str(baseline))
+    assert r2.returncode == 0
+    assert "4 baselined" in r2.stdout
+
+
+def test_cli_single_checker_filter():
+    r = _cli(str(FIX / "clock_violation.py"), "--checker", "thread-hygiene")
+    assert r.returncode == 0  # no thread findings in the clock fixture
+    r2 = _cli(str(FIX / "clock_violation.py"), "--checker", "determinism")
+    assert r2.returncode == 1

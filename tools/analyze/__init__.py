@@ -1,0 +1,20 @@
+"""``tools.analyze`` — AST-based invariant checkers for ``src/repro``.
+
+Run with ``python -m tools.analyze`` (see ``docs/static-analysis.md``).
+
+``CHECKER_IDS`` below is the canonical catalog of checker ids. It must
+stay a pure literal: ``tools/check_docs.py`` (docs gate, check 6) reads
+it via the AST — every id listed here must be documented in
+``docs/static-analysis.md`` or the docs gate fails.
+"""
+
+from __future__ import annotations
+
+CHECKER_IDS = (
+    "lock-discipline",
+    "determinism",
+    "jit-safety",
+    "obs-names",
+    "thread-hygiene",
+    "pragma-hygiene",
+)

@@ -1,0 +1,53 @@
+"""CLI for the unified CI gates.
+
+Usage:
+    python -m tools.analyze                         # AST invariant checkers
+    python -m tools.analyze --json report.json      # + machine-readable report
+    python -m tools.analyze --checker determinism   # one checker only
+    python -m tools.analyze --gate docs             # docs hygiene gate
+    python -m tools.analyze --gate trace --trace-dir trace-out
+
+Exit status: 0 when the selected gate passes, 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    from tools.analyze import CHECKER_IDS
+    from tools.analyze.gates import GATES
+
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--gate", choices=sorted(GATES), default="analyze",
+                    help="which CI gate to run (default: analyze)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to analyze "
+                         "(default: src/repro; analyze gate only)")
+    ap.add_argument("--checker", choices=sorted(CHECKER_IDS), default=None,
+                    help="run a single checker (analyze gate only)")
+    ap.add_argument("--json", default=None, metavar="REPORT",
+                    help="write a machine-readable findings report "
+                         "(analyze gate only)")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="baseline file of grandfathered fingerprints "
+                         "(default: tools/analyze/baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record current findings as the new baseline "
+                         "and exit 0")
+    ap.add_argument("--trace-dir", default="trace-out",
+                    help="trace gate: directory holding trace.jsonl + "
+                         "trace_chrome.json")
+    ap.add_argument("--no-require-serving-path", action="store_true",
+                    help="trace gate: skip the route_batch span-chain "
+                         "acceptance check")
+    args = ap.parse_args(argv)
+    return GATES[args.gate](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,200 @@
+"""Shared plumbing for the ``tools.analyze`` invariant checkers.
+
+A checker is a module exposing::
+
+    ID      = "lock-discipline"          # stable checker id (documented)
+    PRAGMA  = "unlocked"                 # suppress via  # analysis: unlocked-ok(<reason>)
+    def check(tree, src, path) -> List[Finding]
+
+Findings are machine-readable (file:line, checker id, fingerprint); the
+runner applies pragma suppression and the committed baseline, then fails
+on anything left. Fingerprints hash the checker id, the repo-relative
+path, and the *normalized source line* (plus an occurrence index for
+duplicate lines) — NOT the line number — so unrelated edits above a
+grandfathered finding do not churn the baseline.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import pathlib
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent.parent
+
+# sim-reachable packages (the determinism checker's enforcement scope);
+# ``launch`` is the documented allowlist — entrypoint scripts time real
+# wall-clock work and never run under repro.sim
+SIM_REACHABLE_PACKAGES = ("core", "serving", "memory", "index", "sim", "obs")
+PACKAGE_ALLOWLIST = ("launch",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One invariant violation at a source location."""
+
+    checker: str
+    file: str  # repo-relative (or as-given for out-of-repo paths)
+    line: int
+    col: int
+    message: str
+    fingerprint: str
+
+    def render(self) -> str:
+        return (f"{self.file}:{self.line}:{self.col}: [{self.checker}] "
+                f"{self.message}  ({self.fingerprint})")
+
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+def rel(path: pathlib.Path) -> str:
+    try:
+        return str(path.resolve().relative_to(ROOT))
+    except ValueError:
+        return str(path)
+
+
+_WS_RE = re.compile(r"\s+")
+
+
+def fingerprint(checker: str, file: str, norm_line: str, occurrence: int) -> str:
+    h = hashlib.blake2b(
+        f"{checker}|{file}|{norm_line}|{occurrence}".encode(), digest_size=8
+    )
+    return h.hexdigest()
+
+
+class FindingBuilder:
+    """Builds findings for one file, assigning content-stable fingerprints."""
+
+    def __init__(self, path: pathlib.Path, src: str):
+        self.path = path
+        self.file = rel(path)
+        self.lines = src.splitlines()
+        self._seen: Dict[Tuple[str, str], int] = {}
+
+    def _norm_line(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return _WS_RE.sub(" ", self.lines[line - 1].strip())
+        return ""
+
+    def at(self, checker: str, node: ast.AST, message: str) -> Finding:
+        return self.at_line(checker, node.lineno, getattr(node, "col_offset", 0),
+                            message)
+
+    def at_line(self, checker: str, line: int, col: int, message: str) -> Finding:
+        norm = self._norm_line(line)
+        key = (checker, norm)
+        occ = self._seen.get(key, 0)
+        self._seen[key] = occ + 1
+        return Finding(checker, self.file, line, col, message,
+                       fingerprint(checker, self.file, norm, occ))
+
+
+# -- pragmas ----------------------------------------------------------------
+#
+# Suppression syntax:   # analysis: <kind>-ok(<reason>)
+# on the flagged line or the line directly above it. The reason is
+# mandatory; a pragma that suppresses nothing is itself a finding
+# (pragma-hygiene), so the allowlist can never silently rot.
+
+PRAGMA_RE = re.compile(r"#\s*analysis:\s*([a-z][a-z-]*)-ok\(([^)]*)\)")
+
+
+@dataclasses.dataclass
+class Pragma:
+    kind: str
+    reason: str
+    line: int
+    used: bool = False
+
+
+def parse_pragmas(src: str) -> List[Pragma]:
+    out: List[Pragma] = []
+    for i, text in enumerate(src.splitlines(), 1):
+        m = PRAGMA_RE.search(text)
+        if m:
+            out.append(Pragma(m.group(1), m.group(2).strip(), i))
+    return out
+
+
+def apply_pragmas(
+    findings: List[Finding],
+    pragmas: List[Pragma],
+    pragma_of_checker: Dict[str, Tuple[str, ...]],
+) -> List[Finding]:
+    """Drop findings suppressed by a matching pragma on the same line or
+    the line directly above; mark those pragmas used."""
+    by_line: Dict[Tuple[str, int], List[Pragma]] = {}
+    for p in pragmas:
+        by_line.setdefault((p.kind, p.line), []).append(p)
+
+    kept: List[Finding] = []
+    for f in findings:
+        hit = None
+        for kind in pragma_of_checker.get(f.checker, ()):
+            for ln in (f.line, f.line - 1):
+                for p in by_line.get((kind, ln), ()):
+                    hit = p
+                    break
+                if hit:
+                    break
+            if hit:
+                break
+        if hit is None:
+            kept.append(f)
+        else:
+            hit.used = True
+    return kept
+
+
+def iter_py_files(root: pathlib.Path) -> Iterable[pathlib.Path]:
+    if root.is_file():
+        yield root
+        return
+    for p in sorted(root.rglob("*.py")):
+        yield p
+
+
+def subpackage_of(path: pathlib.Path) -> Optional[str]:
+    """First package under ``repro`` for in-repo sources, None otherwise
+    (fixture files outside ``src/repro`` get full enforcement)."""
+    parts = path.resolve().parts
+    if "repro" in parts:
+        i = parts.index("repro")
+        if i + 1 < len(parts):
+            return parts[i + 1].removesuffix(".py")
+    return None
+
+
+# -- small AST helpers ------------------------------------------------------
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def root_name(node: ast.AST) -> Optional[ast.AST]:
+    """The base expression of an Attribute/Subscript chain."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node
+
+
+def is_self_attr(node: ast.AST, names: Optional[set] = None) -> bool:
+    return (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+            and (names is None or node.attr in names))

@@ -1,0 +1,161 @@
+"""Clock/seed determinism checker (checker id ``determinism``).
+
+Invariant (PR 4/5's contract): sim-reachable packages — ``core``,
+``serving``, ``memory``, ``index``, ``sim``, ``obs`` — are wall-clock
+free and seed-deterministic. Concretely:
+
+* no *calls* to ``time.time`` / ``time.monotonic`` / ``time.sleep``.
+  Bare references are allowed: ``clock if clock is not None else
+  time.time`` is exactly the injectable clock seam — the function object
+  is stored as a default and the *call* goes through ``self._clock()``,
+  which ``repro.sim`` rebinds to a ``VirtualClock``. A direct call
+  bypasses the seam and breaks byte-identical replay.
+* no use of the process-global RNGs: ``random.<fn>()`` module calls,
+  ``random.Random()`` / ``np.random.RandomState()`` /
+  ``np.random.default_rng()`` without a seed argument, ``np.random.<fn>()``
+  draws, and ``random.seed``/``np.random.seed`` (global-state mutation).
+  Seeded constructions (``random.Random(seed)``,
+  ``np.random.RandomState(seed)``) and ``jax.random`` (explicit keys)
+  are deterministic and pass.
+
+``launch/*`` is the documented package allowlist (entrypoint scripts
+time real work and never run under the sim); per-line suppression is
+``# analysis: clock-ok(<reason>)`` / ``# analysis: seed-ok(<reason>)``.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List, Optional, Set
+
+from tools.analyze.common import (
+    Finding,
+    FindingBuilder,
+    PACKAGE_ALLOWLIST,
+    SIM_REACHABLE_PACKAGES,
+    dotted,
+    subpackage_of,
+)
+
+ID = "determinism"
+PRAGMA = "clock"        # clock half; the seed half uses PRAGMA_SEED
+PRAGMA_SEED = "seed"
+
+_WALL_CLOCK = {"time.time", "time.monotonic", "time.sleep"}
+
+# random-module draws/mutators that read the process-global RNG state
+_GLOBAL_RANDOM_FNS = {
+    "betavariate", "choice", "choices", "expovariate", "gammavariate",
+    "gauss", "getrandbits", "lognormvariate", "normalvariate", "paretovariate",
+    "randbytes", "randint", "random", "randrange", "sample", "seed",
+    "setstate", "shuffle", "triangular", "uniform", "vonmisesvariate",
+    "weibullvariate",
+}
+
+
+def _applies(path: pathlib.Path) -> bool:
+    sub = subpackage_of(path)
+    if sub is None:
+        return True  # fixtures / out-of-tree files: full enforcement
+    if sub in PACKAGE_ALLOWLIST:
+        return False
+    return sub in SIM_REACHABLE_PACKAGES
+
+
+def _local_time_names(tree: ast.Module) -> Set[str]:
+    """Names bound by ``from time import time/monotonic/sleep``."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "time":
+            for alias in node.names:
+                if alias.name in ("time", "monotonic", "sleep"):
+                    out.add(alias.asname or alias.name)
+    return out
+
+
+def _np_aliases(tree: ast.Module) -> Set[str]:
+    out = {"numpy"}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "numpy":
+                    out.add(alias.asname or "numpy")
+    return out
+
+
+def _has_seed_arg(call: ast.Call) -> bool:
+    if call.args:
+        return True
+    return any(kw.arg in ("seed", "x") for kw in call.keywords)
+
+
+def check(tree: ast.Module, src: str, path: pathlib.Path) -> List[Finding]:
+    if not _applies(path):
+        return []
+    fb = FindingBuilder(path, src)
+    out: List[Finding] = []
+    time_names = _local_time_names(tree)
+    np_names = _np_aliases(tree)
+
+    def np_random_attr(node: ast.AST) -> Optional[str]:
+        """'RandomState' for np.random.RandomState etc., else None."""
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Attribute)
+                and node.value.attr == "random"
+                and isinstance(node.value.value, ast.Name)
+                and node.value.value.id in np_names):
+            return node.attr
+        return None
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+
+        # -- wall clock: flag CALLS only (references are the seam default)
+        if name in _WALL_CLOCK:
+            out.append(fb.at(
+                ID, node,
+                f"direct {name}() call in a sim-reachable package — route "
+                f"wall-clock reads through the injectable clock seam "
+                f"(store the function as a default, call self.clock())"))
+            continue
+        if (isinstance(node.func, ast.Name) and node.func.id in time_names):
+            out.append(fb.at(
+                ID, node,
+                f"direct {node.func.id}() call (imported from time) in a "
+                f"sim-reachable package — use the injectable clock seam"))
+            continue
+
+        # -- process-global random module
+        if name is not None and name.startswith("random."):
+            attr = name.split(".", 1)[1]
+            if attr in _GLOBAL_RANDOM_FNS:
+                out.append(fb.at(
+                    ID, node,
+                    f"{name}() draws from the process-global RNG — construct "
+                    f"a seeded random.Random(seed) instead"))
+                continue
+            if attr == "Random" and not _has_seed_arg(node):
+                out.append(fb.at(
+                    ID, node,
+                    "random.Random() without a seed is entropy-seeded — pass "
+                    "an explicit seed"))
+                continue
+
+        # -- numpy global RNG
+        nattr = np_random_attr(node.func)
+        if nattr is not None:
+            if nattr in ("RandomState", "default_rng", "Generator"):
+                if not _has_seed_arg(node):
+                    out.append(fb.at(
+                        ID, node,
+                        f"np.random.{nattr}() without a seed is "
+                        f"entropy-seeded — pass an explicit seed"))
+            else:
+                out.append(fb.at(
+                    ID, node,
+                    f"np.random.{nattr}() uses numpy's process-global RNG — "
+                    f"use a seeded np.random.RandomState/default_rng"))
+    return out

@@ -1,0 +1,214 @@
+"""Gate registry: one runner, three CI gates.
+
+``python -m tools.analyze --gate <name>`` dispatches here. Each gate is
+a function ``(args) -> int`` sharing the same fail/report contract:
+print ``FAIL: ...`` lines for every problem and return non-zero, or
+print a one-line summary and return 0.
+
+* ``analyze`` — the AST invariant checkers in this package (default);
+* ``docs``    — ``tools.check_docs`` (docs hygiene), same checks as
+  running the script directly;
+* ``trace``   — ``tools.check_trace`` (trace artifact schemas), same
+  checks as running the script directly.
+
+The legacy entrypoints ``python tools/check_docs.py`` and
+``python tools/check_trace.py`` remain as thin aliases over the same
+``run()`` functions these gates call.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import pathlib
+import time
+from typing import Callable, Dict, List, Tuple
+
+from tools.analyze import CHECKER_IDS
+from tools.analyze.common import (
+    Finding,
+    FindingBuilder,
+    ROOT,
+    apply_pragmas,
+    iter_py_files,
+    parse_pragmas,
+    rel,
+)
+from tools.analyze import determinism, jit_safety, locks, obs_names, threads
+
+PRAGMA_HYGIENE_ID = "pragma-hygiene"
+
+CHECKERS = (locks, determinism, jit_safety, obs_names, threads)
+
+# checker id -> pragma kinds that may suppress its findings
+PRAGMAS_OF_CHECKER: Dict[str, Tuple[str, ...]] = {
+    locks.ID: (locks.PRAGMA,),
+    determinism.ID: (determinism.PRAGMA, determinism.PRAGMA_SEED),
+    jit_safety.ID: (jit_safety.PRAGMA,),
+    obs_names.ID: (obs_names.PRAGMA,),
+    threads.ID: (threads.PRAGMA,),
+}
+
+_KNOWN_PRAGMA_KINDS = {k for kinds in PRAGMAS_OF_CHECKER.values()
+                       for k in kinds}
+
+DEFAULT_TARGET = ROOT / "src" / "repro"
+BASELINE_PATH = pathlib.Path(__file__).resolve().parent / "baseline.json"
+
+
+def _checker_subset(only: str | None):
+    if only is None:
+        return CHECKERS
+    subset = tuple(c for c in CHECKERS if c.ID == only)
+    if not subset and only != PRAGMA_HYGIENE_ID:
+        raise SystemExit(
+            f"FAIL: unknown checker {only!r} (known: "
+            f"{', '.join(sorted(CHECKER_IDS))})")
+    return subset
+
+
+def analyze_paths(paths: List[pathlib.Path],
+                  only: str | None = None) -> Tuple[List[Finding], int]:
+    """Run the checkers over ``paths``; returns (findings, files checked).
+
+    Per file: parse once, run every checker, then apply pragma
+    suppression. Unused pragmas, unknown pragma kinds, and empty pragma
+    reasons become ``pragma-hygiene`` findings so the suppression
+    surface can never silently rot; so do stale ``LOCK_ALLOWLIST``
+    entries.
+    """
+    checkers = _checker_subset(only)
+    findings: List[Finding] = []
+    checked_files: set = set()
+    n_files = 0
+    for root in paths:
+        for path in iter_py_files(root):
+            try:
+                src = path.read_text()
+                tree = ast.parse(src)
+            except (OSError, SyntaxError) as e:
+                fb = FindingBuilder(path, "")
+                findings.append(fb.at_line(
+                    PRAGMA_HYGIENE_ID, 1, 0, f"unparseable file: {e}"))
+                continue
+            n_files += 1
+            checked_files.add(rel(path))
+            fb = FindingBuilder(path, src)
+            file_findings: List[Finding] = []
+            for checker in checkers:
+                file_findings.extend(checker.check(tree, src, path))
+            pragmas = parse_pragmas(src)
+            file_findings = apply_pragmas(file_findings, pragmas,
+                                          PRAGMAS_OF_CHECKER)
+            if only is None or only == PRAGMA_HYGIENE_ID:
+                for p in pragmas:
+                    if p.kind not in _KNOWN_PRAGMA_KINDS:
+                        findings.append(fb.at_line(
+                            PRAGMA_HYGIENE_ID, p.line, 0,
+                            f"unknown pragma kind `{p.kind}-ok` (known: "
+                            f"{', '.join(sorted(_KNOWN_PRAGMA_KINDS))})"))
+                    elif not p.reason:
+                        findings.append(fb.at_line(
+                            PRAGMA_HYGIENE_ID, p.line, 0,
+                            f"pragma `{p.kind}-ok()` has no reason — the "
+                            f"reason is mandatory"))
+                    elif not p.used and only is None:
+                        findings.append(fb.at_line(
+                            PRAGMA_HYGIENE_ID, p.line, 0,
+                            f"pragma `{p.kind}-ok({p.reason})` suppresses "
+                            f"nothing — the violation is gone; delete the "
+                            f"pragma"))
+            findings.extend(file_findings)
+    if only in (None, locks.ID):
+        for entry in locks.stale_allowlist_entries(checked_files):
+            findings.append(Finding(
+                PRAGMA_HYGIENE_ID, "tools/analyze/locks.py", 1, 0,
+                f"LOCK_ALLOWLIST entry {entry!r} matches nothing — the "
+                f"violation is gone; delete the entry",
+                f"allowlist:{entry}"))
+    findings.sort(key=lambda f: (f.file, f.line, f.checker))
+    return findings, n_files
+
+
+def _load_baseline(path: pathlib.Path) -> set:
+    if not path.exists():
+        return set()
+    doc = json.loads(path.read_text())
+    return set(doc.get("fingerprints", []))
+
+
+def run_analyze(args) -> int:
+    t0 = time.perf_counter()
+    targets = [pathlib.Path(p) for p in (args.paths or [DEFAULT_TARGET])]
+    findings, n_files = analyze_paths(targets, only=args.checker)
+    baseline_path = pathlib.Path(args.baseline) if args.baseline \
+        else BASELINE_PATH
+
+    if args.write_baseline:
+        baseline_path.write_text(json.dumps(
+            {"fingerprints": sorted(f.fingerprint for f in findings)},
+            indent=2) + "\n")
+        print(f"wrote {len(findings)} fingerprints to {rel(baseline_path)}")
+        return 0
+
+    baseline = _load_baseline(baseline_path)
+    new = [f for f in findings if f.fingerprint not in baseline]
+    n_baselined = len(findings) - len(new)
+
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps({
+            "gate": "analyze",
+            "files_checked": n_files,
+            "baselined": n_baselined,
+            "findings": [f.to_json() for f in new],
+        }, indent=2) + "\n")
+
+    for f in new:
+        print(f"FAIL: {f.render()}")
+    dt = time.perf_counter() - t0
+    if new:
+        print(f"analyze: {len(new)} finding(s) in {n_files} files "
+              f"({n_baselined} baselined) [{dt:.1f}s]")
+        return 1
+    which = args.checker if args.checker else f"{len(CHECKERS)} checkers"
+    print(f"analyze OK: {n_files} files, {which}, "
+          f"{n_baselined} baselined finding(s) [{dt:.1f}s]")
+    return 0
+
+
+def run_docs(args) -> int:
+    from tools import check_docs
+    errors, summary = check_docs.run()
+    for e in errors:
+        print(f"FAIL: {e}")
+    if errors:
+        return 1
+    print(summary)
+    return 0
+
+
+def run_trace(args) -> int:
+    import os
+
+    from tools import check_trace
+    jsonl = os.path.join(args.trace_dir, "trace.jsonl")
+    chrome = os.path.join(args.trace_dir, "trace_chrome.json")
+    if not os.path.exists(jsonl):
+        print(f"FAIL: {jsonl} does not exist")
+        return 1
+    errors, summary = check_trace.run(
+        jsonl, chrome,
+        require_serving_path=not args.no_require_serving_path)
+    for e in errors:
+        print(f"FAIL: {e}")
+    if errors:
+        return 1
+    print(summary)
+    return 0
+
+
+GATES: Dict[str, Callable] = {
+    "analyze": run_analyze,
+    "docs": run_docs,
+    "trace": run_trace,
+}

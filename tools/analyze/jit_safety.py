@@ -1,0 +1,336 @@
+"""Jit purity & donation-safety checker (checker id ``jit-safety``).
+
+Two invariants from the accelerator layer:
+
+1. **Donation safety** — a function jitted with ``donate_argnums=...``
+   *deletes* its donated input buffers (on TPU the old arena is gone,
+   not stale). At every caller site in the same module, the expression
+   passed in a donated position must not be READ again later in the
+   calling function unless it was rebound first — the safe idiom is the
+   call's own statement rebinding it, as in
+   ``self._arena = _set_row(self._arena, ...)`` (``index/device.py``).
+   Calls through a forwarding helper whose first argument is the jitted
+   function (``_donated(fn, *args)``) shift the donated positions by
+   one; ``functools.partial(fn, kw=...)`` wrappers resolve to ``fn``.
+
+2. **Kernel/jit body purity** — functions decorated ``jax.jit`` (or
+   ``functools.partial(jax.jit, ...)``) and kernel bodies handed to
+   ``pl.pallas_call`` run under trace: no ``print``, no
+   ``global``/``nonlocal`` declarations, no writes to captured Python
+   state (targets whose base name is neither a parameter nor a local
+   binding). Subscript stores into *parameters* are the Pallas
+   ref-write idiom (``o_ref[...] = acc``) and pass.
+
+Suppression: ``# analysis: jit-ok(<reason>)``.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analyze.common import Finding, FindingBuilder, dotted, root_name
+
+ID = "jit-safety"
+PRAGMA = "jit"
+
+
+def _literal_argnums(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    try:
+        val = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return None
+    if isinstance(val, int):
+        return (val,)
+    if isinstance(val, (tuple, list)) and all(isinstance(v, int) for v in val):
+        return tuple(val)
+    return None
+
+
+def _donated_argnums_of_decorator(dec: ast.AST) -> Optional[Tuple[int, ...]]:
+    """donate_argnums for ``@jax.jit(...)`` / ``@functools.partial(jax.jit,
+    ...)`` decorators (literal values only); () when jitted without
+    donation, None when not a jit decorator."""
+    if not isinstance(dec, ast.Call):
+        return None
+    fn = dotted(dec.func)
+    is_jit = fn in ("jax.jit", "jit")
+    if not is_jit and fn in ("functools.partial", "partial") and dec.args:
+        is_jit = dotted(dec.args[0]) in ("jax.jit", "jit")
+    if not is_jit:
+        return None
+    for kw in dec.keywords:
+        if kw.arg == "donate_argnums":
+            return _literal_argnums(kw.value) or ()
+    return ()
+
+
+def _is_jit_decorated(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        if dotted(dec) in ("jax.jit", "jit"):
+            return True
+        if _donated_argnums_of_decorator(dec) is not None:
+            return True
+    return False
+
+
+def _expr_key(node: ast.AST) -> Optional[str]:
+    """Stable key for a Name ('arena') or dotted chain ('self._arena')."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return dotted(node)
+    return None
+
+
+# -- purity ------------------------------------------------------------------
+
+
+class _PurityScan(ast.NodeVisitor):
+    def __init__(self, fn: ast.FunctionDef, fb: FindingBuilder, kind: str):
+        self.fb = fb
+        self.kind = kind
+        self.findings: List[Finding] = []
+        args = fn.args
+        self.locals: Set[str] = {
+            a.arg for a in (args.posonlyargs + args.args + args.kwonlyargs)
+        }
+        for a in (args.vararg, args.kwarg):
+            if a is not None:
+                self.locals.add(a.arg)
+        def bind(t: ast.AST) -> None:
+            # only NAMES become locals — a Subscript/Attribute target
+            # (STATE["k"] = v) binds nothing, it mutates captured state
+            if isinstance(t, ast.Name):
+                self.locals.add(t.id)
+            elif isinstance(t, ast.Starred):
+                bind(t.value)
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                for elt in t.elts:
+                    bind(elt)
+
+        for node in ast.walk(fn):
+            targets: List[ast.AST] = []
+            if isinstance(node, ast.Assign):
+                targets = list(node.targets)
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+                targets = [node.target]
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                targets = [node.target]
+            elif isinstance(node, ast.With):
+                targets = [i.optional_vars for i in node.items
+                           if i.optional_vars is not None]
+            for t in targets:
+                bind(t)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if isinstance(node.func, ast.Name) and node.func.id == "print":
+            self.findings.append(self.fb.at(
+                ID, node,
+                f"print() inside a {self.kind} body — traced code must be "
+                f"side-effect free (runs at trace time, not per call)"))
+        self.generic_visit(node)
+
+    def visit_Global(self, node: ast.Global) -> None:
+        self.findings.append(self.fb.at(
+            ID, node,
+            f"`global {', '.join(node.names)}` inside a {self.kind} body — "
+            f"traced code must not mutate captured Python state"))
+
+    def visit_Nonlocal(self, node: ast.Nonlocal) -> None:
+        self.findings.append(self.fb.at(
+            ID, node,
+            f"`nonlocal {', '.join(node.names)}` inside a {self.kind} body — "
+            f"traced code must not mutate captured Python state"))
+
+    def _flag_captured_write(self, target: ast.AST) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._flag_captured_write(elt)
+            return
+        if isinstance(target, (ast.Attribute, ast.Subscript)):
+            base = root_name(target)
+            if isinstance(base, ast.Name) and base.id not in self.locals:
+                self.findings.append(self.fb.at(
+                    ID, target,
+                    f"write to captured state `{ast.unparse(target)}` inside "
+                    f"a {self.kind} body — happens once at trace time; "
+                    f"traced code must be pure"))
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._flag_captured_write(t)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._flag_captured_write(node.target)
+        self.generic_visit(node)
+
+
+# -- donation ----------------------------------------------------------------
+
+
+def _donating_functions(tree: ast.Module) -> Dict[str, Tuple[int, ...]]:
+    out: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                argnums = _donated_argnums_of_decorator(dec)
+                if argnums:
+                    out[node.name] = argnums
+    return out
+
+
+def _resolve_donated_call(
+    node: ast.Call, donating: Dict[str, Tuple[int, ...]]
+) -> Optional[Tuple[str, Dict[int, ast.AST]]]:
+    """(callee name, {donated position -> argument expr}) for a call that
+    reaches a donating function — directly, through a
+    ``functools.partial`` wrapper, or through a forwarding helper whose
+    FIRST argument is the donating function (donated positions shift
+    by one)."""
+
+    def target_of(expr: ast.AST) -> Optional[str]:
+        name = _expr_key(expr)
+        if name in donating:
+            return name
+        if isinstance(expr, ast.Call) and \
+                dotted(expr.func) in ("functools.partial", "partial") and \
+                expr.args:
+            return target_of(expr.args[0])
+        return None
+
+    direct = target_of(node.func)
+    if direct is not None:
+        argmap = {i: node.args[i] for i in donating[direct]
+                  if i < len(node.args)}
+        return direct, argmap
+    if node.args:
+        fwd = target_of(node.args[0])
+        if fwd is not None:
+            argmap = {i: node.args[i + 1] for i in donating[fwd]
+                      if i + 1 < len(node.args)}
+            return fwd, argmap
+    return None
+
+
+def _stmt_rebinds(stmt: ast.stmt, key: str) -> bool:
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    for t in targets:
+        for elt in (t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]):
+            if _expr_key(elt) == key:
+                return True
+    return False
+
+
+def _enclosing_stmt(fn: ast.AST, call: ast.Call) -> Optional[ast.stmt]:
+    best = None
+    for s in ast.walk(fn):
+        if isinstance(s, ast.stmt) and s is not fn and \
+                any(sub is call for sub in ast.walk(s)):
+            if best is None or s.lineno >= best.lineno:
+                best = s  # innermost enclosing statement
+    return best
+
+
+def _first_read_after(fn: ast.AST, after: ast.stmt, key: str) -> Optional[ast.AST]:
+    """First Load of ``key`` in a statement after ``after`` (by line),
+    stopping once a statement rebinds it without reading it."""
+    later = sorted(
+        (s for s in ast.walk(fn)
+         if isinstance(s, ast.stmt)
+         and s.lineno > (after.end_lineno or after.lineno)),
+        key=lambda s: s.lineno,
+    )
+    for s in later:
+        reads = [
+            sub for sub in ast.walk(s)
+            if isinstance(sub, (ast.Name, ast.Attribute))
+            and isinstance(getattr(sub, "ctx", None), ast.Load)
+            and _expr_key(sub) == key
+        ]
+        if reads:
+            return reads[0]
+        if _stmt_rebinds(s, key):
+            return None
+    return None
+
+
+def _check_donation_sites(tree: ast.Module, fb: FindingBuilder,
+                          donating: Dict[str, Tuple[int, ...]]) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if fn.name in donating:
+            continue  # the jitted body itself
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            hit = _resolve_donated_call(call, donating)
+            if hit is None:
+                continue
+            callee, argmap = hit
+            stmt = _enclosing_stmt(fn, call)
+            if stmt is None:
+                continue
+            for pos, arg in argmap.items():
+                key = _expr_key(arg)
+                if key is None:
+                    continue  # non-trivial expression: nothing to track
+                if _stmt_rebinds(stmt, key):
+                    continue  # x = donating(x, ...) — the safe idiom
+                reader = _first_read_after(fn, stmt, key)
+                if reader is not None:
+                    out.append(fb.at(
+                        ID, reader,
+                        f"`{key}` was donated to {callee}() (donate_argnums "
+                        f"position {pos}, line {call.lineno}) and is read "
+                        f"again here — the donated buffer is deleted on "
+                        f"device; rebind it from the call's result first"))
+    return out
+
+
+# -- pallas kernels ----------------------------------------------------------
+
+
+def _pallas_kernel_names(tree: ast.Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            fn = dotted(node.func)
+            if fn is not None and fn.split(".")[-1] == "pallas_call" and node.args:
+                first = node.args[0]
+                if isinstance(first, ast.Call) and \
+                        dotted(first.func) in ("functools.partial", "partial") \
+                        and first.args:
+                    first = first.args[0]
+                if isinstance(first, ast.Name):
+                    out.add(first.id)
+    return out
+
+
+def check(tree: ast.Module, src: str, path: pathlib.Path) -> List[Finding]:
+    fb = FindingBuilder(path, src)
+    out: List[Finding] = []
+    donating = _donating_functions(tree)
+    kernels = _pallas_kernel_names(tree)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            kind = None
+            if node.name in kernels:
+                kind = "pallas kernel"
+            elif _is_jit_decorated(node):
+                kind = "jax.jit"
+            if kind is not None:
+                scan = _PurityScan(node, fb, kind)
+                for stmt in node.body:
+                    scan.visit(stmt)
+                out.extend(scan.findings)
+    out.extend(_check_donation_sites(tree, fb, donating))
+    return out

@@ -1,0 +1,297 @@
+"""Lock-discipline / race checker (checker id ``lock-discipline``).
+
+Invariant (the one PR 6 fixed dynamically and docstrings now promise):
+in any class that OWNS a ``threading.Lock``/``RLock``, instance state
+mutated outside ``__init__`` must be written under ``with self.<lock>``.
+
+The analysis is call-graph-local per class:
+
+* a *write* is any assignment / augmented assignment / ``del`` whose
+  target is rooted at ``self`` (``self.x = ...``, ``self.x += 1``,
+  ``self.store[k] = v``, ``self.stats.hits += 1``) in a method other
+  than ``__init__``/``__post_init__`` (construction is single-threaded);
+* a write is *held* when it is lexically inside ``with self.<lock>``
+  for any lock the class owns (multi-item ``with`` statements count;
+  nested functions inherit the lock state of their definition site);
+* a private helper with unheld writes is fine when every intra-class
+  call site holds the lock (``EmbeddingBank._grow`` is only called from
+  ``add`` under ``bank.lock``) — the requirement propagates through
+  unheld call sites by fixed point, and a method that ends up
+  lock-requiring while being publicly callable is reported.
+
+Suppression: ``# analysis: unlocked-ok(<reason>)`` on the write line,
+plus the checked ``LOCK_ALLOWLIST`` below (entries are
+``"<file>::<Class>.<method>"``; an entry that matches nothing is itself
+reported, so the allowlist cannot rot).
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analyze.common import Finding, FindingBuilder, dotted, rel, root_name
+
+ID = "lock-discipline"
+PRAGMA = "unlocked"
+
+# checked allowlist: "file::Class.method" entries whose unheld writes are
+# accepted wholesale (prefer the per-line pragma; this exists for
+# grandfathering a whole method). Ships empty — the tree is clean.
+LOCK_ALLOWLIST: Tuple[str, ...] = ()
+
+_LOCK_FACTORIES = {"Lock", "RLock"}
+
+
+def _is_lock_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = dotted(node.func)
+    return name is not None and name.split(".")[-1] in _LOCK_FACTORIES
+
+
+def _is_lock_factory_ref(node: ast.AST) -> bool:
+    name = dotted(node)
+    return name is not None and name.split(".")[-1] in _LOCK_FACTORIES
+
+
+def _lock_attrs(cls: ast.ClassDef) -> Set[str]:
+    """Attribute names holding a lock this class constructs."""
+    locks: Set[str] = set()
+    # dataclass fields: x: threading.Lock = field(default_factory=threading.Lock)
+    for stmt in cls.body:
+        value = None
+        target = None
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+            target, value = stmt.target.id, stmt.value
+        elif isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            target, value = stmt.targets[0].id, stmt.value
+        if target is None or value is None:
+            continue
+        if _is_lock_call(value):
+            locks.add(target)
+        elif isinstance(value, ast.Call) and dotted(value.func) in ("field",
+                                                                   "dataclasses.field"):
+            for kw in value.keywords:
+                if kw.arg == "default_factory" and _is_lock_factory_ref(kw.value):
+                    locks.add(target)
+    # __init__-assigned: self.x = threading.Lock()
+    for stmt in cls.body:
+        if not isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Assign) and _is_lock_call(node.value):
+                for t in node.targets:
+                    if (isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        locks.add(t.attr)
+    return locks
+
+
+class _MethodScan(ast.NodeVisitor):
+    """Collect (write, held) and (self-call, held) facts for one method."""
+
+    def __init__(self, locks: Set[str]):
+        self.locks = locks
+        self.held = False
+        # (node, field, held)
+        self.writes: List[Tuple[ast.AST, str, bool]] = []
+        # callee -> list of (call node, held)
+        self.calls: Dict[str, List[Tuple[ast.AST, bool]]] = {}
+
+    # -- lock regions --
+
+    def _with_holds(self, node: ast.With) -> bool:
+        for item in node.items:
+            ctx = item.context_expr
+            if (isinstance(ctx, ast.Attribute)
+                    and isinstance(ctx.value, ast.Name)
+                    and ctx.value.id == "self" and ctx.attr in self.locks):
+                return True
+        return False
+
+    def visit_With(self, node: ast.With) -> None:
+        if self._with_holds(node):
+            prev, self.held = self.held, True
+            for stmt in node.body:
+                self.visit(stmt)
+            self.held = prev
+        else:
+            self.generic_visit(node)
+
+    # -- writes --
+
+    def _record_target(self, target: ast.AST) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._record_target(elt)
+            return
+        base = root_name(target)
+        if isinstance(base, ast.Name) and base.id == "self":
+            # field = first attribute hop above `self`
+            node = target
+            field = None
+            while isinstance(node, (ast.Attribute, ast.Subscript)):
+                if isinstance(node, ast.Attribute) and \
+                        isinstance(node.value, ast.Name) and node.value.id == "self":
+                    field = node.attr
+                node = node.value
+            if field is not None and field not in self.locks:
+                self.writes.append((target, field, self.held))
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._record_target(t)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._record_target(node.target)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self._record_target(node.target)
+        self.generic_visit(node)
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        for t in node.targets:
+            self._record_target(t)
+        self.generic_visit(node)
+
+    # -- intra-class calls --
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if (isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "self"):
+            self.calls.setdefault(node.func.attr, []).append((node, self.held))
+        self.generic_visit(node)
+
+    # nested defs/lambdas inherit the lock state of their definition site
+    # (the pattern in PlanCache.insert_batch: helpers defined inside the
+    # locked region); their bodies are visited with self.held unchanged.
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        for stmt in node.body:
+            self.visit(stmt)
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+
+_CONSTRUCTORS = ("__init__", "__post_init__", "__new__")
+
+
+def _check_class(cls: ast.ClassDef, fb: FindingBuilder,
+                 allow: Set[str], file: str) -> List[Finding]:
+    locks = _lock_attrs(cls)
+    if not locks:
+        return []
+    scans: Dict[str, _MethodScan] = {}
+    for stmt in cls.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scan = _MethodScan(locks)
+            if stmt.name in _CONSTRUCTORS:
+                # construction is single-threaded: writes are safe and its
+                # call sites count as held
+                scan.held = True
+            for s in stmt.body:
+                scan.visit(s)
+            scans[stmt.name] = scan
+
+    # fixed point: a method REQUIRES the lock if it has an unheld write,
+    # or an unheld call to a method that requires the lock
+    requires: Set[str] = {
+        m for m, s in scans.items()
+        if m not in _CONSTRUCTORS and any(not held for _, _, held in s.writes)
+    }
+    changed = True
+    while changed:
+        changed = False
+        for m, s in scans.items():
+            if m in requires or m in _CONSTRUCTORS:
+                continue
+            for callee, sites in s.calls.items():
+                if callee in requires and any(not held for _, held in sites):
+                    requires.add(m)
+                    changed = True
+                    break
+
+    # a lock-requiring method is SAFE when it is private and every
+    # intra-class call site is held or sits in a method that is itself
+    # called only with the lock held (i.e. not exposed)
+    callers_of: Dict[str, List[Tuple[str, bool]]] = {}
+    for m, s in scans.items():
+        for callee, sites in s.calls.items():
+            for _, held in sites:
+                callers_of.setdefault(callee, []).append((m, held))
+
+    def exposed(m: str, seen: Set[str]) -> bool:
+        if not m.startswith("_") or (m.startswith("__") and m.endswith("__")):
+            return True  # publicly callable: external callers hold no lock
+        sites = callers_of.get(m)
+        if not sites:
+            return True  # private but never called in-class: unverifiable
+        for caller, held in sites:
+            if held or caller in _CONSTRUCTORS:
+                continue
+            if caller in seen:
+                continue  # cycle: optimistic (the cycle entry is checked)
+            if exposed(caller, seen | {m}):
+                return True
+        return False
+
+    out: List[Finding] = []
+    for m in sorted(requires):
+        if f"{file}::{cls.name}.{m}" in allow:
+            allow_used.add(f"{file}::{cls.name}.{m}")
+            continue
+        if not exposed(m, set()):
+            continue
+        s = scans[m]
+        reported = False
+        for node, fieldname, held in s.writes:
+            if not held:
+                out.append(fb.at(
+                    ID, node,
+                    f"{cls.name}.{m} writes self.{fieldname} without holding "
+                    f"any of {sorted('self.' + l for l in locks)} "
+                    f"(class owns a lock; guard the write or add "
+                    f"`# analysis: unlocked-ok(<reason>)`)"))
+                reported = True
+        if not reported:
+            # requirement came from an unheld call to a lock-requiring helper
+            for callee, sites in s.calls.items():
+                if callee in requires:
+                    for node, held in sites:
+                        if not held:
+                            out.append(fb.at(
+                                ID, node,
+                                f"{cls.name}.{m} calls self.{callee}() — which "
+                                f"mutates instance state expecting the lock — "
+                                f"without holding any of "
+                                f"{sorted('self.' + l for l in locks)}"))
+    return out
+
+
+allow_used: Set[str] = set()
+
+
+def check(tree: ast.Module, src: str, path: pathlib.Path) -> List[Finding]:
+    fb = FindingBuilder(path, src)
+    file = rel(path)
+    allow = {e for e in LOCK_ALLOWLIST if e.startswith(f"{file}::")}
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            out.extend(_check_class(node, fb, allow, file))
+    return out
+
+
+def stale_allowlist_entries(checked_files: Set[str]) -> List[str]:
+    """Allowlist entries whose method no longer tripped the checker (or
+    whose file was scanned and the entry never matched)."""
+    return [e for e in LOCK_ALLOWLIST
+            if e.split("::")[0] in checked_files and e not in allow_used]

@@ -1,0 +1,77 @@
+"""Obs-name drift checker (checker id ``obs-names``).
+
+Invariant: every string handed to the metrics registry
+(``registry.counter/gauge/histogram``) or the tracer
+(``tracer.span`` / ``sp.event`` / module-level ``span``) comes from
+``repro.obs.names`` — call sites reference ``_names.ROUTER_HITS``, not
+``"router.hits"``. A bare literal at a call site drifts silently: the
+docs-coverage gate and the catalog round-trip test
+(``tests/test_obs.py``) only see names that flow through the catalog,
+so a literal is an unaudited series the dashboards never hear about.
+
+The checker flags string-literal name arguments at instrumentation call
+sites. The ``repro.obs`` package itself is exempt — it is the defining
+layer (the catalog's literals live there by design, and the registry
+forwards ``name`` parameters it received).
+
+Suppression: ``# analysis: obs-name-ok(<reason>)``.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List, Optional
+
+from tools.analyze.common import Finding, FindingBuilder, subpackage_of
+
+ID = "obs-names"
+PRAGMA = "obs-name"
+
+# attribute call names that take a metric/span/event name as their first
+# argument (or name=)
+_SINKS = {
+    "counter": "registry",
+    "gauge": "registry",
+    "histogram": "registry",
+    "span": "tracer",
+    "event": "span",
+}
+
+
+def _applies(path: pathlib.Path) -> bool:
+    return subpackage_of(path) != "obs"
+
+
+def _name_argument(call: ast.Call) -> Optional[ast.expr]:
+    if call.args:
+        return call.args[0]
+    for kw in call.keywords:
+        if kw.arg == "name":
+            return kw.value
+    return None
+
+
+def check(tree: ast.Module, src: str, path: pathlib.Path) -> List[Finding]:
+    if not _applies(path):
+        return []
+    fb = FindingBuilder(path, src)
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        sink = None
+        if isinstance(node.func, ast.Attribute) and node.func.attr in _SINKS:
+            sink = node.func.attr
+        elif isinstance(node.func, ast.Name) and node.func.id == "span":
+            sink = "span"  # module-level repro.obs.span(...)
+        if sink is None:
+            continue
+        arg = _name_argument(node)
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            out.append(fb.at(
+                ID, arg,
+                f"string literal {arg.value!r} passed to .{sink}() — import "
+                f"the constant from repro.obs.names so the docs gate and the "
+                f"catalog round-trip test can see this series"))
+    return out

@@ -1,0 +1,145 @@
+"""Thread/executor hygiene checker (checker id ``thread-hygiene``).
+
+Invariant: every ``concurrent.futures.ThreadPoolExecutor`` and
+``threading.Thread`` constructed in a module has a *reachable
+disposition* — some code in the same module can end it:
+
+* executor used as a context manager (``with ThreadPoolExecutor(...)``),
+  or bound to a name/attribute on which ``.shutdown(...)`` is called
+  somewhere in the module (``self._pool = ThreadPoolExecutor(...)`` +
+  ``self._pool.shutdown(wait=True)`` in ``close()``);
+* thread constructed with ``daemon=True``, or bound to a key that gets
+  ``.join(...)`` called or ``.daemon = True`` assigned somewhere in the
+  module.
+
+An unbound construction (``ThreadPoolExecutor().submit(...)``, or a
+bare ``return ThreadPoolExecutor(...)``) has no module-local
+disposition and is flagged — leaked pools keep worker threads alive
+past ``close()`` and hang interpreter shutdown.
+
+Binding is resolved through the *enclosing statement*: the construction
+may sit inside a conditional expression
+(``self._pool = Executor(...) if async_ else None``) and still count as
+bound to the assignment target.
+
+Suppression: ``# analysis: thread-ok(<reason>)``.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List, Optional
+
+from tools.analyze.common import Finding, FindingBuilder, dotted
+
+ID = "thread-hygiene"
+PRAGMA = "thread"
+
+
+def _kind_of(call: ast.Call) -> Optional[str]:
+    name = dotted(call.func)
+    if name is None:
+        return None
+    last = name.split(".")[-1]
+    if last == "ThreadPoolExecutor":
+        return "executor"
+    if last == "Thread" and name in ("Thread", "threading.Thread"):
+        return "thread"
+    return None
+
+
+def _expr_key(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return dotted(node)
+    return None
+
+
+def _bound_key(stmt: ast.stmt) -> Optional[str]:
+    """Assignment target key when the statement binds exactly one
+    name/attribute (conditional-expression values included)."""
+    if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+        return _expr_key(stmt.targets[0])
+    if isinstance(stmt, ast.AnnAssign):
+        return _expr_key(stmt.target)
+    return None
+
+
+def _enclosing_stmt(tree: ast.AST, call: ast.Call) -> Optional[ast.stmt]:
+    best = None
+    for s in ast.walk(tree):
+        if isinstance(s, ast.stmt) and any(sub is call for sub in ast.walk(s)):
+            if best is None or s.lineno >= best.lineno:
+                best = s
+    return best
+
+
+def _in_with_item(tree: ast.AST, call: ast.Call) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                if any(sub is call for sub in ast.walk(item.context_expr)):
+                    return True
+    return False
+
+
+def _daemon_kwarg(call: ast.Call) -> bool:
+    for kw in call.keywords:
+        if kw.arg == "daemon" and isinstance(kw.value, ast.Constant) \
+                and kw.value.value is True:
+            return True
+    return False
+
+
+def _disposed(tree: ast.Module, key: str, kind: str) -> bool:
+    methods = ("shutdown",) if kind == "executor" else ("join",)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in methods \
+                and _expr_key(node.func.value) == key:
+            return True
+        if kind == "thread" and isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Attribute) and t.attr == "daemon" \
+                        and _expr_key(t.value) == key \
+                        and isinstance(node.value, ast.Constant) \
+                        and node.value.value is True:
+                    return True
+    return False
+
+
+def check(tree: ast.Module, src: str, path: pathlib.Path) -> List[Finding]:
+    fb = FindingBuilder(path, src)
+    out: List[Finding] = []
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        kind = _kind_of(call)
+        if kind is None:
+            continue
+        if kind == "thread" and _daemon_kwarg(call):
+            continue
+        if _in_with_item(tree, call):
+            continue  # context manager shuts down / scopes the pool
+        stmt = _enclosing_stmt(tree, call)
+        key = _bound_key(stmt) if stmt is not None else None
+        noun = ("ThreadPoolExecutor" if kind == "executor"
+                else "threading.Thread")
+        if key is None:
+            out.append(fb.at(
+                ID, call,
+                f"{noun} constructed without a binding — no reachable "
+                f"shutdown/join/daemon disposition in this module; bind it "
+                f"and dispose of it (or use it as a context manager)"))
+            continue
+        if not _disposed(tree, key, kind):
+            want = (".shutdown(...)" if kind == "executor"
+                    else ".join(...) or daemon=True")
+            out.append(fb.at(
+                ID, call,
+                f"{noun} bound to `{key}` but no {want} on `{key}` anywhere "
+                f"in this module — worker threads outlive the owner and "
+                f"hang interpreter shutdown"))
+    return out

@@ -1,6 +1,6 @@
 """Docs hygiene gate (run by the CI docs job and ``make docs-check``).
 
-Five checks, all against the working tree:
+Six checks, all against the working tree:
 
 1. ``README.md`` exists at the repo root.
 2. Every *internal* markdown link in ``README.md`` and ``docs/*.md``
@@ -21,8 +21,13 @@ Five checks, all against the working tree:
    (``METRIC_NAMES``/``SPAN_NAMES``/``EVENT_NAMES``) must appear in a code
    span/fence in the docs corpus — instrumenting a new name without adding
    it to ``docs/observability.md`` fails CI.
+6. The static-analysis surface is documented: every checker id catalogued
+   in ``tools.analyze`` (``CHECKER_IDS``) must appear in a code span/fence
+   in the docs corpus — adding a checker without documenting it in
+   ``docs/static-analysis.md`` fails CI.
 
 Usage:  PYTHONPATH=src python tools/check_docs.py
+        PYTHONPATH=src python -m tools.analyze --gate docs   (same checks)
 """
 
 from __future__ import annotations
@@ -182,21 +187,48 @@ def check_obs_coverage(errors: list) -> int:
     return n
 
 
-def main() -> None:
+def check_checker_ids(errors: list) -> int:
+    """Static-analysis checker-id documentation coverage (check 6)."""
+    ids = _module_literal(ROOT / "tools/analyze/__init__.py", "CHECKER_IDS")
+    corpus = "\n".join(code_regions(d.read_text()) for d in doc_files())
+    n = 0
+    for cid in ids:
+        n += 1
+        if not re.search(rf"(?<![\w-]){re.escape(cid)}(?![\w-])", corpus):
+            errors.append(
+                f"checker id `{cid}` (tools/analyze/__init__.py) is not "
+                "documented in README.md/docs/*.md — add it to "
+                "docs/static-analysis.md"
+            )
+    return n
+
+
+def run() -> tuple:
+    """All checks; returns (errors, summary). The ``docs`` gate of
+    ``python -m tools.analyze`` and the legacy script entrypoint both
+    call this."""
     errors: list = []
     if not (ROOT / "README.md").exists():
-        fail(["README.md does not exist at the repo root"])
+        return ["README.md does not exist at the repo root"], ""
     n_links = check_links(errors)
     n_cmds = check_commands(errors)
     n_names = check_coverage(errors)
     n_obs = check_obs_coverage(errors)
-    if errors:
-        fail(errors)
-    print(
+    n_ids = check_checker_ids(errors)
+    summary = (
         f"docs OK: {len(doc_files())} documents, {n_links} internal links "
         f"resolve, {n_cmds} quoted commands parse, {n_names} operational "
-        f"names covered, {n_obs} metric/span names covered"
+        f"names covered, {n_obs} metric/span names covered, {n_ids} checker "
+        f"ids covered"
     )
+    return errors, summary
+
+
+def main() -> None:
+    errors, summary = run()
+    if errors:
+        fail(errors)
+    print(summary)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ writes, against the schemas ``docs/observability.md`` documents:
 
 Usage:  PYTHONPATH=src python tools/check_trace.py [--dir trace-out]
         PYTHONPATH=src python tools/check_trace.py trace.jsonl trace_chrome.json
+        PYTHONPATH=src python -m tools.analyze --gate trace   (same checks)
 """
 
 from __future__ import annotations
@@ -222,6 +223,27 @@ def check_serving_path(spans, errors: List[str]) -> None:
         errors.append("cache.attribution hits carry no numeric tokens_saved")
 
 
+def run(jsonl: str, chrome=None, require_serving_path: bool = True) -> tuple:
+    """All checks against the artifact paths; returns (errors, summary).
+    The ``trace`` gate of ``python -m tools.analyze`` and the legacy
+    script entrypoint both call this."""
+    errors: List[str] = []
+    spans = check_jsonl(jsonl, errors)
+    if not spans:
+        errors.append(f"{jsonl}: no spans")
+    chrome_x: List[Dict[str, Any]] = []
+    if chrome is not None:
+        chrome_x = check_chrome(chrome, errors)
+        check_cross(spans, chrome_x, errors)
+    if require_serving_path:
+        check_serving_path(spans, errors)
+    n_events = sum(len(s["events"]) for s in spans)
+    summary = (f"trace OK: {len(spans)} spans ({n_events} events) in {jsonl}"
+               + (f", {len(chrome_x)} complete events in {chrome}"
+                  if chrome is not None else ""))
+    return errors, summary
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python tools/check_trace.py",
@@ -241,28 +263,16 @@ def main(argv=None) -> int:
         jsonl = os.path.join(args.dir, "trace.jsonl")
         chrome = os.path.join(args.dir, "trace_chrome.json")
 
-    errors: List[str] = []
     if not os.path.exists(jsonl):
         print(f"FAIL: {jsonl} does not exist")
         return 1
-    spans = check_jsonl(jsonl, errors)
-    if not spans:
-        errors.append(f"{jsonl}: no spans")
-    chrome_x: List[Dict[str, Any]] = []
-    if chrome is not None:
-        chrome_x = check_chrome(chrome, errors)
-        check_cross(spans, chrome_x, errors)
-    if not args.no_require_serving_path:
-        check_serving_path(spans, errors)
-
+    errors, summary = run(
+        jsonl, chrome, require_serving_path=not args.no_require_serving_path)
     if errors:
         for e in errors:
             print(f"FAIL: {e}")
         return 1
-    n_events = sum(len(s["events"]) for s in spans)
-    print(f"trace OK: {len(spans)} spans ({n_events} events) in {jsonl}"
-          + (f", {len(chrome_x)} complete events in {chrome}"
-             if chrome is not None else ""))
+    print(summary)
     return 0
 
 
