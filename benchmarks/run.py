@@ -32,6 +32,7 @@ from benchmarks import (
     t5_lookup_scalability,
     t6_fuzzy_threshold,
     t7_cold_start,
+    t8_kv_prefix,
     t9_sensitivity,
 )
 
@@ -43,6 +44,7 @@ MODULES = {
     "t5": t5_lookup_scalability,
     "t6": t6_fuzzy_threshold,
     "t7": t7_cold_start,
+    "t8": t8_kv_prefix,
     "f3": f3_matching,
     "f5": f5_hit_miss,
     "t9": t9_sensitivity,

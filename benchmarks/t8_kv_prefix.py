@@ -1,0 +1,108 @@
+"""t8: paged KV prefix cache — tokens prefetched vs prefilled per hit.
+
+The APC claim this measures: a plan-cache hit re-serves a known template
+prefix, so with the paged KV pool wired the engine prefills only the
+adaptation suffix. Rows report, per hit at batch >= 4:
+
+  * ``t8/full_prefill``   — the no-prefix baseline: every hit prefills
+    template + adaptation (tokens_prefilled = B * (Sp + Ss))
+  * ``t8/prefix_prefill`` — the paged path: suffix-only prefill with the
+    template KV gathered from the page pool (tokens_prefilled = B * Ss,
+    tokens_prefetched = B * Sp); ``prefill_drop_pct`` is the headline
+    (acceptance: >= 50%)
+  * ``t8/paged_attention``— one decode step read through the page table
+    (kernels/paged_attention.py) vs the dense decode kernel on the
+    gathered cache; ``bit_match`` must be true (page_size == block_k ->
+    identical arithmetic)
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.configs import registry
+from repro.kernels import ops
+from repro.models import lm
+from repro.serving.engine import Engine
+from repro.serving.kv_cache import KVPrefixCache, plan_cache_point, pool_for_config
+
+
+def run(fast: bool = False) -> List[Row]:
+    cfg = registry.get_smoke("olmo-1b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    B, Sp, Ss = 4, 32, 8
+    page_size = 8
+    pool = pool_for_config(cfg, num_pages=16, page_size=page_size)
+    kv = KVPrefixCache(pool)
+    eng = Engine(cfg, params, max_len=64, kv_prefix=kv)
+
+    rs = np.random.RandomState(0)
+    template = rs.randint(3, 400, (Sp,)).astype(np.int32)
+    suffix = rs.randint(3, 400, (B, Ss)).astype(np.int32)
+    prompts = np.concatenate([np.broadcast_to(template, (B, Sp)), suffix], 1)
+    point = plan_cache_point("t8-template", template, prompts)
+    assert point is not None and point.prefix_len == Sp
+
+    rows: List[Row] = []
+    repeats = 2 if fast else 3
+
+    # baseline: every hit re-prefills template + adaptation
+    us_full = timeit(lambda: eng.prefill(prompts), repeats=repeats)
+    rows.append(Row("t8/full_prefill", us_full, {
+        "batch": B, "prefix_len": Sp, "suffix_len": Ss,
+        "tokens_prefilled_per_hit": B * (Sp + Ss),
+    }))
+
+    # the paged path: register once (the miss), then suffix-only hits
+    _, cache = eng.prefill(prompts)
+    eng.register_prefix(point.template_id, cache, point.prefix_len)
+    us_pfx = timeit(
+        lambda: eng.prefill_with_prefix(point.template_id, suffix),
+        repeats=repeats,
+    )
+    prefilled = B * Ss
+    drop = 100.0 * (1.0 - prefilled / (B * (Sp + Ss)))
+    rows.append(Row("t8/prefix_prefill", us_pfx, {
+        "batch": B, "prefix_len": Sp, "suffix_len": Ss,
+        "tokens_prefilled_per_hit": prefilled,
+        "tokens_prefetched_per_hit": B * Sp,
+        "prefill_drop_pct": round(drop, 1),
+        "pages_per_hit": -(-Sp // page_size),
+    }))
+
+    # paged-attention decode through the page table vs the dense kernel
+    # on the gathered cache: with page_size == block_k the arithmetic is
+    # block-identical, so outputs must BIT-match
+    leases = [kv.acquire(point.template_id) for _ in range(B)]
+    table, lengths = kv.page_table(leases)
+    layer = 0
+    k_pages, v_pages = pool.kernel_view(layer)
+    q = jax.random.normal(
+        jax.random.PRNGKey(1), (B, 1, cfg.num_heads, cfg.head_dim), jnp.float32
+    )
+    o_paged = ops.paged_decode_attention_op(q, k_pages, v_pages, table, lengths)
+    pt = np.maximum(np.asarray(table, np.int64), 0)
+    kd = jnp.asarray(np.asarray(k_pages)[pt].reshape(B, -1, cfg.num_kv_heads,
+                                                     cfg.head_dim))
+    vd = jnp.asarray(np.asarray(v_pages)[pt].reshape(B, -1, cfg.num_kv_heads,
+                                                     cfg.head_dim))
+    o_dense = ops.decode_attention_op(q, kd, vd, lengths, block_k=page_size)
+    bit_match = bool(np.array_equal(np.asarray(o_paged), np.asarray(o_dense)))
+    us_paged = timeit(
+        lambda: ops.paged_decode_attention_op(
+            q, k_pages, v_pages, table, lengths
+        ).block_until_ready(),
+        repeats=repeats,
+    )
+    for lease in leases:
+        kv.release_lease(lease)
+    rows.append(Row("t8/paged_attention", us_paged, {
+        "batch": B, "pages": int(table.shape[1]), "page_size": page_size,
+        "bit_match": bit_match,
+    }))
+    return rows

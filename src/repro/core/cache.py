@@ -111,6 +111,12 @@ class PlanCache(PlanStoreBase, Generic[V]):
         )
         self.fuzzy = self.pipeline.stage("fuzzy") is not None
         self._store: Dict[str, CacheEntry] = {}
+        # hot-tier delete hooks: called with the keyword for EVERY removal
+        # from the hot store (eviction, TTL expiry, remove(), clear()) —
+        # the seam that ties derived per-template state (the paged KV
+        # prefix pool) to this cache's lifecycle. Listeners run under the
+        # cache lock and must not call back into this cache.
+        self._evict_listeners: List[Callable[[str], None]] = []
         self._lock = threading.RLock()
         self.stats = CacheStats(self.obs, **self.obs_labels)
         # the cold persistent tier (repro.memory.tiered): eviction victims
@@ -254,10 +260,17 @@ class PlanCache(PlanStoreBase, Generic[V]):
             self.stats.add("promotes")
         return self._get_live(keyword, now)
 
+    def add_evict_listener(self, fn: Callable[[str], None]) -> None:
+        """Register a hot-tier delete hook (see ``_evict_listeners``)."""
+        with self._lock:
+            self._evict_listeners.append(fn)
+
     def _delete(self, keyword: str) -> None:
         del self._store[keyword]
         self.policy.on_remove(keyword)
         self.pipeline.on_remove(keyword)
+        for fn in self._evict_listeners:
+            fn(keyword)
 
     def insert_batch(
         self,
@@ -406,7 +419,11 @@ class PlanCache(PlanStoreBase, Generic[V]):
 
     def clear(self) -> None:
         with self._lock:
+            dropped = list(self._store)
             self._store.clear()
+            for kw in dropped:
+                for fn in self._evict_listeners:
+                    fn(kw)
             # reset, don't rebuild: the stats object is a view over a
             # possibly-shared registry, and replacing it would strand the
             # registered series at their old values

@@ -4,7 +4,10 @@ This kernel is memory-bound (arithmetic intensity ~1 FLOP/byte streaming
 K/V), so the tiling targets HBM->VMEM streaming, not the MXU: grid =
 (B, Hkv, n_k) with all G q-heads of a kv-group processed together per block
 (the (G, bk) score tile keeps the VPU busy while K/V stream). Valid-length
-masking uses a scalar ``length`` in SMEM.
+masking uses a per-sequence ``lengths`` vector in SMEM — mixed-length
+batches mask each row to its own valid count (the historical scalar
+``length`` masked every row to one shared length, silently wrong for any
+batch whose sequences differ).
 
 VMEM per step: k,v blocks 2*bk*hd*2B (bf16) + q (G*hd) + acc (G*hd) fp32;
 bk=512, hd=128: ~260 KiB — sized so ~8 outstanding copies double-buffer the
@@ -27,6 +30,7 @@ NEG_INF = -1e30
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                    block_k, n_k):
+    ib = pl.program_id(0)
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -35,7 +39,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    length = len_ref[0]
+    length = len_ref[ib]
 
     @pl.when(ik * block_k < length)
     def _compute():
@@ -74,7 +78,8 @@ def decode_attention(
     block_k: int = 512,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """q: (B, Hq, hd); k, v: (B, Hkv, M, hd); length: () int32 -> (B, Hq, hd)."""
+    """q: (B, Hq, hd); k, v: (B, Hkv, M, hd); length: () or (B,) int32 valid
+    KV counts (a scalar broadcasts to the whole batch) -> (B, Hq, hd)."""
     B, Hq, hd = q.shape
     Hkv, M = k.shape[1], k.shape[2]
     G = Hq // Hkv
@@ -82,13 +87,16 @@ def decode_attention(
     assert M % block_k == 0, (M, block_k)
     n_k = M // block_k
     qg = q.reshape(B, Hkv, G, hd)
+    lengths = jnp.broadcast_to(
+        jnp.asarray(length, jnp.int32).reshape(-1), (B,)
+    )
 
     kernel = functools.partial(_decode_kernel, block_k=block_k, n_k=n_k)
     out = pl.pallas_call(
         kernel,
         grid=(B, Hkv, n_k),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),  # length scalar
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # per-sequence lengths
             pl.BlockSpec((1, 1, G, hd), lambda b, h, ik: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik: (b, h, ik, 0)),
             pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ik: (b, h, ik, 0)),
@@ -104,5 +112,5 @@ def decode_attention(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(jnp.asarray(length, jnp.int32).reshape(1), qg, k, v)
+    )(lengths, qg, k, v)
     return out.reshape(B, Hq, hd)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _paged
 from repro.kernels import rwkv6 as _rwkv
 from repro.kernels import similarity as _sim
 from repro.kernels import ssd as _ssd
@@ -39,11 +40,27 @@ def flash_attention_op(q, k, v, *, causal=True, block_q=128, block_k=128):
 
 @functools.partial(jax.jit, static_argnames=("block_k",))
 def decode_attention_op(q, cache_k, cache_v, length, *, block_k=512):
-    """q (B,1,Hq,hd); cache (B,M,Hkv,hd); length () -> (B,1,Hq,hd)."""
+    """q (B,1,Hq,hd); cache (B,M,Hkv,hd); length () or (B,) per-sequence
+    valid counts -> (B,1,Hq,hd)."""
     qt = q[:, 0]  # (B,Hq,hd)
     kt = cache_k.transpose(0, 2, 1, 3)
     vt = cache_v.transpose(0, 2, 1, 3)
     o = _dec.decode_attention(qt, kt, vt, length, block_k=block_k, interpret=_on_cpu())
+    return o[:, None]
+
+
+@jax.jit
+def paged_decode_attention_op(q, k_pages, v_pages, page_table, lengths):
+    """Decode attention through a page table (serving/kv_cache.py pool).
+
+    q (B,1,Hq,hd) model layout; k_pages/v_pages (N, page_size, Hkv, hd)
+    pool slabs; page_table (B, P) int32 pool rows (-1 past the end);
+    lengths (B,) valid tokens -> (B,1,Hq,hd). Same interpret/Mosaic
+    dispatch rule as every other wrapper.
+    """
+    o = _paged.paged_decode_attention(
+        q[:, 0], k_pages, v_pages, page_table, lengths, interpret=_on_cpu()
+    )
     return o[:, None]
 
 

@@ -28,18 +28,37 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
 
 
 def decode_attention_ref(q, k, v, length):
-    """q: (B, Hq, hd); k, v: (B, Hkv, M, hd); length: () valid kv count.
-    Returns (B, Hq, hd)."""
+    """q: (B, Hq, hd); k, v: (B, Hkv, M, hd); length: () or (B,) valid kv
+    counts (a scalar broadcasts to the whole batch). Returns (B, Hq, hd)."""
     B, Hq, hd = q.shape
     Hkv, M = k.shape[1], k.shape[2]
     G = Hq // Hkv
     kr = jnp.repeat(k, G, axis=1).astype(jnp.float32)
     vr = jnp.repeat(v, G, axis=1).astype(jnp.float32)
     s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kr) / jnp.sqrt(hd)
-    mask = jnp.arange(M)[None, None, :] >= length
+    lens = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (B,))
+    mask = jnp.arange(M)[None, None, :] >= lens[:, None, None]
     s = jnp.where(mask, NEG_INF, s)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhk,bhkd->bhd", p, vr).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """Oracle for kernels/paged_attention.py: gather each sequence's pages
+    into a dense cache, then dense masked decode attention.
+
+    q: (B, Hq, hd); k_pages, v_pages: (N, page_size, Hkv, hd);
+    page_table: (B, P) pool rows (-1 past the end); lengths: (B,).
+    Returns (B, Hq, hd)."""
+    import numpy as np
+
+    pt = np.maximum(np.asarray(page_table, np.int64), 0)
+    kg = np.asarray(k_pages)[pt]  # (B, P, page_size, Hkv, hd)
+    vg = np.asarray(v_pages)[pt]
+    B, P, ps, Hkv, hd = kg.shape
+    kd = kg.transpose(0, 3, 1, 2, 4).reshape(B, Hkv, P * ps, hd)
+    vd = vg.transpose(0, 3, 1, 2, 4).reshape(B, Hkv, P * ps, hd)
+    return decode_attention_ref(q, jnp.asarray(kd), jnp.asarray(vd), lengths)
 
 
 def rwkv6_ref(r, k, v, w_log, u, state0):

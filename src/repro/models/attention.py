@@ -270,6 +270,55 @@ def attention_decode(
     return out, ck, cv
 
 
+def attention_extend(
+    cfg,
+    p: Params,
+    x: jnp.ndarray,
+    cos,
+    sin,
+    prefix_k: jnp.ndarray,
+    prefix_v: jnp.ndarray,
+    prefix_len: int,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Chunked-prefill continuation: the suffix attends over a prefilled
+    prefix plus itself causally.
+
+    x: (B, S, D) suffix activations; prefix_k/v: (B, Sp, Hkv, hd) cached
+    post-RoPE prefix K/V (Sp >= prefix_len; positions past ``prefix_len``
+    are page padding and are masked out); prefix_len: static int. The
+    caller supplies cos/sin at positions offset by ``prefix_len`` — the
+    suffix's RoPE phases continue where the prefix stopped.
+    Returns (out (B, S, D), (k_suf, v_suf)).
+    """
+    B, S, _ = x.shape
+    Sp = prefix_k.shape[1]
+    q, k, v = _project_qkv(cfg, p, x)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    keys = jnp.concatenate([prefix_k.astype(q.dtype), k], axis=1)
+    vals = jnp.concatenate([prefix_v.astype(q.dtype), v], axis=1)
+    M = Sp + S
+    Hkv = keys.shape[2]
+    hd = cfg.head_dim
+    G = cfg.num_heads // Hkv
+    # per-query mask: prefix keys below prefix_len are always visible;
+    # suffix keys are causal relative to the suffix row
+    row = jnp.arange(S)[:, None]
+    col = jnp.arange(M)[None, :]
+    visible = jnp.where(col < Sp, col < prefix_len, (col - Sp) <= row)
+    qg = q.reshape(B, S, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, keys.astype(jnp.float32))
+    s = s / jnp.sqrt(hd)
+    if cfg.attn_logit_softcap > 0.0:
+        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
+    s = jnp.where(visible[None, None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", pr, vals.astype(jnp.float32))
+    out = o.reshape(B, S, cfg.q_dim).astype(q.dtype) @ p["wo"]
+    return out, (k, v)
+
+
 # ---------------------------------------------------------------------------
 # Cross-attention (whisper decoder)
 # ---------------------------------------------------------------------------

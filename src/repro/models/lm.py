@@ -501,6 +501,89 @@ def prefill(cfg, params, batch, ctx=None, cache_len=None):
     return logits, cache
 
 
+def prefill_extend(
+    cfg,
+    params: Params,
+    batch: Batch,
+    prefix_k: jnp.ndarray,
+    prefix_v: jnp.ndarray,
+    prefix_len: int,
+    ctx: Optional[ParallelCtx] = None,
+    cache_len: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Cache]:
+    """Prefill ONLY a suffix against an already-built prefix KV.
+
+    The suffix tokens (``batch["tokens"]``, (B, S)) are run at positions
+    ``[prefix_len, prefix_len + S)`` attending over the prefix K/V plus
+    themselves causally; the returned cache is the same dense pytree a
+    full ``prefill`` of prefix+suffix would produce (prefix K/V copied
+    into place), so ``decode_step`` continues transparently.
+
+    prefix_k/v: (L, B, Sp, Hkv, hd) post-RoPE (Sp >= prefix_len; the
+    overhang is page padding). prefix_len must be static under jit.
+    KV-recurrent families keep per-token state, so a stored prefix can't
+    be re-entered mid-stream — dense / moe / vlm only.
+    """
+    if cfg.family in ("audio", "ssm", "hybrid"):
+        raise NotImplementedError(
+            f"prefix extension requires a pure-KV cache; family "
+            f"{cfg.family!r} carries recurrent state"
+        )
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype_of(cfg.dtype))
+    pos = jnp.broadcast_to(
+        prefix_len + jnp.arange(S, dtype=jnp.int32)[None], (B, S)
+    )
+    bspec = None if ctx is None else P(ctx.batch_spec, ctx.seq_spec, None)
+    x = _constrain(x, ctx, bspec)
+    cos, sin = positions_for_rope(cfg, pos, cfg.head_dim)
+
+    def body(carry, inp):
+        xc, aux = carry
+        p, pk, pv = inp
+        h, kv = attn.attention_extend(
+            cfg, p["attn"], apply_norm(cfg, p, "ln1", xc), cos, sin,
+            pk, pv, prefix_len,
+        )
+        xc = xc + h
+        if cfg.moe is not None:
+            m, a = moe_mod.moe_forward(cfg, p["moe"], apply_norm(cfg, p, "ln2", xc), ctx)
+        else:
+            m = mlp_forward(cfg, p["mlp"], apply_norm(cfg, p, "ln2", xc))
+            a = jnp.zeros((), jnp.float32)
+        xc = xc + m
+        xc = _constrain(xc, ctx, bspec)
+        return (xc, aux + a), kv
+
+    (x, _), kvs = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], prefix_k, prefix_v),
+    )
+    logits = _logits(cfg, params, x)
+    k_suf, v_suf = kvs  # (L, B, S, Hkv, hd)
+    total = prefix_len + S
+    M = cache_len or total
+    assert M >= total, (M, total)
+    kv_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else x.dtype
+
+    def assemble(pre, suf):
+        parts = [pre[:, :, :prefix_len].astype(kv_dt), suf.astype(kv_dt)]
+        if M > total:
+            parts.append(jnp.zeros(
+                (cfg.num_layers, B, M - total, cfg.num_kv_heads, cfg.head_dim),
+                kv_dt,
+            ))
+        return jnp.concatenate(parts, axis=2)
+
+    cache = {
+        "length": jnp.asarray(total, jnp.int32),
+        "kv_k": assemble(prefix_k, k_suf),
+        "kv_v": assemble(prefix_v, v_suf),
+    }
+    return logits, cache
+
+
 # ===========================================================================
 # Decode step
 # ===========================================================================

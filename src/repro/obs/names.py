@@ -51,6 +51,11 @@ LSH_CANDIDATES = "index.lsh.candidates"
 LSH_RECALL_CHECKS = "index.lsh.recall_checks"
 LSH_RECALL_AGREEMENTS = "index.lsh.recall_agreements"
 
+KV_PAGES_HIT = "kv.pages_hit"
+KV_PAGES_BUILT = "kv.pages_built"
+KV_TOKENS_PREFETCHED = "kv.tokens_prefetched"
+KV_PREFIX_EVICTIONS = "kv.prefix_evictions"
+
 DEVICE_CAPACITY = "index.device.capacity"
 DEVICE_H2D_BYTES = "index.device.h2d_bytes_total"
 DEVICE_ROW_UPDATES = "index.device.row_updates"
@@ -80,6 +85,10 @@ METRIC_NAMES = (
     "cache.promotes",
     "cache.compaction_saved_tokens",
     "cache.stale_insert_skips",
+    "kv.pages_hit",
+    "kv.pages_built",
+    "kv.tokens_prefetched",
+    "kv.prefix_evictions",
     "index.lsh.queries",
     "index.lsh.probed_queries",
     "index.lsh.brute_fallback_queries",

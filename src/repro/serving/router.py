@@ -249,8 +249,24 @@ class TwoTierRouter:
         cachegen_fallback: bool = True,
         clock: Optional[Callable[[], float]] = None,
         obs: Optional[MetricsRegistry] = None,
+        kv_prefix: Optional[Any] = None,
     ):
         self.cache = cache
+        # the paged KV prefix pool (serving.kv_cache.KVPrefixCache): its
+        # lifecycle is slaved to the plan cache — when a template is
+        # evicted from the hot tier, its prefix pages are released in the
+        # same breath, so the pool can never serve KV for a plan the
+        # router no longer routes to. Requires a local PlanCache (the
+        # distributed facade has no single eviction stream).
+        self.kv_prefix = kv_prefix
+        if kv_prefix is not None:
+            add = getattr(cache, "add_evict_listener", None)
+            if add is None:
+                raise TypeError(
+                    "kv_prefix requires a cache with add_evict_listener "
+                    "(plan-cache eviction must free the prefix pages)"
+                )
+            add(kv_prefix.release)
         self.extract_keyword = extract_keyword
         self.plan_large = plan_large
         self.plan_small_with_template = plan_small_with_template
@@ -475,7 +491,15 @@ class TwoTierRouter:
 
     def _serve_hit(self, request: Any, tpl: Any) -> Any:
         """Cache hit: cheap tier adapts the cached template (shared by the
-        single and batched admission paths so metrics/policy can't drift)."""
+        single and batched admission paths so metrics/policy can't drift).
+
+        With ``kv_prefix`` wired, the adapter behind
+        ``plan_small_with_template`` should place the SINGLE cache point
+        here — after the template, before the adaptation prompt — via
+        ``serving.kv_cache.plan_cache_point(...)`` and pass the resulting
+        ``CachePoint`` to ``Engine.generate``: the hit then prefills only
+        the adaptation suffix, with the template's KV served from the
+        page pool."""
         self.metrics.add("hits")
         self.metrics.add("small_tier_calls")
         return self.plan_small_with_template(request, tpl)

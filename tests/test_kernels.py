@@ -66,6 +66,97 @@ def test_decode_attention_sweep(B, Hq, Hkv, M, hd, length, bk, dtype):
     )
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,M,hd,lengths,bk",
+    [
+        (3, 8, 2, 256, 64, (17, 177, 256), 64),   # mixed-length batch
+        (2, 4, 4, 128, 32, (1, 128), 64),         # extremes
+        (4, 4, 1, 256, 64, (64, 64, 64, 64), 128),  # uniform via vector
+    ],
+)
+def test_decode_attention_per_sequence_lengths(B, Hq, Hkv, M, hd, lengths, bk,
+                                               dtype):
+    """Each batch row masks to ITS OWN valid count (the historical scalar
+    masked every row to one shared length — wrong for mixed batches)."""
+    ks = jax.random.split(KEY, 3)
+    q = _rand((B, 1, Hq, hd), dtype, ks[0])
+    ck = _rand((B, M, Hkv, hd), dtype, ks[1])
+    cv = _rand((B, M, Hkv, hd), dtype, ks[2])
+    lens = jnp.asarray(lengths, jnp.int32)
+    o = ops.decode_attention_op(q, ck, cv, lens, block_k=bk)
+    o_ref = ref.decode_attention_ref(
+        q[:, 0], ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3), lens
+    )
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(o[:, 0], np.float32), np.asarray(o_ref, np.float32),
+        atol=tol, rtol=tol,
+    )
+    # and each row individually equals a scalar-length call on that row
+    for b, ln in enumerate(lengths):
+        ob = ops.decode_attention_op(
+            q[b : b + 1], ck[b : b + 1], cv[b : b + 1],
+            jnp.asarray(ln, jnp.int32), block_k=bk,
+        )
+        np.testing.assert_array_equal(np.asarray(o[b : b + 1]), np.asarray(ob))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,hd,ps,npages,P,lengths",
+    [
+        (3, 8, 2, 64, 64, 16, 4, (200, 100, 256)),
+        (2, 4, 4, 32, 16, 32, 8, (128, 7)),
+        (1, 4, 1, 64, 32, 8, 2, (33,)),
+    ],
+)
+def test_paged_attention_vs_ref(B, Hq, Hkv, hd, ps, npages, P, lengths, dtype):
+    """Gather-through-page-table decode vs the numpy gather + dense oracle.
+    Page tables are permuted (out-of-order pool rows) with -1 past the end."""
+    ks = jax.random.split(KEY, 3)
+    q = _rand((B, Hq, hd), dtype, ks[0])
+    k_pages = _rand((npages, ps, Hkv, hd), dtype, ks[1])
+    v_pages = _rand((npages, ps, Hkv, hd), dtype, ks[2])
+    rng = np.random.RandomState(0)
+    table = np.full((B, P), -1, np.int32)
+    for b, ln in enumerate(lengths):
+        n = -(-ln // ps)
+        table[b, :n] = rng.choice(npages, size=n, replace=False)
+    table = jnp.asarray(table)
+    lens = jnp.asarray(lengths, jnp.int32)
+    from repro.kernels.paged_attention import paged_decode_attention
+
+    o = paged_decode_attention(q, k_pages, v_pages, table, lens, interpret=True)
+    o_ref = ref.paged_attention_ref(q, k_pages, v_pages, table, lens)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_paged_attention_bitmatches_dense_kernel():
+    """With page_size == block_k and the pages gathered dense in table
+    order, the paged kernel performs the same block-sequential online
+    softmax as decode_attention — outputs must be BITWISE equal."""
+    B, Hq, Hkv, hd, ps, npages, P = 3, 8, 2, 64, 64, 16, 4
+    ks = jax.random.split(KEY, 3)
+    q = _rand((B, 1, Hq, hd), jnp.float32, ks[0])
+    k_pages = _rand((npages, ps, Hkv, hd), jnp.float32, ks[1])
+    v_pages = _rand((npages, ps, Hkv, hd), jnp.float32, ks[2])
+    table = jnp.asarray(
+        [[3, 1, 7, -1], [2, 0, -1, -1], [5, 9, 11, 4]], jnp.int32
+    )
+    lens = jnp.asarray([200, 100, 256], jnp.int32)
+    o_paged = ops.paged_decode_attention_op(q, k_pages, v_pages, table, lens)
+    pt = np.maximum(np.asarray(table, np.int64), 0)
+    kd = jnp.asarray(np.asarray(k_pages)[pt].reshape(B, P * ps, Hkv, hd))
+    vd = jnp.asarray(np.asarray(v_pages)[pt].reshape(B, P * ps, Hkv, hd))
+    o_dense = ops.decode_attention_op(q, kd, vd, lens, block_k=ps)
+    assert np.array_equal(np.asarray(o_paged), np.asarray(o_dense))
+
+
 @pytest.mark.parametrize("S,chunk", [(64, 16), (128, 32), (96, 32)])
 @pytest.mark.parametrize("N", [16, 64])
 def test_wkv6_sweep(S, chunk, N):

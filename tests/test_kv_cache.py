@@ -1,0 +1,282 @@
+"""Paged KV prefix cache: page refcount lifecycle, copy-on-write
+extension, plan-cache eviction coupling, and prefix-prefill parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.cache import PlanCache
+from repro.models import lm
+from repro.obs import MetricsRegistry
+from repro.serving.engine import Engine
+from repro.serving.kv_cache import (
+    CachePoint,
+    KVPrefixCache,
+    PagePool,
+    PagePoolExhausted,
+    plan_cache_point,
+    pool_for_config,
+)
+from repro.serving.router import TwoTierRouter
+
+
+def _pool(num_pages=16, page_size=4):
+    return PagePool(2, num_pages, page_size, 2, 8, dtype=jnp.float32)
+
+
+def _kv(L=2, S=10, fill=None):
+    if fill is None:
+        x = jnp.arange(L * S * 2 * 8, dtype=jnp.float32).reshape(L, S, 2, 8)
+    else:
+        x = jnp.full((L, S, 2, 8), float(fill), jnp.float32)
+    return x
+
+
+# -- page pool / refcounts -----------------------------------------------------
+
+
+def test_page_refcount_lifecycle():
+    pool = _pool()
+    kv = KVPrefixCache(pool)
+    kv.put("a", _kv(S=10), _kv(S=10), length=10)  # 3 pages (4+4+2)
+    pages = list(kv._entries["a"].pages)
+    assert pool.free_pages == 13
+    assert all(pool.refcount[p] == 1 for p in pages)
+
+    lease = kv.acquire("a")
+    assert lease is not None and lease.length == 10
+    assert all(pool.refcount[p] == 2 for p in pages)
+
+    # release while leased: entry goes, pages survive via the lease
+    assert kv.release("a")
+    assert "a" not in kv
+    assert all(pool.refcount[p] == 1 for p in pages)
+    k, v, ln = kv.gather(lease, batch=2)
+    assert k.shape == (2, 2, 12, 2, 8) and ln == 10
+
+    kv.release_lease(lease)
+    assert pool.free_pages == 16
+    assert all(pool.refcount[p] == 0 for p in pages)
+
+
+def test_put_roundtrips_content_with_page_padding():
+    pool = _pool()
+    kv = KVPrefixCache(pool)
+    src = _kv(S=10)
+    kv.put("a", src, src, length=7)  # 2 pages, last padded by 1
+    lease = kv.acquire("a")
+    k, v, ln = kv.gather(lease, batch=1)
+    assert ln == 7
+    np.testing.assert_array_equal(np.asarray(k[:, 0, :7]), np.asarray(src[:, :7]))
+    np.testing.assert_array_equal(
+        np.asarray(k[:, 0, 7:]), np.zeros((2, 1, 2, 8), np.float32)
+    )
+    kv.release_lease(lease)
+
+
+def test_cow_extend_shares_full_pages_and_copies_tail():
+    pool = _pool()
+    kv = KVPrefixCache(pool)
+    parent = _kv(S=10)
+    kv.put("p", parent, parent, length=10)
+    ppages = list(kv._entries["p"].pages)
+    n_new = kv.extend("p", "c", _kv(S=5, fill=1.0), _kv(S=5, fill=1.0))
+    cpages = list(kv._entries["c"].pages)
+    assert n_new == 2  # tail(2) + 5 suffix = 7 -> 2 pages
+    assert cpages[:2] == ppages[:2]  # full pages shared, not copied
+    assert cpages[2] != ppages[2]  # partial tail page copied (COW)
+    assert pool.refcount[ppages[0]] == 2
+
+    lease = kv.acquire("c")
+    k, _, ln = kv.gather(lease, batch=1)
+    assert ln == 15
+    expect = np.concatenate(
+        [np.asarray(parent), np.ones((2, 5, 2, 8), np.float32)], axis=1
+    )
+    np.testing.assert_array_equal(np.asarray(k[:, 0, :15]), expect)
+    kv.release_lease(lease)
+
+    # parent release leaves shared pages alive for the child
+    kv.release("p")
+    assert pool.refcount[ppages[0]] == 1
+    kv.release("c")
+    assert pool.free_pages == 16
+
+
+def test_lru_eviction_on_pool_exhaustion_and_lease_pinning():
+    pool = _pool(num_pages=4)
+    kv = KVPrefixCache(pool)
+    kv.put("old", _kv(S=8), _kv(S=8))  # 2 pages
+    kv.put("new", _kv(S=8), _kv(S=8))  # 2 pages, pool full
+    lease = kv.acquire("new")
+    with pytest.raises(PagePoolExhausted):
+        # "old" can be evicted (2 pages) but "new" is leased -> only 2 free
+        kv.put("x", _kv(S=16), _kv(S=16))
+    assert "old" not in kv  # the idle LRU victim went first
+    kv.release_lease(lease)
+    kv.put("x", _kv(S=16), _kv(S=16))  # now "new" is evictable
+    assert "new" not in kv and "x" in kv
+    assert kv._prefix_evictions.value == 2
+
+
+def test_metrics_land_in_registry():
+    reg = MetricsRegistry()
+    kv = KVPrefixCache(_pool(), obs=reg)
+    kv.put("a", _kv(S=8), _kv(S=8))
+    lease = kv.acquire("a")
+    kv.gather(lease, batch=4)
+    kv.release_lease(lease)
+    kv.release("a")
+    assert reg.counter("kv.pages_built").value == 2
+    assert reg.counter("kv.pages_hit").value == 2
+    assert reg.counter("kv.tokens_prefetched").value == 32  # 4 * 8
+    assert reg.counter("kv.prefix_evictions").value == 1
+
+
+# -- page table for the paged kernel -------------------------------------------
+
+
+def test_page_table_calling_convention():
+    kv = KVPrefixCache(_pool())
+    kv.put("a", _kv(S=10), _kv(S=10))  # 3 pages
+    kv.put("b", _kv(S=3), _kv(S=3))  # 1 page
+    la, lb = kv.acquire("a"), kv.acquire("b")
+    table, lengths = kv.page_table([la, lb])
+    assert table.shape == (2, 3) and lengths.tolist() == [10, 3]
+    assert table[0].tolist() == list(la.pages)
+    assert table[1, 0] == lb.pages[0] and table[1, 1] == -1
+    kv.release_lease(la)
+    kv.release_lease(lb)
+
+
+# -- the single cache point -----------------------------------------------------
+
+
+def test_plan_cache_point_placement():
+    tpl = np.asarray([5, 6, 7], np.int32)
+    prompts = np.asarray([[5, 6, 7, 1, 2], [5, 6, 7, 3, 4]], np.int32)
+    cp = plan_cache_point("t", tpl, prompts)
+    assert cp == CachePoint("t", 3)
+    # unsafe placements: prompt diverges from the template, or no suffix
+    assert plan_cache_point("t", tpl, prompts[:, [0, 2, 1, 3, 4]]) is None
+    assert plan_cache_point("t", tpl, prompts[:, :3]) is None
+    assert plan_cache_point("t", np.asarray([], np.int32), prompts) is None
+
+
+# -- plan-cache lifecycle coupling ----------------------------------------------
+
+
+def test_plan_cache_eviction_frees_prefix_pages():
+    pool = _pool()
+    kv = KVPrefixCache(pool)
+    cache = PlanCache(capacity=2)
+    TwoTierRouter(
+        cache,
+        extract_keyword=lambda r: r,
+        plan_large=lambda r: "L",
+        plan_small_with_template=lambda r, t: "S",
+        make_template=lambda r, x: {"t": r},
+        async_cachegen=False,
+        kv_prefix=kv,
+    )
+    for kw in ("a", "b"):
+        cache.insert(kw, {"t": kw})
+        kv.put(kw, _kv(S=8), _kv(S=8))
+    cache.insert("c", {"t": "c"})  # LRU-evicts "a" from the plan cache
+    assert "a" not in kv and "b" in kv  # pages freed with the template
+    assert cache.stats.evictions == 1
+    cache.remove("b")
+    assert "b" not in kv
+    cache.clear()
+    assert len(kv) == 0 and pool.free_pages == 16
+
+
+def test_router_kv_prefix_requires_evict_listener():
+    class Bare:
+        def lookup(self, kw):
+            return None
+
+    with pytest.raises(TypeError):
+        TwoTierRouter(
+            Bare(),
+            extract_keyword=lambda r: r,
+            plan_large=lambda r: "L",
+            plan_small_with_template=lambda r, t: "S",
+            make_template=lambda r, x: None,
+            kv_prefix=KVPrefixCache(_pool()),
+        )
+
+
+# -- engine integration ---------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def prefix_engine():
+    cfg = registry.get_smoke("olmo-1b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    kv = KVPrefixCache(pool_for_config(cfg, num_pages=32, page_size=8))
+    return Engine(cfg, params, max_len=64, kv_prefix=kv), kv
+
+
+def test_prefill_with_prefix_matches_full_prefill(prefix_engine):
+    """Suffix-only prefill against pooled template KV reproduces the full
+    prefill: same last-token logits, same cache contents, same greedy
+    continuation."""
+    eng, kv = prefix_engine
+    rs = np.random.RandomState(0)
+    B, Sp, Ss = 4, 20, 8
+    tpl = rs.randint(3, 400, (Sp,)).astype(np.int32)
+    suffix = rs.randint(3, 400, (B, Ss)).astype(np.int32)
+    toks = np.concatenate([np.broadcast_to(tpl, (B, Sp)), suffix], axis=1)
+
+    assert eng.prefill_with_prefix("tpl", suffix) is None  # cold: no prefix
+    logits_full, cache_full = eng.prefill(toks)
+    assert eng.register_prefix("tpl", cache_full, Sp)
+    reused0 = eng.stats.prefix_tokens_reused
+
+    res = eng.prefill_with_prefix("tpl", suffix)
+    assert res is not None
+    logits_pfx, cache_pfx = res
+    np.testing.assert_allclose(logits_full, logits_pfx, atol=2e-4, rtol=2e-4)
+    assert int(cache_pfx["length"]) == Sp + Ss
+    np.testing.assert_allclose(
+        np.asarray(cache_full["kv_k"][:, :, : Sp + Ss], np.float32),
+        np.asarray(cache_pfx["kv_k"][:, :, : Sp + Ss], np.float32),
+        atol=2e-2,
+    )
+    assert eng.stats.prefix_tokens_reused - reused0 == B * Sp
+
+    # generate() takes the same route through a CachePoint
+    cp = plan_cache_point("tpl", tpl, toks)
+    a = eng.generate(toks, max_new=5)
+    b = eng.generate(toks, max_new=5, cache_point=cp)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_generate_registers_prefix_on_pool_miss(prefix_engine):
+    eng, kv = prefix_engine
+    rs = np.random.RandomState(1)
+    tpl = rs.randint(3, 400, (16,)).astype(np.int32)
+    toks = np.concatenate(
+        [np.broadcast_to(tpl, (2, 16)), rs.randint(3, 400, (2, 6)).astype(np.int32)],
+        axis=1,
+    )
+    cp = plan_cache_point("fresh-tpl", tpl, toks)
+    assert "fresh-tpl" not in kv
+    eng.generate(toks, max_new=3, cache_point=cp)  # miss: registers
+    assert "fresh-tpl" in kv and kv.length_of("fresh-tpl") == 16
+    reused0 = eng.stats.prefix_tokens_reused
+    eng.generate(toks, max_new=3, cache_point=cp)  # hit: reuses
+    assert eng.stats.prefix_tokens_reused - reused0 == 2 * 16
+
+
+def test_prefix_families_gate():
+    """Recurrent-state families can't re-enter a stored prefix: the engine
+    must refuse the kv_prefix wiring rather than serve wrong outputs."""
+    cfg = registry.get_smoke("rwkv6-3b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    kv = KVPrefixCache(_pool())
+    eng = Engine(cfg, params, max_len=48, kv_prefix=kv)
+    assert eng.kv_prefix is None

@@ -34,6 +34,64 @@ def test_engine_greedy_deterministic(rng_key):
     np.testing.assert_array_equal(a, b)
 
 
+def test_engine_pads_after_eos_and_counts_active_rows(rng_key):
+    """Rows past their EOS must emit pad_id, not freshly sampled garbage,
+    and must stop counting toward decode throughput."""
+    cfg = registry.get_smoke("olmo-1b")
+    params = lm.init_params(cfg, rng_key)
+    eng = Engine(cfg, params, max_len=48)
+    toks = np.random.RandomState(0).randint(3, 400, (3, 12)).astype(np.int32)
+    # pick the greedy second token of row 0 as eos: row 0 finishes early
+    # while other rows (usually) keep generating
+    probe = eng.generate(toks, max_new=2)
+    eos = int(probe[0, 1])
+    d0 = eng.stats.decode_tokens
+    out = eng.generate(toks, max_new=6, eos_id=eos, pad_id=1)
+    for r in range(out.shape[0]):
+        hits = np.where(out[r] == eos)[0]
+        if hits.size:
+            assert (out[r, hits[0] + 1 :] == 1).all(), f"row {r} post-EOS garbage"
+    # decode_tokens counts only rows still generating: strictly fewer than
+    # B * steps once any row finished before the last emitted step
+    steps = out.shape[1] - 1
+    finished_early = any(
+        np.where(out[r] == eos)[0].size and np.where(out[r] == eos)[0][0] < steps
+        for r in range(out.shape[0])
+    )
+    if finished_early:
+        assert eng.stats.decode_tokens - d0 < out.shape[0] * steps
+
+
+def test_engine_generate_rejects_over_capacity(rng_key):
+    """prompt + max_new beyond max_len must fail loudly up front — the old
+    ``max_len + 8`` slack let decode scribble past the cache end."""
+    import pytest
+
+    cfg = registry.get_smoke("olmo-1b")
+    params = lm.init_params(cfg, rng_key)
+    eng = Engine(cfg, params, max_len=32)
+    toks = np.random.RandomState(0).randint(3, 400, (2, 12)).astype(np.int32)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.generate(toks, max_new=21)
+    out = eng.generate(toks, max_new=20)  # exact capacity is fine
+    assert out.shape == (2, 20)
+
+
+def test_engine_prefill_counts_only_valid_tokens(rng_key):
+    """prefill_tokens must reflect real tokens, not the padded (B, S)
+    rectangle, or measured_rates() overstates prefill throughput."""
+    cfg = registry.get_smoke("olmo-1b")
+    params = lm.init_params(cfg, rng_key)
+    eng = Engine(cfg, params, max_len=48)
+    toks = np.random.RandomState(0).randint(3, 400, (2, 16)).astype(np.int32)
+    toks[0, 10:] = 0  # right-padded row: 10 valid
+    lengths = np.asarray([10, 16])
+    eng.prefill(toks, n_valid=int(lengths.sum()))
+    assert eng.stats.prefill_tokens == 26
+    eng.generate(toks, max_new=4, prompt_lengths=lengths)
+    assert eng.stats.prefill_tokens == 52
+
+
 # -- continuous batching -------------------------------------------------------
 
 
