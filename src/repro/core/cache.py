@@ -320,6 +320,14 @@ class PlanCache(PlanStoreBase, Generic[V]):
                         self.stats.add("stale_insert_skips")
                         continue
                 kept.append(idx)
+                if kw in self._store:
+                    # overwrite of a live key is delete + insert, not a
+                    # silent swap: eviction listeners must see the OLD
+                    # entry go (the paged KV prefix pool keys derived
+                    # state by keyword; a surviving stale registration
+                    # would serve the old template's prefix KV under the
+                    # regenerated template's id)
+                    self._delete(kw)
                 entry = CacheEntry(
                     v, now,
                     context=contexts[idx],

@@ -31,7 +31,7 @@ from repro.distributed import sharding as shd
 from repro.models import lm
 from repro.obs import trace_span
 from repro.obs.names import SPAN_ENGINE_GENERATE
-from repro.serving.kv_cache import CachePoint, KVPrefixCache
+from repro.serving.kv_cache import CachePoint, KVPrefixCache, PagePoolExhausted
 from repro.serving.sampler import sample_token
 
 # families whose cache is pure KV (no recurrent state): the only ones a
@@ -147,21 +147,39 @@ class Engine:
             return False
         k = cache["kv_k"][:, 0]  # (L, M, Hkv, hd)
         v = cache["kv_v"][:, 0]
-        self.kv_prefix.put(template_id, k, v, length=prefix_len)
+        try:
+            self.kv_prefix.put(template_id, k, v, length=prefix_len)
+        except PagePoolExhausted:
+            # registration is best-effort: the full prefill already
+            # served this request; a pool too small (or a still-leased
+            # stale entry) just means the next hit pays prefill again
+            return False
         return True
 
     def prefill_with_prefix(
         self, template_id: str, suffix_tokens: np.ndarray,
         *, n_valid: Optional[int] = None,
+        expected_len: Optional[int] = None,
     ) -> Optional[Tuple[np.ndarray, Any]]:
         """Prefill only the adaptation suffix; the template prefix K/V is
         gathered from the page pool. Returns None when the prefix isn't
         cached (caller falls back to a full prefill + register_prefix).
+
+        ``expected_len`` is the prefix length the caller split the prompt
+        at (the cache point). The pooled prefix MUST be exactly that long
+        — the extend kernel derives RoPE positions and the attention mask
+        from it — so a mismatched entry (stale registration, re-tokenized
+        template) is treated as a miss, never served.
         """
         if self.kv_prefix is None:
             return None
         lease = self.kv_prefix.acquire(template_id)
         if lease is None:
+            return None
+        if expected_len is not None and lease.length != expected_len:
+            # wrong-length prefix: serving it would silently shift every
+            # suffix position; fall back so the caller re-registers
+            self.kv_prefix.release_lease(lease)
             return None
         try:
             B, S = suffix_tokens.shape
@@ -220,7 +238,8 @@ class Engine:
                 n_suf = (None if n_valid is None
                          else n_valid - B * cache_point.prefix_len)
                 res = self.prefill_with_prefix(
-                    cache_point.template_id, suffix, n_valid=n_suf
+                    cache_point.template_id, suffix, n_valid=n_suf,
+                    expected_len=cache_point.prefix_len,
                 )
             if res is None:
                 res = self.prefill(tokens, n_valid=n_valid)

@@ -217,6 +217,13 @@ class KVPrefixCache:
 
     def _alloc_locked(self, n: int) -> List[int]:
         """Allocate ``n`` pages, LRU-evicting idle prefixes to make room."""
+        if n > self.pool.num_pages:
+            # unsatisfiable even by evicting everything: refuse up front
+            # rather than destroy the whole cache before failing anyway
+            raise PagePoolExhausted(
+                f"need {n} pages but the pool holds only "
+                f"{self.pool.num_pages} total"
+            )
         while self.pool.free_pages < n:
             victim = None
             for tid, e in self._entries.items():
@@ -225,9 +232,12 @@ class KVPrefixCache:
                 if victim is None or e.last_used < self._entries[victim].last_used:
                     victim = tid
             if victim is None:
+                leased = sum(1 for e in self._entries.values() if e.leases)
                 raise PagePoolExhausted(
-                    f"need {n} pages, {self.pool.free_pages} free and every "
-                    f"cached prefix is leased"
+                    f"need {n} pages, {self.pool.free_pages} free of "
+                    f"{self.pool.num_pages}; no evictable prefix left "
+                    f"({leased} leased, remaining pages pinned by "
+                    f"outstanding leases or COW shares)"
                 )
             self._release_locked(victim)
         return self.pool.alloc(n)
@@ -335,33 +345,45 @@ class KVPrefixCache:
             parent = self._entries.get(parent_id)
             if parent is None:
                 raise KeyError(f"unknown parent prefix {parent_id!r}")
-            if child_id in self._entries:
-                if self._entries[child_id].leases:
-                    raise PagePoolExhausted(
-                        f"prefix {child_id!r} is leased; cannot replace"
-                    )
-                self._release_locked(child_id)
-            n_full, tail = divmod(parent.length, ps)
-            new_len = parent.length + length
-            n_new = -(-new_len // ps) - n_full
-            shared = list(parent.pages[:n_full])
-            rows = self._alloc_locked(n_new)
-            # tail-page data precedes the suffix in the first new page
-            if tail:
-                tk, tv = self.pool.gather(parent.pages[n_full : n_full + 1])
-                tk, tv = tk[:, 0, :tail], tv[:, 0, :tail]  # (L, tail, H, hd)
-                k_data = jnp.concatenate([tk.astype(k_suffix.dtype),
-                                          k_suffix[:, :length]], axis=1)
-                v_data = jnp.concatenate([tv.astype(v_suffix.dtype),
-                                          v_suffix[:, :length]], axis=1)
-            else:
-                k_data, v_data = k_suffix[:, :length], v_suffix[:, :length]
-            kp, vp = self._paginate(k_data, v_data, tail + length, n_new)
-            self.pool.write(rows, kp, vp)
-            self.pool.retain(shared)
-            self._seq += 1
-            self._entries[child_id] = _Prefix(shared + rows, new_len, self._seq)
-            self._pages_built.inc(n_new)
+            # Pin the parent for the duration: with leases == 0 it would be
+            # a legal victim for _alloc_locked's LRU sweep, whose eviction
+            # would free the parent's pages and let the child's new rows be
+            # carved out of them — retain(shared) below would then re-pin
+            # freed/overwritten rows and the child would silently hold
+            # corrupted KV. (This also makes a child_id == parent_id
+            # replace fail loudly instead of freeing the pages mid-read.)
+            parent.leases += 1
+            try:
+                if child_id in self._entries:
+                    if self._entries[child_id].leases:
+                        raise PagePoolExhausted(
+                            f"prefix {child_id!r} is leased; cannot replace"
+                        )
+                    self._release_locked(child_id)
+                n_full, tail = divmod(parent.length, ps)
+                new_len = parent.length + length
+                n_new = -(-new_len // ps) - n_full
+                shared = list(parent.pages[:n_full])
+                rows = self._alloc_locked(n_new)
+                # tail-page data precedes the suffix in the first new page
+                if tail:
+                    tk, tv = self.pool.gather(parent.pages[n_full : n_full + 1])
+                    tk, tv = tk[:, 0, :tail], tv[:, 0, :tail]  # (L, tail, H, hd)
+                    k_data = jnp.concatenate([tk.astype(k_suffix.dtype),
+                                              k_suffix[:, :length]], axis=1)
+                    v_data = jnp.concatenate([tv.astype(v_suffix.dtype),
+                                              v_suffix[:, :length]], axis=1)
+                else:
+                    k_data, v_data = k_suffix[:, :length], v_suffix[:, :length]
+                kp, vp = self._paginate(k_data, v_data, tail + length, n_new)
+                self.pool.write(rows, kp, vp)
+                self.pool.retain(shared)
+                self._seq += 1
+                self._entries[child_id] = _Prefix(shared + rows, new_len,
+                                                  self._seq)
+                self._pages_built.inc(n_new)
+            finally:
+                parent.leases -= 1
         return n_new
 
     def release(self, template_id: str) -> bool:

@@ -121,6 +121,56 @@ def test_lru_eviction_on_pool_exhaustion_and_lease_pinning():
     assert kv._prefix_evictions.value == 2
 
 
+def test_extend_under_pool_pressure_pins_parent():
+    """extend() must never evict its own parent to satisfy the child's
+    allocation: with the parent as the only (idle) entry and too few free
+    pages, the extend fails loudly and the parent survives intact."""
+    pool = _pool(num_pages=4)
+    kv = KVPrefixCache(pool)
+    parent = _kv(S=10)
+    kv.put("p", parent, parent, length=10)  # 3 pages, 1 free
+    with pytest.raises(PagePoolExhausted):
+        kv.extend("p", "c", _kv(S=5, fill=1.0), _kv(S=5, fill=1.0))  # needs 2
+    assert "p" in kv and "c" not in kv
+    assert kv._entries["p"].leases == 0  # the extend pin was released
+    lease = kv.acquire("p")
+    k, _, ln = kv.gather(lease, batch=1)
+    assert ln == 10
+    np.testing.assert_array_equal(np.asarray(k[:, 0, :10]), np.asarray(parent))
+    kv.release_lease(lease)
+
+
+def test_extend_under_pool_pressure_evicts_idle_not_parent():
+    pool = _pool(num_pages=6)
+    kv = KVPrefixCache(pool)
+    parent = _kv(S=10)
+    kv.put("idle", _kv(S=8), _kv(S=8))  # 2 pages
+    kv.put("p", parent, parent, length=10)  # 3 pages, 1 free
+    n_new = kv.extend("p", "c", _kv(S=5, fill=1.0), _kv(S=5, fill=1.0))
+    assert n_new == 2
+    assert "idle" not in kv and "p" in kv  # the bystander went, not the parent
+    lease = kv.acquire("c")
+    k, _, ln = kv.gather(lease, batch=1)
+    assert ln == 15
+    expect = np.concatenate(
+        [np.asarray(parent), np.ones((2, 5, 2, 8), np.float32)], axis=1
+    )
+    np.testing.assert_array_equal(np.asarray(k[:, 0, :15]), expect)
+    kv.release_lease(lease)
+
+
+def test_alloc_over_capacity_fails_fast_without_evicting():
+    """A request larger than the whole pool must refuse up front, not
+    flush every cached prefix first and then fail anyway."""
+    pool = _pool(num_pages=4)
+    kv = KVPrefixCache(pool)
+    kv.put("a", _kv(S=8), _kv(S=8))  # 2 pages
+    with pytest.raises(PagePoolExhausted, match="holds only"):
+        kv.put("x", _kv(S=32), _kv(S=32))  # 8 pages > 4 total
+    assert "a" in kv and pool.free_pages == 2
+    assert kv._prefix_evictions.value == 0
+
+
 def test_metrics_land_in_registry():
     reg = MetricsRegistry()
     kv = KVPrefixCache(_pool(), obs=reg)
@@ -191,6 +241,27 @@ def test_plan_cache_eviction_frees_prefix_pages():
     assert "b" not in kv
     cache.clear()
     assert len(kv) == 0 and pool.free_pages == 16
+
+
+def test_insert_overwrite_fires_evict_listeners_and_frees_prefix():
+    """Regenerating a template under the same keyword must evict the OLD
+    template's derived state: a silent _store swap would leave the stale
+    prefix KV registered under the same id and later hits would serve it."""
+    pool = _pool()
+    kv = KVPrefixCache(pool)
+    cache = PlanCache(capacity=4)
+    cache.add_evict_listener(kv.release)
+    seen = []
+    cache.add_evict_listener(seen.append)
+    cache.insert("a", {"t": 1})
+    kv.put("a", _kv(S=8), _kv(S=8))
+    assert "a" in kv
+    cache.insert("a", {"t": 2})  # regenerated plan, same keyword
+    assert seen == ["a"]
+    assert "a" not in kv  # stale prefix pages freed with the old template
+    assert pool.free_pages == 16
+    assert cache.lookup("a") == {"t": 2}
+    assert cache.stats.evictions == 0  # a replace is not an eviction
 
 
 def test_router_kv_prefix_requires_evict_listener():
@@ -270,6 +341,33 @@ def test_generate_registers_prefix_on_pool_miss(prefix_engine):
     reused0 = eng.stats.prefix_tokens_reused
     eng.generate(toks, max_new=3, cache_point=cp)  # hit: reuses
     assert eng.stats.prefix_tokens_reused - reused0 == 2 * 16
+
+
+def test_prefix_length_mismatch_falls_back_and_reregisters(prefix_engine):
+    """A pooled prefix whose length disagrees with the cache point would
+    shift RoPE positions and the attention mask: the engine must treat it
+    as a miss, do a full prefill, and re-register the correct prefix."""
+    eng, kv = prefix_engine
+    rs = np.random.RandomState(2)
+    B, Sp, Ss = 2, 16, 6
+    tpl = rs.randint(3, 400, (Sp,)).astype(np.int32)
+    toks = np.concatenate(
+        [np.broadcast_to(tpl, (B, Sp)), rs.randint(3, 400, (B, Ss)).astype(np.int32)],
+        axis=1,
+    )
+    # a stale registration: same template id, WRONG prefix length
+    _, cache_full = eng.prefill(toks)
+    assert eng.register_prefix("stale-tpl", cache_full, Sp - 4)
+    assert kv.length_of("stale-tpl") == Sp - 4
+    assert (
+        eng.prefill_with_prefix("stale-tpl", toks[:, Sp:], expected_len=Sp)
+        is None
+    )
+    cp = plan_cache_point("stale-tpl", tpl, toks)
+    a = eng.generate(toks, max_new=4)
+    b = eng.generate(toks, max_new=4, cache_point=cp)  # mismatch -> fallback
+    np.testing.assert_array_equal(a, b)
+    assert kv.length_of("stale-tpl") == Sp  # re-registered at the cache point
 
 
 def test_prefix_families_gate():
