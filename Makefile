@@ -7,7 +7,7 @@ test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
 bench-fast:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --fast --only t1,t4,t5,t8,f3,s1 --json-dir bench-json
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --fast --only t1,t4,t5,t8,t10,f3,s1 --json-dir bench-json
 
 # AST invariant linter over src/repro (lock discipline, determinism,
 # jit/donation safety, obs-name drift, thread hygiene) — pure stdlib,

@@ -34,6 +34,7 @@ from benchmarks import (
     t7_cold_start,
     t8_kv_prefix,
     t9_sensitivity,
+    t10_speculative,
 )
 
 MODULES = {
@@ -45,6 +46,7 @@ MODULES = {
     "t6": t6_fuzzy_threshold,
     "t7": t7_cold_start,
     "t8": t8_kv_prefix,
+    "t10": t10_speculative,
     "f3": f3_matching,
     "f5": f5_hit_miss,
     "t9": t9_sensitivity,

@@ -1,0 +1,92 @@
+"""t10: speculative plan execution — latency hidden on wins vs paid on losses.
+
+The APC claim this measures (§4.3 latency hiding): on a fuzzy *near* hit
+the agent executes the adapted cached plan immediately while the large
+planner verifies in the background, so an agreeing verification serves at
+``max(execute, verify)`` instead of ``verify + execute``; a diverging one
+rolls the journal back and pays the verification as pure overhead on top
+of the miss path. Rows (latencies are the harness's simulated serving
+latencies; wall time only on the headline row):
+
+  * ``t10/speculative``      — the whole workload under the speculative
+    method: outcome census (commits / patches / rollbacks / exact hits /
+    misses), hit rate, accuracy
+  * ``t10/win_latency_hidden`` — committed speculations vs the SAME tasks
+    under conservative apc (exact-only cache: a near hit is a miss that
+    replans sequentially); ``hidden_pct`` is the headline
+  * ``t10/loss_overhead``    — rolled-back speculations vs the same tasks
+    under apc: the rollback pays the miss path PLUS the wasted
+    verification rounds; ``overhead_pct`` quantifies the loss
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from benchmarks.common import Row
+from repro.core.harness import run_workload
+
+ENV = "qasper"
+
+
+def _mean(xs: List[float]) -> float:
+    return sum(xs) / max(1, len(xs))
+
+
+def run(fast: bool = False) -> List[Row]:
+    n = 60 if fast else 80
+    seeds = (3,) if fast else (1, 3, 7)
+
+    census: Dict[str, int] = {"commit": 0, "patch": 0, "rollback": 0,
+                              "exact_hit": 0, "miss": 0}
+    hits = correct = total = 0
+    # (speculative latency, baseline latency) pairs, per outcome
+    wins: List[Tuple[float, float]] = []
+    losses: List[Tuple[float, float]] = []
+    wall = 0.0
+
+    for seed in seeds:
+        t0 = time.perf_counter()
+        spec = run_workload(ENV, "speculative", n=n, seed=seed,
+                            keep_records=True)
+        wall += time.perf_counter() - t0
+        base = run_workload(ENV, "apc", n=n, seed=seed, keep_records=True)
+        base_by_id = {r.task_id: r for r in base.records}
+        for r in spec.records:
+            total += 1
+            hits += r.hit
+            correct += r.correct
+            if r.speculated:
+                census[r.spec_outcome] += 1
+                pair = (r.latency_s, base_by_id[r.task_id].latency_s)
+                if r.spec_outcome == "commit":
+                    wins.append(pair)
+                elif r.spec_outcome == "rollback":
+                    losses.append(pair)
+            else:
+                census["exact_hit" if r.hit else "miss"] += 1
+
+    rows: List[Row] = [Row("t10/speculative", wall / max(1, total) * 1e6, {
+        "env": ENV, "n_per_seed": n, "seeds": len(seeds), **census,
+        "hit_rate": round(hits / max(1, total), 4),
+        "accuracy": round(correct / max(1, total), 4),
+    })]
+
+    if wins:
+        got, seq = _mean([w[0] for w in wins]), _mean([w[1] for w in wins])
+        rows.append(Row("t10/win_latency_hidden", got * 1e6, {
+            "simulated": True, "n_wins": len(wins),
+            "spec_latency_s": round(got, 4),
+            "sequential_latency_s": round(seq, 4),
+            "hidden_pct": round(100.0 * (1.0 - got / max(seq, 1e-9)), 1),
+        }))
+    if losses:
+        got, seq = _mean([l[0] for l in losses]), _mean([l[1] for l in losses])
+        rows.append(Row("t10/loss_overhead", got * 1e6, {
+            "simulated": True, "n_losses": len(losses),
+            "spec_latency_s": round(got, 4),
+            "miss_latency_s": round(seq, 4),
+            "overhead_pct": round(100.0 * (got / max(seq, 1e-9) - 1.0), 1),
+        }))
+    return rows

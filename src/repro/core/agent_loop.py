@@ -24,6 +24,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core.backends import SimulatedBackend
 from repro.core.cache import PlanCache
 from repro.core.cost_model import CostLedger
+from repro.core.journal import StepJournal
 from repro.core.template import ExecutionLog, PlanTemplate, make_template
 from repro.envs.base import Task
 
@@ -41,6 +42,8 @@ class RunRecord:
     latency_s: float
     cache_lookup_s: float = 0.0
     cache_gen_s: float = 0.0
+    speculated: bool = False
+    spec_outcome: str = ""  # "" | commit | patch | rollback
 
 
 @dataclass
@@ -124,33 +127,64 @@ class PlanActAgent:
     # inner loops (shared by every method strategy)
     # ==================================================================
 
+    def _record_act_effects(
+        self, task: Task, journal: StepJournal, round_idx: int,
+        resp: Dict[str, Any],
+    ) -> None:
+        """Journal one actor round's env writes (reversible workspace
+        puts). With a caller-owned journal the step stays open until the
+        verifier commits/patches/rolls back; the default loops commit
+        per step, so the journal is the single env-mutation path either
+        way (the ``journal-discipline`` checker pins this)."""
+        step = journal.begin_step(f"round-{round_idx}")
+        ws = task.workspace
+        for name in sorted(resp.get("values", {})):
+            step.applied(ws.write(f"r{round_idx}/{name}", resp["values"][name]))
+
     def _loop_scratch(
-        self, task: Task, *, large: bool
+        self, task: Task, *, large: bool,
+        journal: Optional[StepJournal] = None,
+        responses: Optional[List[Dict[str, Any]]] = None,
+        start_round: int = 0,
     ) -> Tuple[Optional[float], int, ExecutionLog, float]:
+        """Plan from scratch. ``responses``/``start_round`` let the
+        speculative patch path re-enter mid-task: the verified planner
+        continues from the committed prefix's retrievals instead of
+        round 0."""
         role = "large_planner" if large else "small_planner"
         log = ExecutionLog(task_query=task.query)
-        responses: List[Dict[str, Any]] = []
+        responses = list(responses or [])
+        own_journal = journal is None
+        journal = journal if journal is not None else StepJournal()
         lat = 0.0
         answer = None
-        for it in range(self.cfg.max_iterations):
+        iters = 0
+        for it in range(start_round, self.cfg.max_iterations):
+            iters += 1
             msg, pi, po = self.be.plan(task, responses, large=large, round_idx=it)
             lat += self.ledger.record(role, pi, po)
             if msg.kind == "answer":
                 log.final_answer = {"answer_text": msg.text, "op": msg.op}
                 answer = msg.op.get("value")
-                return answer, it + 1, log, lat
+                break
             resp, ai, ao = self.be.act(task, msg)
             lat += self.ledger.record("actor", ai, ao)
             responses.append(resp)
             log.append({"message": msg.text, "op": msg.op}, resp)
-        return None, self.cfg.max_iterations, log, lat
+            self._record_act_effects(task, journal, it, resp)
+            if own_journal:
+                journal.commit()  # non-speculative: finalize per step
+        return answer, iters or self.cfg.max_iterations, log, lat
 
     def _loop_adapt(
-        self, task: Task, template: PlanTemplate, *, full_history: bool
+        self, task: Task, template: PlanTemplate, *, full_history: bool,
+        journal: Optional[StepJournal] = None,
     ) -> Tuple[Optional[float], int, float]:
         responses: List[Dict[str, Any]] = []
         lat = 0.0
         n_rounds = max(1, template.n_rounds())
+        own_journal = journal is None
+        journal = journal if journal is not None else StepJournal()
         for it in range(self.cfg.max_iterations):
             msg, pi, po = self.be.adapt(
                 task, template, responses, round_idx=it, full_history=full_history
@@ -161,6 +195,9 @@ class PlanActAgent:
             resp, ai, ao = self.be.act(task, msg)
             lat += self.ledger.record("actor", ai, ao)
             responses.append(resp)
+            self._record_act_effects(task, journal, it, resp)
+            if own_journal:
+                journal.commit()
             if it + 1 >= n_rounds and it + 1 < self.cfg.max_iterations:
                 continue  # next adapt() call emits the answer
         return None, self.cfg.max_iterations, lat

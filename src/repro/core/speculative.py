@@ -5,16 +5,25 @@
   * speculative next-query prefetch — predict the next likely keyword from
     the observed keyword bigram stream and pre-warm templates: validate the
     template for the predicted keyword is resident (or promote it in LRU
-    order) before the query arrives.
+    order) before the query arrives;
+  * speculative near-hit execution — on a fuzzy/semantic near-hit the
+    router serves the adapted template immediately while the large planner
+    verifies in the background; :class:`PlanSpeculator` owns the
+    commit/rollback protocol (one :class:`~repro.core.journal.StepJournal`
+    per speculation, so out-of-order verify completions are safe), and the
+    verify task rides the router's cachegen pool — under ``repro.sim`` that
+    pool is a set of scheduler clients, so the seeded scheduler owns the
+    verify-vs-execute race.
 """
 
 from __future__ import annotations
 
 import threading
 from collections import Counter, defaultdict
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cache import PlanCache
+from repro.core.journal import StepJournal
 
 
 class KeywordPredictor:
@@ -71,3 +80,88 @@ class SpeculativePrefetcher:
                     self.cache.insert(kw, tpl)
                     self.generated += 1
                     self.prefetches += 1
+
+
+class PlanSpeculator:
+    """Commit/rollback controller for near-hit speculation.
+
+    Each speculation gets its own :class:`StepJournal` (verify tasks
+    complete in scheduler order, not begin order, so a shared
+    prefix-commit journal would deadlock the race): ``begin`` applies the
+    eager env effect through the journal and defers the cache admission
+    and commit-side metric bumps; ``resolve`` commits (verifier agreed)
+    or rolls back (verifier disagreed) — unless the rollback guard is
+    ablated (``rollback_enabled=False``), in which case a disagreeing
+    speculation *commits anyway*, the leak the sim's ``spec_leak`` oracle
+    exists to catch.
+
+    ``pending()`` is the liveness surface: every speculation begun must
+    be resolved by quiescence (the ``spec_liveness`` oracle), which the
+    router guarantees by falling back to a synchronous verify when the
+    pool rejects the task — unless *that* guard is ablated.
+
+    Single-owner per the journal contract: begin/resolve run on one
+    logical thread (the sim scheduler linearizes ops; the threaded router
+    resolves under its submit lock).
+    """
+
+    def __init__(self, *, rollback_enabled: bool = True):
+        self.rollback_enabled = rollback_enabled
+        self._next_id = 0
+        self._pending: Dict[int, Tuple[str, StepJournal]] = {}
+        self.begun = 0
+        self.commits = 0
+        self.rollbacks = 0
+        self.forced_commits = 0  # ablation only: disagreed but committed
+
+    def begin(
+        self,
+        kw: str,
+        *,
+        effect: Optional[Callable[[], Callable[[], None]]] = None,
+        on_commit: Sequence[Callable[[], None]] = (),
+    ) -> int:
+        """Open a speculation on ``kw``. ``effect`` applies the eager env
+        write and returns its compensation; ``on_commit`` actions (cache
+        admission with its pre-captured ``unless_written_since`` token,
+        metric increments) run only if the verifier agrees."""
+        journal = StepJournal()
+        step = journal.begin_step(f"spec:{kw}")
+        if effect is not None:
+            step.applied(effect())
+        for action in on_commit:
+            step.on_commit(action)
+        spec_id = self._next_id
+        self._next_id += 1
+        self._pending[spec_id] = (kw, journal)
+        self.begun += 1
+        return spec_id
+
+    def resolve(self, spec_id: int, agree: bool) -> str:
+        """Complete a speculation: returns "commit" or "rollback"."""
+        kw, journal = self._pending.pop(spec_id)
+        if agree or not self.rollback_enabled:
+            journal.commit()
+            if agree:
+                self.commits += 1
+            else:
+                self.forced_commits += 1  # the ablated leak
+            return "commit"
+        journal.rollback()
+        self.rollbacks += 1
+        return "rollback"
+
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def pending_keys(self) -> List[str]:
+        return sorted(kw for kw, _ in self._pending.values())
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "begun": self.begun,
+            "commits": self.commits,
+            "rollbacks": self.rollbacks,
+            "forced_commits": self.forced_commits,
+            "pending": self.pending(),
+        }

@@ -18,7 +18,69 @@ import math
 import random
 import re
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class Workspace:
+    """Mutable env-side state with a compensating-write protocol.
+
+    Every mutation returns the compensation closure that restores the
+    prior state (previous value, or absence), which callers hand to a
+    :class:`repro.core.journal.StepJournal` entry — the contract that
+    makes speculative plan execution reversible. The ``journal-discipline``
+    static checker (tools.analyze) holds ``core/``/``envs/`` call sites to
+    exactly that idiom: ``entry.applied(ws.write(key, value))``.
+
+    Single-owner like the journal (one workspace per task, driven from
+    one logical thread), so it takes no lock.
+    """
+
+    _ABSENT = object()
+
+    def __init__(self) -> None:
+        self._data: Dict[str, Any] = {}
+        self.writes = 0
+        self.compensations_run = 0
+
+    def _restore(self, key: str, prior: Any) -> Callable[[], None]:
+        def compensation() -> None:
+            if prior is Workspace._ABSENT:
+                self._data.pop(key, None)
+            else:
+                self._data[key] = prior
+            self.compensations_run += 1
+
+        return compensation
+
+    def write(self, key: str, value: Any) -> Callable[[], None]:
+        """Apply ``key = value`` eagerly; return the undo closure."""
+        prior = self._data.get(key, Workspace._ABSENT)
+        self._data[key] = value
+        self.writes += 1
+        return self._restore(key, prior)
+
+    def delete(self, key: str) -> Callable[[], None]:
+        """Remove ``key`` eagerly (no-op if absent); return the undo."""
+        prior = self._data.get(key, Workspace._ABSENT)
+        self._data.pop(key, None)
+        self.writes += 1
+        return self._restore(key, prior)
+
+    def read(self, key: str, default: Any = None) -> Any:
+        return self._data.get(key, default)
+
+    def keys(self) -> List[str]:
+        return sorted(self._data)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Deterministic copy for byte-identical state comparison."""
+        return dict(sorted(self._data.items()))
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._data
+
+    def __len__(self) -> int:
+        return len(self._data)
 
 
 @dataclass(frozen=True)
@@ -50,6 +112,9 @@ class Task:
     distractors: List[str]  # plausible wrong field names
     gt_answer: float
     context_tokens: int  # token length of the context document
+    # env-side effect surface: actor rounds record their retrieved values
+    # here through the journal, so speculative rounds can be rolled back
+    workspace: Workspace = field(default_factory=Workspace)
 
 
 def det_rng(*parts: Any) -> random.Random:

@@ -30,6 +30,11 @@ ROUTER_CACHEGEN_DROPPED = "router.cachegen_dropped"
 ROUTER_LOOKUP_S = "router.lookup_s"
 ROUTER_LOOKUP_LATENCY = "router.lookup_latency_s"
 ROUTER_TOKENS_SAVED = "router.tokens_saved"
+ROUTER_SPECULATIONS = "router.speculations"
+ROUTER_SPEC_COMMITS = "router.spec_commits"
+ROUTER_SPEC_ROLLBACKS = "router.spec_rollbacks"
+ROUTER_SPEC_SYNC_VERIFIES = "router.spec_sync_verifies"
+ROUTER_SPEC_DROPPED = "router.spec_dropped"
 
 CACHE_HITS = "cache.hits"
 CACHE_MISSES = "cache.misses"
@@ -75,6 +80,11 @@ METRIC_NAMES = (
     "router.lookup_s",
     "router.lookup_latency_s",
     "router.tokens_saved",
+    "router.speculations",
+    "router.spec_commits",
+    "router.spec_rollbacks",
+    "router.spec_sync_verifies",
+    "router.spec_dropped",
     "cache.hits",
     "cache.misses",
     "cache.inserts",
@@ -111,6 +121,7 @@ SPAN_ROUTE = "router.route"
 SPAN_ROUTE_BATCH = "router.route_batch"
 SPAN_ROUTER_LOOKUP = "router.lookup"
 SPAN_CACHEGEN = "router.cachegen"
+SPAN_SPEC_VERIFY = "router.spec_verify"
 SPAN_DCACHE_LOOKUP = "dcache.lookup_batch"
 SPAN_DCACHE_INSERT = "dcache.insert_batch"
 SPAN_DCACHE_TIER = "dcache.tier"
@@ -128,6 +139,7 @@ SPAN_NAMES = (
     "router.route_batch",
     "router.lookup",
     "router.cachegen",
+    "router.spec_verify",
     "dcache.lookup_batch",
     "dcache.insert_batch",
     "dcache.tier",
@@ -145,10 +157,12 @@ SPAN_NAMES = (
 
 EVENT_ATTRIBUTION = "cache.attribution"
 EVENT_CACHEGEN_FATE = "cachegen.fate"
+EVENT_SPEC_FATE = "spec.fate"
 
 EVENT_NAMES = (
     "cache.attribution",
     "cachegen.fate",
+    "spec.fate",
 )
 
 __all__ = [n for n in dir() if n.isupper()]

@@ -48,6 +48,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.cache import PlanCache
+from repro.core.speculative import PlanSpeculator
 from repro.obs import (
     MetricsRegistry,
     collect,
@@ -180,6 +181,11 @@ class RouterMetrics:
         "cachegen_dropped": _names.ROUTER_CACHEGEN_DROPPED,
         "lookup_s": _names.ROUTER_LOOKUP_S,
         "tokens_saved": _names.ROUTER_TOKENS_SAVED,
+        "speculations": _names.ROUTER_SPECULATIONS,
+        "spec_commits": _names.ROUTER_SPEC_COMMITS,
+        "spec_rollbacks": _names.ROUTER_SPEC_ROLLBACKS,
+        "spec_sync_verifies": _names.ROUTER_SPEC_SYNC_VERIFIES,
+        "spec_dropped": _names.ROUTER_SPEC_DROPPED,
     }
 
     def __init__(self, registry: Optional[MetricsRegistry] = None,
@@ -203,6 +209,11 @@ class RouterMetrics:
     cachegen_dropped = _metric_prop("cachegen_dropped")
     lookup_s = _metric_prop("lookup_s")
     tokens_saved = _metric_prop("tokens_saved")
+    speculations = _metric_prop("speculations")
+    spec_commits = _metric_prop("spec_commits")
+    spec_rollbacks = _metric_prop("spec_rollbacks")
+    spec_sync_verifies = _metric_prop("spec_sync_verifies")
+    spec_dropped = _metric_prop("spec_dropped")
 
     def add(self, field: str, n: float = 1) -> None:
         """Lock-safe increment — callable from any thread."""
@@ -228,6 +239,11 @@ class RouterMetrics:
             "cachegen_dropped": self.cachegen_dropped,
             "lookup_s": round(self.lookup_s, 6),
             "tokens_saved": self.tokens_saved,
+            "speculations": self.speculations,
+            "spec_commits": self.spec_commits,
+            "spec_rollbacks": self.spec_rollbacks,
+            "spec_sync_verifies": self.spec_sync_verifies,
+            "spec_dropped": self.spec_dropped,
             "lookup_latency": self.lookup_latency.snapshot(),
         }
 
@@ -250,6 +266,12 @@ class TwoTierRouter:
         clock: Optional[Callable[[], float]] = None,
         obs: Optional[MetricsRegistry] = None,
         kv_prefix: Optional[Any] = None,
+        spec_verify: Optional[Callable[[Any, Optional[str]], bool]] = None,
+        spec_effect: Optional[
+            Callable[[Any, str], Callable[[], None]]
+        ] = None,
+        spec_rollback: bool = True,
+        spec_verify_fallback: bool = True,
     ):
         self.cache = cache
         # the paged KV prefix pool (serving.kv_cache.KVPrefixCache): its
@@ -304,6 +326,34 @@ class TwoTierRouter:
         self._pending: List[cf.Future] = []
         self._sync_cachegen_errors: List[BaseException] = []
         self._lock = threading.Lock()
+        # Speculative near-hit execution (batch path): with ``spec_verify``
+        # installed, a fuzzy/semantic near-hit is served immediately (the
+        # adapted template IS the speculative execution) while
+        # ``spec_verify(request, matched_key)`` re-derives the plan in the
+        # background on the cachegen pool — under repro.sim that pool is a
+        # set of scheduler clients, so the seeded scheduler owns the
+        # verify-vs-execute race. Agreement COMMITS the journal (deferred
+        # cache promotion of the near-match under the precise keyword, with
+        # the lookup-time ``unless_written_since`` token, plus the deferred
+        # spec_commits bump); disagreement ROLLS BACK every journaled
+        # effect.
+        # GUARD — rollback: spec_rollback=False is the repro.sim ablation
+        # where a disagreeing speculation commits anyway (the side-effect
+        # leak the ``spec_leak`` oracle catches).
+        # GUARD — verify-timeout fallback: when the pool REJECTS the verify
+        # task, it runs synchronously on the request thread instead;
+        # spec_verify_fallback=False is the ablation where the rejected
+        # verify is dropped and the speculation never resolves (the stuck
+        # journal the ``spec_liveness`` oracle catches).
+        self.spec_verify = spec_verify
+        self._spec_effect = spec_effect
+        self.spec_rollback = spec_rollback
+        self.spec_verify_fallback = spec_verify_fallback
+        self.speculator: Optional[PlanSpeculator] = (
+            PlanSpeculator(rollback_enabled=spec_rollback)
+            if spec_verify is not None
+            else None
+        )
 
     def _read_token(self) -> Optional[float]:
         """Conditional-admission token: the store clock captured at lookup
@@ -353,9 +403,21 @@ class TwoTierRouter:
             out: List[Any] = []
             wave: List[tuple] = []  # (request, kw, large-tier result) misses
             for i, (r, kw, tpl) in enumerate(zip(requests, kws, tpls)):
-                self._attribution_event(bsp, i, tpl, attrib)
+                stage = (attrib.get(i) or {}).get("stage", "exact")
+                speculate = (
+                    tpl is not None
+                    and self.speculator is not None
+                    and stage != "exact"
+                )
+                self._attribution_event(bsp, i, tpl, attrib,
+                                        speculative=speculate)
                 if tpl is not None:
                     out.append(self._serve_hit(r, tpl))
+                    if speculate:
+                        self._begin_speculation(
+                            r, kw, tpl, token,
+                            (attrib.get(i) or {}).get("matched_key"),
+                        )
                 else:
                     result = self._serve_miss(r)
                     out.append(result)
@@ -415,8 +477,97 @@ class TwoTierRouter:
                                 self._sync_cachegen_errors.append(e)
             return out
 
+    def _begin_speculation(self, request: Any, kw: str, tpl: Any,
+                           token: Optional[float],
+                           matched_key: Optional[str]) -> None:
+        """Open a near-hit speculation and race its verification.
+
+        The served response is already on its way (the adapted template is
+        the speculative execution); what's journaled here is everything a
+        wrong speculation must be able to take back: the optional eager env
+        effect (``spec_effect`` applies it and returns its compensation)
+        and the DEFERRED cache promotion — the near-match template admitted
+        under the precise keyword with the lookup-time
+        ``unless_written_since`` token, so a commit can never clobber an
+        entry (re)written while the verifier was thinking. The verify task
+        rides the cachegen pool so one seam owns both background races."""
+        speculator = self.speculator
+        assert speculator is not None
+
+        def admit() -> None:
+            if token is not None:
+                self.cache.insert(kw, tpl, unless_written_since=token)
+            else:
+                self.cache.insert(kw, tpl)
+
+        def bump_commit() -> None:
+            self.metrics.add("spec_commits")
+
+        effect = None
+        if self._spec_effect is not None:
+            spec_effect = self._spec_effect
+            effect = lambda: spec_effect(request, kw)  # noqa: E731
+        # begin/resolve share the router lock: PlanSpeculator is
+        # single-owner, but pool workers resolve while request threads
+        # begin the next speculation
+        with self._lock:
+            spec_id = speculator.begin(
+                kw, effect=effect, on_commit=(admit, bump_commit)
+            )
+        self.metrics.add("speculations")
+        verify = self._traced_spec_verify(request, kw, spec_id, matched_key)
+        if self._pool is None:
+            verify()
+            return
+        try:
+            fut = self._pool.submit(verify)
+        except Exception:
+            if not self.spec_verify_fallback:
+                # ABLATION (repro.sim): the rejected verify task is
+                # dropped and the speculation never resolves — the stuck
+                # journal the spec_liveness oracle catches
+                self.metrics.add("spec_dropped")
+                current_span().event(
+                    _names.EVENT_SPEC_FATE, fate="dropped", kw=kw
+                )
+                return
+            # GUARD — verify-timeout fallback: rejected submissions verify
+            # synchronously on the request thread — slower, never stuck
+            self.metrics.add("spec_sync_verifies")
+            verify()
+            return
+        with self._lock:
+            self._pending.append(fut)
+
+    def _traced_spec_verify(self, request: Any, kw: str, spec_id: int,
+                            matched_key: Optional[str]) -> Callable[[], str]:
+        """Wrap a speculation's verification in a ``router.spec_verify``
+        span (tracer/parent captured at submit time — pool workers have an
+        empty span contextvar, like ``_traced_cachegen``)."""
+        tracer = get_tracer()
+        parent = current_span()
+
+        def verify() -> str:
+            sp = tracer.start_span(_names.SPAN_SPEC_VERIFY, parent=parent,
+                                   kw=kw)
+            try:
+                agree = bool(self.spec_verify(request, matched_key))
+                with self._lock:
+                    outcome = self.speculator.resolve(spec_id, agree)
+                if outcome == "rollback":
+                    self.metrics.add("spec_rollbacks")
+                sp.event(_names.EVENT_SPEC_FATE, fate=outcome, kw=kw)
+                return outcome
+            except BaseException as e:
+                sp.set(error=type(e).__name__)
+                raise
+            finally:
+                sp.end()
+
+        return verify
+
     def _attribution_event(self, sp: Any, i: int, tpl: Optional[Any],
-                           attrib: Any) -> None:
+                           attrib: Any, *, speculative: bool = False) -> None:
         """One ``cache.attribution`` span event for request ``i``: which
         tier serves it, where the hit came from (stage / matched key /
         shard / replica tier, deposited by the resolving layers), and the
@@ -428,9 +579,14 @@ class TwoTierRouter:
             return
         saved = tokens_saved_estimate(tpl)
         self.metrics.add("tokens_saved", saved)
+        # near-hits being raced by the verifier carry ``speculative: true``
+        # until the journal commits — the event is emitted at serve time,
+        # so consumers pair it with the later ``spec.fate`` event
+        extra = {"speculative": True} if speculative else {}
         sp.event(
             _names.EVENT_ATTRIBUTION, i=i, hit=True, tier="small",
-            tokens_saved=saved, adapt_cost_tokens=saved, **attrib.get(i)
+            tokens_saved=saved, adapt_cost_tokens=saved,
+            **extra, **attrib.get(i)
         )
 
     def _traced_cachegen(self, gen: Callable[[], Any], n: int) -> Callable[[], Any]:

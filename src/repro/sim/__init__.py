@@ -32,6 +32,7 @@ from repro.sim.clock import VirtualClock
 from repro.sim.faults import (
     ABLATION_OF,
     ALL_ABLATIONS,
+    EXTRA_PLAN_ABLATIONS,
     FAULT_PLANS,
     SCENARIO_ABLATION_OF,
     SimCachegenPool,
@@ -45,6 +46,7 @@ from repro.sim.trace import TraceRecorder
 __all__ = [
     "ABLATION_OF",
     "ALL_ABLATIONS",
+    "EXTRA_PLAN_ABLATIONS",
     "FAULT_PLANS",
     "ModelStore",
     "SCENARIO_ABLATION_OF",

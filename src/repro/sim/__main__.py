@@ -29,6 +29,7 @@ from repro.envs.workloads import SIM_SCENARIOS
 from repro.sim.faults import (
     ABLATION_OF,
     ALL_ABLATIONS,
+    EXTRA_PLAN_ABLATIONS,
     FAULT_PLANS,
     SCENARIO_ABLATION_OF,
 )
@@ -108,7 +109,8 @@ def cmd_check(args) -> int:
     # per seed under it; other scenario pairings would be duplicate cells
     pinned = {"mid_wave_evict": "evict_then_hit",
               "cold_tier": "evict_then_hit",
-              "ttl_churn": "skewed_reuse"}
+              "ttl_churn": "skewed_reuse",
+              "speculative_exec": "paraphrase_burst"}
     for seed in range(args.seeds):
         for scenario in SIM_SCENARIOS:
             for fault in FAULT_PLANS:
@@ -141,6 +143,15 @@ def cmd_check(args) -> int:
                 SimConfig(seed=seed, scenario=scenario, n_ops=args.ops,
                           replication=1, ablate=(guard,))
                 for scenario, guard in sorted(SCENARIO_ABLATION_OF.items())
+            ] + [
+                # plans guarding MORE than one invariant audit each extra
+                # guard in its own cell (e.g. speculative_exec's
+                # verify-timeout fallback, whose loss must trip the
+                # spec_liveness oracle rather than spec_rollback's
+                # spec_leak)
+                SimConfig(seed=seed, fault=fault, n_ops=args.ops,
+                          ablate=(guard,))
+                for fault, guard in sorted(EXTRA_PLAN_ABLATIONS.items())
             ]
             for cfg in audit_cells:
                 cells += 1

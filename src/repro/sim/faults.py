@@ -25,6 +25,13 @@ plan                      guard under test                            ablation k
                           delete a segment with live entries)
 ``ttl_churn``             expire-on-touch in ``PlanCache._get_live``  ``ttl_expiry``
                           (an expired entry must never be served)
+``speculative_exec``      journal rollback on a failed speculation    ``spec_rollback``
+                          (``PlanSpeculator.resolve`` must undo every
+                          journaled effect when the verifier
+                          disagrees); the plan ALSO audits the
+                          verify-timeout fallback under
+                          ``spec_verify_timeout`` (see
+                          ``EXTRA_PLAN_ABLATIONS``)
 ========================  ==========================================  ===========================
 
 One guard is tied to a *scenario* rather than a fault plan: the fuzzy
@@ -45,7 +52,7 @@ from repro.sim.scheduler import StepScheduler
 
 FAULT_PLANS = ("none", "crash_restart", "replica_lag", "hedge_timeout",
                "mid_wave_evict", "membership_churn", "async_cachegen",
-               "cold_tier", "ttl_churn")
+               "cold_tier", "ttl_churn", "speculative_exec")
 
 # guard-ablation keys, by the plan whose oracle they trip
 ABLATION_OF = {
@@ -57,6 +64,7 @@ ABLATION_OF = {
     "async_cachegen": "cachegen_fallback",
     "cold_tier": "cold_gc_refcount",
     "ttl_churn": "ttl_expiry",
+    "speculative_exec": "spec_rollback",
 }
 
 # guard-ablation keys tripped by a traffic scenario instead of a fault plan
@@ -64,8 +72,17 @@ SCENARIO_ABLATION_OF = {
     "paraphrase_burst": "fuzzy_scatter",
 }
 
+# second-guard audits: plans that protect MORE than one guard get extra
+# audit cells beyond ABLATION_OF (one fault plan, a different ablation
+# key, a different oracle expected to fire). Pure literal — check_docs
+# reads it via the AST.
+EXTRA_PLAN_ABLATIONS = {
+    "speculative_exec": "spec_verify_timeout",
+}
+
 ALL_ABLATIONS = tuple(sorted(
     set(ABLATION_OF.values()) | set(SCENARIO_ABLATION_OF.values())
+    | set(EXTRA_PLAN_ABLATIONS.values())
 ))
 
 
@@ -296,12 +313,23 @@ def build_fault_schedule(plan: str, n_steps: int, *, node: str = "cache-1",
         sched.inject(3 * q, "cold_crash", calls=1)
     elif plan == "ttl_churn":
         sched.inject(q, "ttl_pressure")
+    elif plan == "speculative_exec":
+        # three bursts of rejected pool submissions: near-hit verify tasks
+        # share the cachegen pool, so some rejections hit verifies — the
+        # guarded router verifies synchronously (spec_sync_verifies); the
+        # spec_verify_timeout ablation drops them, leaving speculations
+        # pending forever (spec_liveness oracle). Bursts are wide enough
+        # that every seed rejects at least one verify submission.
+        sched.inject(q // 2, "pool_saturate", calls=10)
+        sched.inject(2 * q, "pool_saturate", calls=10)
+        sched.inject(3 * q, "pool_saturate", calls=10)
     return sched
 
 
 __all__ = [
     "ABLATION_OF",
     "ALL_ABLATIONS",
+    "EXTRA_PLAN_ABLATIONS",
     "EngineFaultState",
     "FAULT_PLANS",
     "SCENARIO_ABLATION_OF",

@@ -28,6 +28,7 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.distributed_cache import DistributedPlanCache
+from repro.envs.base import Workspace, det_rng
 from repro.envs.workloads import SIM_SCENARIOS, sim_traffic
 from repro.obs import InMemoryExporter, Tracer, use_tracer
 from repro.serving.router import TierPool, TwoTierRouter
@@ -69,6 +70,10 @@ class SimConfig:
     router: bool = False  # drive route_batch through TwoTierRouter
     async_cachegen: bool = False  # model the cachegen pool as sim clients
     cachegen_workers: int = 2
+    # speculative near-hit execution: fuzzy near-hits are served
+    # immediately while a verify task (riding the cachegen pool, p~0.7
+    # agreement) races them; the journaled effects commit or roll back
+    speculate: bool = False
     lag_steps: int = 6
     ablate: Tuple[str, ...] = ()  # guard ablations (faults.ALL_ABLATIONS)
     # tiered-memory knobs: cold_tier spills capacity victims to an on-disk
@@ -81,6 +86,21 @@ class SimConfig:
     def normalized(self) -> "SimConfig":
         """Fill in plan-specific defaults (documented per fault plan)."""
         cfg = self
+        if cfg.fault == "speculative_exec":
+            # paraphrase traffic against a small fuzzy cluster: every
+            # variant lookup that resolves fuzzily opens a speculation,
+            # and the pool-saturation bursts force rejected verify
+            # submissions through the sync-fallback guard. The short TTL
+            # is load-bearing: a fuzzy hit promotes the variant to an
+            # exact alias (and a variant-first miss admits under the
+            # variant keyword), so without expiry the fuzzy window only
+            # exists once per variant and some seeds never speculate —
+            # churn re-opens it all run long
+            cfg = replace(cfg, scenario="paraphrase_burst", speculate=True,
+                          n_nodes=2, replication=1,
+                          ttl_s=cfg.ttl_s if cfg.ttl_s is not None else 0.05)
+        if cfg.speculate and not (cfg.router and cfg.async_cachegen):
+            cfg = replace(cfg, router=True, async_cachegen=True)
         if cfg.fault == "hedge_timeout" and not cfg.router:
             cfg = replace(cfg, router=True)
         if cfg.fault == "async_cachegen":
@@ -157,6 +177,8 @@ class SimReport:
     span_summary: Dict[str, int] = field(default_factory=dict)
     # tiered-memory accounting (all 0 unless cold_tier/ttl was configured)
     cold_stats: Dict[str, int] = field(default_factory=dict)
+    # speculation accounting (None unless cfg.speculate)
+    speculation: Optional[Dict[str, int]] = None
 
     @property
     def ok(self) -> bool:
@@ -185,17 +207,36 @@ class _RecordingStore:
 
     def __init__(self, store: DistributedPlanCache):
         self._store = store
-        # (wave, unless_written_since token) — the token travels with the
-        # wave so the model's conditional-admission replay sees exactly
-        # the timestamp each shard compared against
-        self._waves: List[Tuple[List[Tuple[str, Any]], Optional[float]]] = []
+        # (wave, unless_written_since token, kind) — the token travels
+        # with the wave so the model's conditional-admission replay sees
+        # exactly the timestamp each shard compared against; kind
+        # separates distilled miss waves ("distill", owed by the
+        # cachegen_loss account) from committed speculation promotions
+        # ("spec", owed by the spec_leak account)
+        self._waves: List[
+            Tuple[List[Tuple[str, Any]], Optional[float], str]
+        ] = []
 
     def insert_batch(self, items, **kw):
         items = list(items)
-        self._waves.append((items, kw.get("unless_written_since")))
+        self._waves.append((items, kw.get("unless_written_since"), "distill"))
         return self._store.insert_batch(items, **kw)
 
-    def drain_waves(self) -> List[Tuple[List[Tuple[str, Any]], Optional[float]]]:
+    def insert(self, keyword, value, *, context=None, vector=None,
+               unless_written_since=None):
+        """Single-key admission — the router's committed-speculation
+        promotion path. Recorded like a wave (the model must mirror it at
+        the step it lands) but tagged ``spec`` so the distillation ledger
+        doesn't count it as an owed miss wave."""
+        self._waves.append(([(keyword, value)], unless_written_since, "spec"))
+        return self._store.insert(
+            keyword, value, context=context, vector=vector,
+            unless_written_since=unless_written_since,
+        )
+
+    def drain_waves(
+        self,
+    ) -> List[Tuple[List[Tuple[str, Any]], Optional[float], str]]:
         waves, self._waves = self._waves, []
         return waves
 
@@ -285,6 +326,36 @@ def _run_sim(cfg: SimConfig, cold_dir: Optional[str]) -> SimReport:
             scheduler, clock, workers=cfg.cachegen_workers
         )
 
+    # speculation side-state: the env-effect surface (a Workspace written
+    # through the journal, one unique key per speculation) and the
+    # verifier's own ledger of verdicts — the ground truth the spec_leak
+    # oracle settles the workspace, store, and metrics against
+    spec_ws = Workspace()
+    spec_ledger: List[Dict[str, Any]] = []
+    spec_seq = {"n": 0}
+
+    def spec_effect(request: Dict[str, Any], kw: str):
+        """Apply one speculation's eager env write; return its undo. The
+        unique workspace key rides on the request so the verify call (same
+        request object) can correlate verdict with effect."""
+        spec_seq["n"] += 1
+        ws_key = f"spec/{spec_seq['n']:04d}/{kw}"
+        request["spec_ws_key"] = ws_key
+        return spec_ws.write(ws_key, kw)
+
+    def spec_verify(request: Dict[str, Any], matched_key) -> bool:
+        """The background verifier: seeded ~70% agreement, deterministic
+        per speculation (the workspace key is assigned in begin order,
+        which the scheduler owns)."""
+        agree = det_rng(
+            cfg.seed, "spec-verify", request["spec_ws_key"]
+        ).random() < 0.7
+        spec_ledger.append({
+            "kw": request["kw"], "ws_key": request["spec_ws_key"],
+            "agree": agree,
+        })
+        return agree
+
     router: Optional[TwoTierRouter] = None
     rec: Optional[_RecordingStore] = None
     if cfg.router:
@@ -317,22 +388,50 @@ def _run_sim(cfg: SimConfig, cold_dir: Optional[str]) -> SimReport:
             cachegen_fallback="cachegen_fallback" not in cfg.ablate,
             clock=clock,
             obs=store.obs,
+            # speculative near-hit execution: verify tasks ride the same
+            # sim pool, so the seeded scheduler owns the commit/rollback
+            # races too. Both guards are ablatable.
+            spec_verify=spec_verify if cfg.speculate else None,
+            spec_effect=spec_effect if cfg.speculate else None,
+            spec_rollback="spec_rollback" not in cfg.ablate,
+            spec_verify_fallback="spec_verify_timeout" not in cfg.ablate,
         )
 
     versions: Dict[str, int] = {}
     counters = {"ops": 0, "lookups": 0, "inserts": 0}
     distill = {"expected": 0, "landed": 0}
+    spec_landed = {"waves": 0, "stale_races": 0}
 
     def mirror_recorded_waves() -> None:
         """Replay the router's recorded admission waves on the model at
         the step they landed (sync: inside the route op; async: inside the
-        cachegen worker op the scheduler chose to run)."""
-        for wave, token in rec.drain_waves():
+        cachegen worker op the scheduler chose to run). Committed
+        speculation promotions mirror the same way but settle against the
+        speculation ledger, not the miss-distillation account."""
+        for wave, token, kind in rec.drain_waves():
             for kw, _ in wave:
                 versions.setdefault(kw, 0)
+            if kind == "spec" and token is not None:
+                # the nastiest race made observable: a committed
+                # speculation whose cached source entry was (re)written
+                # after the route-time token — conditional admission must
+                # lose to the newer write on that owner (the model
+                # replays the same per-node skip, so a store that
+                # clobbered would diverge into linearizability red)
+                for kw, _ in wave:
+                    if any(
+                        kw in model.nodes[n]
+                        and model.wtime[n][kw] >= token
+                        for n in model._live_owners(kw)
+                        if n not in model.crashed
+                    ):
+                        spec_landed["stale_races"] += 1
             model.insert_wave(wave, unless_written_since=token)
             counters["inserts"] += len(wave)
-            distill["landed"] += len(wave)
+            if kind == "spec":
+                spec_landed["waves"] += len(wave)
+            else:
+                distill["landed"] += len(wave)
 
     # ---- op application ----------------------------------------------------
 
@@ -460,6 +559,12 @@ def _run_sim(cfg: SimConfig, cold_dir: Optional[str]) -> SimReport:
             return
         op["future"].set_result(items)
         mirror_recorded_waves()
+        if isinstance(items, str):
+            # a speculation verify task (rides the same pool): the result
+            # is its outcome, and any committed promotion wave was just
+            # mirrored above at this exact step
+            trace.record(step, client, "spec_verify", None, items)
+            return
         trace.record(step, client, "cachegen",
                      [kw for kw, _ in (items or [])], len(items or []))
 
@@ -546,6 +651,58 @@ def _run_sim(cfg: SimConfig, cold_dir: Optional[str]) -> SimReport:
                 f"{distill['expected']} miss distillation(s) owed, "
                 f"{distill['landed']} landed — admission waves were "
                 "dropped"))
+    if cfg.speculate and router is not None and router.speculator is not None:
+        spec = router.speculator
+        m = router.metrics
+        agrees = sum(1 for e in spec_ledger if e["agree"])
+        # spec_leak: a speculation the verifier REJECTED must leave no
+        # side effect behind — its journaled env write compensated, its
+        # deferred cache promotion and metric bump never run. The dual
+        # obligation holds too: a committed speculation's effect must
+        # survive (the journal must not undo finalized steps).
+        for e in spec_ledger:
+            present = e["ws_key"] in spec_ws
+            if e["agree"] and not present:
+                violations.append(Violation(
+                    steps, "spec_leak",
+                    f"committed speculation on {e['kw']!r} LOST its env "
+                    f"write {e['ws_key']!r} (journal undid a finalized "
+                    "step)"))
+            elif not e["agree"] and present:
+                violations.append(Violation(
+                    steps, "spec_leak",
+                    f"rolled-back speculation on {e['kw']!r} leaked env "
+                    f"write {e['ws_key']!r} into the workspace"))
+        if m.spec_commits != agrees:
+            violations.append(Violation(
+                steps, "spec_leak",
+                f"metrics registry saw {m.spec_commits} speculation "
+                f"commit(s) but the verifier agreed {agrees} time(s) — "
+                "a rolled-back speculation leaked into the metrics"))
+        # still-pending speculations legitimately hold their (unresolved)
+        # keys — they are spec_liveness's business, not a leak
+        if (spec_ws.writes != spec.begun
+                or len(spec_ws) != agrees + spec.pending()):
+            violations.append(Violation(
+                steps, "spec_leak",
+                f"workspace holds {len(spec_ws)} key(s) after "
+                f"{spec_ws.writes} speculative write(s); exactly "
+                f"{agrees} committed + {spec.pending()} pending key(s) "
+                "may remain"))
+        # spec_liveness: every speculation begun must be resolved by
+        # quiescence — a dropped verify task (the ablated fallback) or a
+        # lost pool submission leaves the journal open forever
+        if spec.pending() != 0:
+            violations.append(Violation(
+                steps, "spec_liveness",
+                f"{spec.pending()} speculation(s) never resolved: "
+                f"{spec.pending_keys()[:4]}"))
+        resolved = spec.commits + spec.rollbacks + spec.forced_commits
+        if spec.begun != resolved + spec.pending():
+            violations.append(Violation(
+                steps, "spec_liveness",
+                f"speculation conservation broken: begun={spec.begun} != "
+                f"resolved={resolved} + pending={spec.pending()}"))
     s = store.stats
     if s.hits + s.misses != counters["lookups"]:
         violations.append(Violation(
@@ -557,12 +714,15 @@ def _run_sim(cfg: SimConfig, cold_dir: Optional[str]) -> SimReport:
             violations.append(Violation(
                 steps, "capacity",
                 f"{name} holds {len(shard)} > capacity {cfg.capacity_per_node}"))
-    if not cfg.fuzzy and cfg.fault in ("none", "mid_wave_evict",
-                                       "cold_tier", "ttl_churn"):
+    if not cfg.router and cfg.fault in ("none", "mid_wave_evict",
+                                        "cold_tier", "ttl_churn"):
         # eviction conservation: the store must evict exactly the victims
-        # the sequential policy replay evicts (a shard restart would reset
-        # shard counters, so crash plans skip this check; fuzzy cells skip
-        # it because intra-wave touch ORDER is not modeled — see oracle.py)
+        # the sequential policy replay evicts. Runs on fuzzy cells too —
+        # the model mirrors the store's grouped per-shard per-tier
+        # intra-wave touch order (see oracle.lookup_wave) — but not on
+        # crash plans (a shard restart resets shard counters) or router
+        # cells (route lookups touch recency the model never sees; only
+        # admission waves are mirrored there)
         shard_evictions = sum(sh.stats.evictions for sh in store.shards.values())
         if shard_evictions != model.evictions:
             violations.append(Violation(
@@ -614,6 +774,19 @@ def _run_sim(cfg: SimConfig, cold_dir: Optional[str]) -> SimReport:
                    for sh in store.shards.values())
             for k in s.cold_snapshot()
         },
+        speculation=(
+            None
+            if router is None or router.speculator is None
+            else {
+                **router.speculator.stats(),
+                "verifier_agreed": sum(1 for e in spec_ledger if e["agree"]),
+                "landed": spec_landed["waves"],
+                "stale_admit_races": spec_landed["stale_races"],
+                "ws_writes": spec_ws.writes,
+                "ws_compensations": spec_ws.compensations_run,
+                "ws_keys": len(spec_ws),
+            }
+        ),
     )
 
 

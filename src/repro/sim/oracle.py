@@ -37,12 +37,17 @@ Checked invariants (consumed by ``repro.sim.harness``):
 * **control plane** — ``keys()``/``len()`` must equal the union of the
   model's reachable nodes.
 
-Known modeling limit: within ONE batched lookup wave the real store
-touches recency grouped per shard per tier while the model touches in
-wave order, so LRU tie order *inside a single wave* is not mirrored. The
-eviction-order oracle therefore runs on exact-mode cells (where waves are
-the admission kind the contract pins), not fuzzy cells — see the
-harness's gating and ``docs/simulation.md``.
+Intra-wave recency is mirrored faithfully: ``lookup_wave`` replays the
+facade's tier-major grouped fan-out (tier 0 groups queries by primary
+owner; each later tier re-groups the still-missing ones; shard groups
+visit in sorted-node order) and, within one shard call, the match
+pipeline's stage order — the whole group's exact stage first, then ONE
+batched similarity call for the leftovers, then per-key cold promotion —
+so per-shard per-tier LRU touch order inside a single wave matches the
+store bit-for-bit and the eviction-order oracle runs on fuzzy cells too.
+Router-driven cells stay outside that oracle's gate for a different
+reason: route lookups touch store recency through traffic the admission
+mirror never sees — see the harness's gating and ``docs/simulation.md``.
 """
 
 from __future__ import annotations
@@ -382,85 +387,126 @@ class ModelStore:
             owners += [n for n in sorted(self.nodes) if n not in owners]
         return owners
 
-    def _serve_hot(self, kw: str) -> Optional[Any]:
-        """The exact(+fuzzy) tiers of one query, with TTL expire-on-touch
-        — everything EXCEPT the cold stage."""
-        for n in self._probe_order(kw):
-            if n in self.crashed:
-                continue  # guard spec: reader falls through to next tier
-            served = kw if kw in self.nodes[n] else None
-            if served is not None and self._expired(n, served):
-                # expire-on-touch, mirroring _get_live: a hard delete (the
-                # entry does NOT spill), after which the pipeline falls
-                # through to the fuzzy stage
-                self._remove_from(n, served)
-                served = None
-            if served is None and self.fuzzy:
-                served = self.sim[n].best_match_batch(
-                    [kw], self.fuzzy_threshold
-                )[0]
-                if served is not None and self._expired(n, served):
-                    # the fuzzy stage resolved an expired twin: _get_live
-                    # deletes it and the wave does NOT re-run the stage
-                    self._remove_from(n, served)
-                    served = None
-            if served is not None:
-                v = self.nodes[n][served]
-                self.hits[n][served] += 1
-                if served in self.order[n]:
-                    self.order[n].remove(served)
-                    self.order[n].append(served)
-                return v
-        return None
+    def _touch(self, node: str, kw: str) -> Any:
+        """Serve one live key on one node: hit counter + LRU move-to-end
+        (the accounting half of ``_get_live`` after its expiry check)."""
+        self.hits[node][kw] += 1
+        if kw in self.order[node]:
+            self.order[node].remove(kw)
+            self.order[node].append(kw)
+        return self.nodes[node][kw]
 
-    def _serve_cold(self, kw: str) -> Optional[Any]:
-        """The cold stage of one query: an exact manifest hit PROMOTES
-        (a MOVE back through the admission path, cascading evict after
-        the insert). The stage does NOT re-probe the hot tier, mirroring
-        the shard's pipeline exactly."""
-        if not self.cold_enabled:
+    def _get_live(self, node: str, kw: str) -> Optional[Any]:
+        """Mirror of ``PlanCache._get_live``: TTL expire-on-touch is a
+        hard delete (the entry does NOT spill), a survivor is touched. A
+        key an earlier serve of the SAME stage already expired misses
+        here — the pipeline resolves the whole group before serving."""
+        if kw not in self.nodes[node]:
             return None
-        for n in self._probe_order(kw):
-            if n in self.crashed or kw not in self.cold.get(n, {}):
-                continue
-            v = self.cold[n].pop(kw)
-            self._apply(n, kw, v)
-            if self.fuzzy:
-                self.sim[n].add_batch([kw])
-            self._evict(n)
-            # under the cost policy a promote into a fully-reused hot set
-            # picks ITSELF as the cascade victim (hits=0, youngest stamp)
-            # — the store then misses, so the model must too
-            if kw not in self.nodes[n]:
-                return None
-            self.hits[n][kw] += 1
-            if kw in self.order[n]:
-                self.order[n].remove(kw)
-                self.order[n].append(kw)
-            return v
-        return None
+        if self._expired(node, kw):
+            self._remove_from(node, kw)
+            return None
+        return self._touch(node, kw)
+
+    def _promote_cold(self, node: str, kw: str) -> Optional[Any]:
+        """Mirror of ``PlanCache._promote``: a cold manifest hit is a
+        MOVE back through the admission path, cascading evict after the
+        insert, then served through the normal touch path."""
+        v = self.cold[node].pop(kw)
+        self._apply(node, kw, v)
+        if self.fuzzy:
+            self.sim[node].add_batch([kw])
+        self._evict(node)
+        # under the cost policy a promote into a fully-reused hot set
+        # picks ITSELF as the cascade victim (hits=0, youngest stamp)
+        # — the store then misses, so the model must too
+        if kw not in self.nodes[node]:
+            return None
+        return self._touch(node, kw)
+
+    def _serve_group(
+        self,
+        node: str,
+        group: List[Tuple[int, str]],
+        out: List[Optional[Any]],
+    ) -> None:
+        """Mirror ONE shard ``lookup_batch`` call for its tier group.
+
+        Stage-major, exactly like the shard's match pipeline: the exact
+        stage resolves the WHOLE group (membership snapshot first, then
+        serves in group order — so a twin query whose key expired under
+        an earlier serve of the same stage stays pending); the fuzzy
+        stage answers the leftovers with ONE batched similarity call
+        against the twin index; the cold stage promotes per still-
+        pending key in group order. This is what makes per-shard LRU
+        touch order inside a single wave bit-identical to the store."""
+        # exact stage: resolve all, then serve in group order
+        alts = [kw if kw in self.nodes[node] else None for _, kw in group]
+        pending: List[Tuple[int, str]] = []
+        for (i, kw), alt in zip(group, alts):
+            v = None if alt is None else self._get_live(node, alt)
+            if v is None:
+                pending.append((i, kw))
+            else:
+                out[i] = v
+        # fuzzy stage: one batched index call for the still-unresolved
+        if pending and self.fuzzy:
+            alts = self.sim[node].best_match_batch(
+                [kw for _, kw in pending], self.fuzzy_threshold
+            )
+            still: List[Tuple[int, str]] = []
+            for (i, kw), alt in zip(pending, alts):
+                # an expired fuzzy twin dies inside _get_live and the
+                # wave does NOT re-run the stage — the query falls
+                # through to the cold stage / next tier
+                v = None if alt is None else self._get_live(node, alt)
+                if v is None:
+                    still.append((i, kw))
+                else:
+                    out[i] = v
+            pending = still
+        # cold stage: shard-local manifest, exact keys, group order
+        if pending and self.cold_enabled:
+            for i, kw in pending:
+                if kw in self.cold.get(node, {}):
+                    out[i] = self._promote_cold(node, kw)
 
     def lookup_wave(
         self, kws: Sequence[str]
     ) -> List[Tuple[Optional[Any], bool]]:
-        """Stage-faithful replay of one batched lookup: every query
-        resolves against the hot tier BEFORE any cold promotion runs,
-        because the store's pipeline serves the whole exact stage first —
-        a promote's cascade eviction must not unsettle earlier queries of
-        the same wave (they already captured their values)."""
+        """Tier-major grouped replay of one batched facade lookup.
+
+        Mirrors ``DistributedPlanCache.lookup_batch`` shape-for-shape:
+        tier 0 groups queries by primary owner, every later tier
+        re-groups the still-missing ones, shard groups are visited in
+        sorted-node order, and each (node, group) runs the full match
+        pipeline via ``_serve_group``. A crashed node's seam call fails,
+        so its group stays pending and retries on the next replica tier
+        — the crash-fallthrough guard's correct semantics."""
         strict = True if self.fuzzy else self.exact_only
-        out: List[Optional[Tuple[Optional[Any], bool]]] = [None] * len(kws)
-        cold_pass: List[int] = []
-        for i, kw in enumerate(kws):
-            v = self._serve_hot(kw)
-            if v is None:
-                cold_pass.append(i)
-            else:
-                out[i] = (v, True)
-        for i in cold_pass:
-            v = self._serve_cold(kws[i])
-            out[i] = (v, True) if v is not None else (None, strict)
-        return out  # type: ignore[return-value]
+        out: List[Optional[Any]] = [None] * len(kws)
+        owners_of = [self._probe_order(kw) for kw in kws]
+        pending = list(range(len(kws)))
+        tier = 0
+        while pending:
+            by_node: Dict[str, List[int]] = {}
+            for i in pending:
+                if tier < len(owners_of[i]):
+                    by_node.setdefault(owners_of[i][tier], []).append(i)
+            if not by_node:
+                break
+            for node, idxs in sorted(by_node.items()):
+                if node in self.crashed:
+                    continue  # seam call fails; queries retry next tier
+                self._serve_group(node, [(i, kws[i]) for i in idxs], out)
+            pending = [
+                i for i in pending
+                if out[i] is None and tier + 1 < len(owners_of[i])
+            ]
+            tier += 1
+        return [
+            (v, True) if v is not None else (None, strict) for v in out
+        ]
 
     def lookup(self, kw: str) -> Tuple[Optional[Any], bool]:
         """(expected value or None, strict).

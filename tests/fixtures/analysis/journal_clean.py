@@ -1,0 +1,16 @@
+"""Golden CLEAN fixture for the journal-discipline checker.
+
+Exercises what it must NOT flag: the blessed direct idiom (positional
+and attribute-chained receivers), non-mutating workspace reads, writers
+on non-workspace receivers (file-likes), and a pragma'd manual
+compensation site.
+"""
+
+
+def run(ws, task, step, buf):
+    step.applied(ws.write("r0/out", 1))  # the one blessed idiom
+    step.applied(task.workspace.delete("r0/tmp"))  # attribute-chained receiver
+    ws.read("r0/out")
+    ws.keys()
+    buf.write(b"bytes")  # file-like writer, not env state
+    ws.write("r0/manual", 2)  # analysis: journal-ok(fixture compensates by hand)

@@ -1,0 +1,14 @@
+"""Golden VIOLATING fixture for the journal-discipline checker.
+
+Three expected findings: a discarded-undo workspace write, an undo
+parked in a local instead of journaled at the call site, and an
+attribute-chained workspace delete outside any journal entry.
+"""
+
+
+def run(ws, task, journal):
+    step = journal.begin_step("round-0")
+    ws.write("r0/out", 1)  # discarded undo: the rollback path cannot see it
+    undo = ws.write("r0/tmp", 2)  # parked undo: not provably journaled
+    task.workspace.delete("r0/tmp")  # unjournaled delete via attribute chain
+    step.applied(undo)

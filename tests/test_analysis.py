@@ -42,6 +42,7 @@ PAIRS = [
     ("jit-safety", "jit_violation.py", "jit_clean.py"),
     ("obs-names", "obs_violation.py", "obs_clean.py"),
     ("thread-hygiene", "thread_violation.py", "thread_clean.py"),
+    ("journal-discipline", "journal_violation.py", "journal_clean.py"),
 ]
 
 
@@ -83,6 +84,14 @@ def test_jit_safety_details():
     assert "`STATE['calls']`" in msgs
     assert "pallas kernel body" in msgs
     assert "donated to scatter()" in msgs
+
+
+def test_journal_discipline_details():
+    bad = findings_for("journal_violation.py")
+    msgs = "\n".join(f.message for f in bad)
+    assert "`ws.write(...)` is not journaled" in msgs
+    assert "`task.workspace.delete(...)` is not journaled" in msgs
+    assert len(bad) == 3  # discarded undo, parked undo, chained delete
 
 
 def test_thread_hygiene_details():

@@ -10,6 +10,8 @@ from repro.core.distributed_cache import DistributedPlanCache, ShardUnavailable
 from repro.envs.workloads import SIM_SCENARIOS, sim_traffic
 from repro.sim import (
     ABLATION_OF,
+    ALL_ABLATIONS,
+    EXTRA_PLAN_ABLATIONS,
     FAULT_PLANS,
     SCENARIO_ABLATION_OF,
     ModelStore,
@@ -94,6 +96,20 @@ def test_fault_plans_clean_under_guards(fault):
         # expiry really bit: lookups crossed the TTL horizon and missed,
         # and the model agreed on every expire-on-touch decision
         assert r.store_stats["misses"] > 0
+    if fault == "speculative_exec":
+        s = r.speculation
+        assert s is not None and s["begun"] > 0  # near-hits really speculated
+        assert s["pending"] == 0 and s["forced_commits"] == 0
+        assert s["commits"] == s["verifier_agreed"]
+        assert s["begun"] == s["commits"] + s["rollbacks"]
+        # every rolled-back env write was compensated; only committed
+        # writes survive in the workspace
+        assert s["ws_compensations"] == s["rollbacks"]
+        assert s["ws_keys"] == s["commits"]
+        # the pool-saturation bursts rejected verify submissions, which
+        # the fallback guard resolved synchronously instead of dropping
+        assert r.router_metrics["spec_sync_verifies"] > 0
+        assert r.router_metrics["spec_dropped"] == 0
 
 
 def test_replica_lag_guard_blocks_stale_reads():
@@ -120,6 +136,8 @@ EXPECTED_ORACLES = {
     "cold_tier": {"durability"},
     # serving expired entries: values the model already expired come back
     "ttl_churn": {"phantom", "control_plane"},
+    # forced commits: rolled-back speculations leak writes/metrics
+    "speculative_exec": {"spec_leak"},
 }
 
 
@@ -541,3 +559,124 @@ def test_similarity_model_predicts_fuzzy_resolution():
     assert got == v  # resolves to the canonical entry (cosine >= 0.8)
     got, strict = m.lookup("entirely unrelated query zz")
     assert got is None and strict  # and sub-threshold misses are strict too
+
+
+# -- speculative execution: fault plan, oracles, guard ablations ---------------
+
+
+def test_extra_plan_ablations_well_formed():
+    """Every extra-guard audit cell points at a real fault plan, a guard
+    the CLI accepts, and a guard DIFFERENT from the plan's primary one
+    (otherwise the extra cell would be a duplicate audit)."""
+    for fault, guard in EXTRA_PLAN_ABLATIONS.items():
+        assert fault in FAULT_PLANS
+        assert guard in ALL_ABLATIONS
+        assert guard != ABLATION_OF.get(fault)
+
+
+def test_spec_rollback_ablation_fires_leak_oracle_only():
+    """With the rollback guard ablated every disagreeing verification is
+    FORCED to commit: its env write survives in the workspace and its
+    deferred metric/admission actions run — the spec_leak oracle must
+    attribute both, and liveness must stay green (everything resolved)."""
+    r = run_sim(_cfg(seed=3, fault="speculative_exec",
+                     ablate=("spec_rollback",)))
+    assert r.violations
+    assert {v.oracle for v in r.violations} == {"spec_leak"}
+    assert r.speculation["forced_commits"] > 0
+    assert r.speculation["pending"] == 0
+
+
+def test_spec_verify_timeout_ablation_fires_liveness_oracle_only():
+    """With the verify-timeout fallback ablated, a pool-rejected verify
+    submission is dropped and its speculation stays pending forever — the
+    spec_liveness oracle must fire, and spec_leak must NOT (a pending
+    speculation's write is not a leak; it was never rolled back)."""
+    r = run_sim(_cfg(seed=3, fault="speculative_exec",
+                     ablate=("spec_verify_timeout",)))
+    assert r.violations
+    assert {v.oracle for v in r.violations} == {"spec_liveness"}
+    assert r.speculation["pending"] > 0
+    assert r.router_metrics["spec_dropped"] > 0
+
+
+def test_spec_commit_vs_concurrent_overwrite_regression_pinned_seed():
+    """Regression pin for the nastiest speculation race: a speculation
+    COMMITS while the plan-cache entry it adapted was concurrently
+    re-written (another speculation on the same keyword, or a distilled
+    wave, landed first). The deferred admission carries the route-time
+    token, so it must LOSE to the newer write per node — the model
+    replays every skip decision, the run stays clean, and the whole
+    interleaving reproduces bit-for-bit."""
+    cfg = _cfg(seed=3, fault="speculative_exec")
+    r = run_sim(cfg)
+    assert r.ok, r.violations[:3]
+    assert r.speculation["stale_admit_races"] > 0  # the race really ran
+    assert r.speculation["commits"] > 0
+    b = run_sim(cfg)
+    assert (b.trace_hash, b.span_digest) == (r.trace_hash, r.span_digest)
+    assert b.speculation == r.speculation
+
+
+# -- intra-wave grouped recency mirroring --------------------------------------
+
+
+def test_model_mirrors_intra_wave_grouped_recency():
+    """Within ONE batched wave the store touches recency grouped per
+    shard per tier: a fuzzy-scatter resolution (tier 1) lands AFTER a
+    later wave-member's tier-0 exact touch on the same shard. The old
+    per-query mirror replayed wave order and predicted the opposite LRU
+    victim; the grouped mirror must agree with the store — and the
+    singular-lookup control shows the divergence is real, not vacuous."""
+    from repro.core.fuzzy import similarity
+
+    pairs = [
+        ("average of two rows", "average of two rows from table"),
+        ("sum of one column", "sum of one column from table"),
+        ("max minus min", "max minus min from table"),
+    ]
+    fillers = ["paint the fence bright green", "solve the quadratic equation",
+               "walk the dog around town", "bake the sourdough loaf",
+               "tune the violin strings", "chart the ocean currents"]
+
+    def build():
+        return DistributedPlanCache(2, replication=1, capacity_per_node=2,
+                                    fuzzy=True)
+
+    ring = build().ring
+    chosen = None
+    for x, q in pairs:
+        if similarity(x, q) < 0.8:
+            continue  # pair must resolve at the fuzzy threshold
+        if ring.nodes_for(x, 1) == ring.nodes_for(q, 1):
+            continue  # pair must split across shards for the tier skew
+        neutral = [f for f in fillers
+                   if ring.nodes_for(f, 1) == ring.nodes_for(x, 1)
+                   and similarity(f, q) < 0.8 and similarity(f, x) < 0.8]
+        if len(neutral) >= 2:
+            chosen = (x, q, neutral[0], neutral[1])
+            break
+    assert chosen, "no shard-splitting paraphrase pair found (embed changed?)"
+    x, q, y, z = chosen
+
+    def play(batched):
+        dc = build()
+        m = ModelStore(replication=1, capacity_per_node=2, fuzzy=True)
+        for i in range(2):
+            m.add_node(f"cache-{i}")
+        seed = [(x, make_value(x, 1)), (y, make_value(y, 1))]
+        dc.insert_batch(seed)
+        m.insert_wave(seed)
+        if batched:  # q resolves fuzzily on x's shard AFTER y's touch
+            got = dc.lookup_batch([q, y])
+            want = [v for v, _ in m.lookup_wave([q, y])]
+        else:  # control: per-query order touches x BEFORE y
+            got = [dc.lookup(q), dc.lookup(y)]
+            want = [m.lookup(q)[0], m.lookup(y)[0]]
+        assert got == want
+        dc.insert(z, make_value(z, 1))  # capacity 2: one LRU victim falls
+        m.insert_wave([(z, make_value(z, 1))])
+        assert sorted(dc.keys()) == m.keys()  # same victim on both sides
+        return sorted(dc.keys())
+
+    assert play(True) != play(False)  # the grouping really moves the victim

@@ -16,5 +16,6 @@ CHECKER_IDS = (
     "jit-safety",
     "obs-names",
     "thread-hygiene",
+    "journal-discipline",
     "pragma-hygiene",
 )

@@ -34,11 +34,18 @@ from tools.analyze.common import (
     parse_pragmas,
     rel,
 )
-from tools.analyze import determinism, jit_safety, locks, obs_names, threads
+from tools.analyze import (
+    determinism,
+    jit_safety,
+    journal,
+    locks,
+    obs_names,
+    threads,
+)
 
 PRAGMA_HYGIENE_ID = "pragma-hygiene"
 
-CHECKERS = (locks, determinism, jit_safety, obs_names, threads)
+CHECKERS = (locks, determinism, jit_safety, obs_names, threads, journal)
 
 # checker id -> pragma kinds that may suppress its findings
 PRAGMAS_OF_CHECKER: Dict[str, Tuple[str, ...]] = {
@@ -47,6 +54,7 @@ PRAGMAS_OF_CHECKER: Dict[str, Tuple[str, ...]] = {
     jit_safety.ID: (jit_safety.PRAGMA,),
     obs_names.ID: (obs_names.PRAGMA,),
     threads.ID: (threads.PRAGMA,),
+    journal.ID: (journal.PRAGMA,),
 }
 
 _KNOWN_PRAGMA_KINDS = {k for kinds in PRAGMAS_OF_CHECKER.values()

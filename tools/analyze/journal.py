@@ -1,0 +1,97 @@
+"""Journal-discipline checker (checker id ``journal-discipline``).
+
+Invariant (the contract speculative plan execution rests on): every
+env-side mutation in ``src/repro/core/`` and ``src/repro/envs/`` must be
+reversible — a :class:`repro.envs.base.Workspace` ``write``/``delete``
+returns its compensation closure, and the call site must hand that
+closure STRAIGHT to a journal entry::
+
+    step.applied(ws.write(key, value))      # the one blessed idiom
+
+A workspace mutation whose undo is discarded (bare expression statement)
+or parked in a local first is unjournaled as far as the rollback path
+can prove, so it is reported. The check is deliberately syntactic and
+strict: binding the undo before journaling it needs a
+``# analysis: journal-ok(<reason>)`` pragma on the mutation line.
+
+What counts as a workspace mutation: a ``.write(...)`` / ``.delete(...)``
+call whose receiver's final name segment looks workspace-like — ``ws``,
+``workspace``, ``*_ws``, ``*_workspace`` (so ``task.workspace.write``
+and ``spec_ws.delete`` are caught, while ``buf.write`` / file-like
+writers are not). Receivers are resolved lexically; the repo's naming
+convention is part of the contract and documented in
+``docs/static-analysis.md``.
+
+Scope: files under ``src/repro/core/`` and ``src/repro/envs/`` (other
+``src/repro`` packages drive envs through those layers); paths outside
+``src/repro`` — the golden fixtures — are always in scope.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Optional
+
+from tools.analyze.common import Finding, FindingBuilder, dotted, rel
+
+ID = "journal-discipline"
+PRAGMA = "journal"
+
+_MUTATORS = ("write", "delete")
+_SCOPED_PREFIXES = ("src/repro/core/", "src/repro/envs/")
+
+
+def _workspace_like(node: ast.AST) -> bool:
+    """True when the receiver's final dotted segment names a workspace."""
+    name = dotted(node)
+    if name is None:
+        return False
+    last = name.split(".")[-1]
+    return (
+        last in ("ws", "workspace")
+        or last.endswith("_ws")
+        or last.endswith("_workspace")
+    )
+
+
+def _is_journaled(call: ast.Call, parents: Dict[ast.AST, ast.AST]) -> bool:
+    """True when ``call`` is a DIRECT argument of ``<entry>.applied(...)``."""
+    parent = parents.get(call)
+    if isinstance(parent, ast.keyword):
+        parent = parents.get(parent)
+    return (
+        isinstance(parent, ast.Call)
+        and isinstance(parent.func, ast.Attribute)
+        and parent.func.attr == "applied"
+    )
+
+
+def check(tree: ast.Module, src: str, path: pathlib.Path) -> List[Finding]:
+    file = rel(path)
+    if file.startswith("src/repro/") and not file.startswith(_SCOPED_PREFIXES):
+        return []
+    fb = FindingBuilder(path, src)
+    parents: Dict[ast.AST, ast.AST] = {}
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            parents[child] = parent
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in _MUTATORS
+            and _workspace_like(node.func.value)
+        ):
+            continue
+        if _is_journaled(node, parents):
+            continue
+        receiver: Optional[str] = dotted(node.func.value)
+        out.append(fb.at(
+            ID, node,
+            f"workspace mutation `{receiver}.{node.func.attr}(...)` is not "
+            f"journaled — pass its undo straight to a journal entry "
+            f"(`step.applied({receiver}.{node.func.attr}(...))`) or add "
+            f"`# analysis: journal-ok(<reason>)`"))
+    return out

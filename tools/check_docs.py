@@ -146,6 +146,7 @@ def check_coverage(errors: list) -> int:
     ablations = sorted(
         set(_module_literal(faults_py, "ABLATION_OF").values())
         | set(_module_literal(faults_py, "SCENARIO_ABLATION_OF").values())
+        | set(_module_literal(faults_py, "EXTRA_PLAN_ABLATIONS").values())
     )
 
     corpus = "\n".join(code_regions(d.read_text()) for d in doc_files())
